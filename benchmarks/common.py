@@ -1,0 +1,50 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (cyclic_to_matrix, staircase_to_matrix,
+                        random_assignment_to_matrix, mean_completion_time,
+                        simulate_lower_bound, simulate_pc_completion,
+                        simulate_pcmm_completion)
+
+
+def scheme_means(model, n: int, r: int, k: int, *, trials: int = 20000,
+                 seed: int = 0, include_coded: bool = True,
+                 include_ra: bool = True) -> dict:
+    """Average completion time of every scheme at one (n, r, k) point.
+    Times are in the delay model's unit (seconds for the paper's models)."""
+    out = {}
+    out["cs"] = mean_completion_time(cyclic_to_matrix(n, r), model, k,
+                                     trials=trials, seed=seed)
+    out["ss"] = mean_completion_time(staircase_to_matrix(n, r), model, k,
+                                     trials=trials, seed=seed)
+    if include_ra:
+        out["ra"] = mean_completion_time(
+            random_assignment_to_matrix(n, seed=seed), model, k,
+            trials=trials, seed=seed)
+    if include_coded and r >= 2:
+        out["pc"] = float(np.mean(np.asarray(
+            simulate_pc_completion(model, n, r, trials=trials, seed=seed))))
+        if n * r >= 2 * n - 1:
+            out["pcmm"] = float(np.mean(np.asarray(
+                simulate_pcmm_completion(model, n, r, trials=trials,
+                                         seed=seed))))
+    out["lb"] = float(np.mean(np.asarray(
+        simulate_lower_bound(model, n, r, k, trials=trials, seed=seed))))
+    return out
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.us = (time.perf_counter() - self.t0) * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

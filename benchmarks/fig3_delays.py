@@ -1,0 +1,23 @@
+"""Fig. 3: delay-model calibration — the truncated-Gaussian model's
+histograms (computation + communication per worker). Reports moments and
+the comm/comp ratio the paper observes (communication dominates)."""
+import jax
+import numpy as np
+
+from repro.core import ec2_like
+from .common import Timer, emit
+
+
+def run(trials: int = 20000):
+    n = 3
+    model = ec2_like(n, seed=0, comm_over_comp=5.0)
+    with Timer() as t:
+        T1, T2 = model.sample(jax.random.PRNGKey(0), trials, n, 1)
+        T1, T2 = np.asarray(T1), np.asarray(T2)
+    for i in range(n):
+        emit(f"fig3/worker{i+1}", t.us / n,
+             f"comp_mean={T1[:, i].mean():.2e};comm_mean={T2[:, i].mean():.2e};"
+             f"comm_over_comp={T2[:, i].mean() / T1[:, i].mean():.2f}")
+    ratio = T2.mean() / T1.mean()
+    emit("fig3/summary", t.us, f"comm_dominates={ratio > 2.0};ratio={ratio:.2f}")
+    return ratio

@@ -1,0 +1,38 @@
+"""Fig. 5: average completion time vs r with the EC2-calibrated delay model
+(n = 15, d = 400, N = 900). This container has no EC2 cluster; per
+DESIGN.md §8 the paper's own truncated-Gaussian calibration (validated by
+the paper: "the truncated Gaussian model can reasonably capture the
+statistical behaviour") stands in, with communication dominating
+computation as in Fig. 3.
+
+Claims validated: CS/SS >> PC/PCMM; PC worsens with r; SS faster than RA at
+r = n (paper: 28.5% on their measured EC2 delays; the %-gain is delay-
+calibration-dependent — our truncated-Gaussian stand-in yields ~9-19%
+depending on scenario, with every ordering claim preserved — see
+EXPERIMENTS.md); SS-LB gap small and shrinking with r.
+"""
+import numpy as np
+
+from repro.core import ec2_like
+from .common import Timer, emit, scheme_means
+
+
+def run(trials: int = 20000):
+    n, k = 15, 15
+    model = ec2_like(n, seed=1)
+    rows = {}
+    for r in (2, 3, 5, 7, 9, 11, 13, 15):
+        with Timer() as t:
+            m = scheme_means(model, n, r, k, trials=trials)
+        emit(f"fig5/r{r}", t.us,
+             ";".join(f"{s}={v * 1e3:.4f}ms" for s, v in m.items()))
+        rows[r] = m
+    gain = 100 * (rows[15]["ra"] - rows[15]["ss"]) / rows[15]["ra"]
+    pc_grows = rows[13]["pc"] > rows[3]["pc"]
+    gap_small = (rows[15]["ss"] - rows[15]["lb"]) / rows[15]["lb"] < 0.25
+    gap_shrinks = ((rows[15]["ss"] - rows[15]["lb"]) / rows[15]["lb"] <
+                   (rows[3]["ss"] - rows[3]["lb"]) / rows[3]["lb"])
+    emit("fig5/claims", 0.0,
+         f"ss_vs_ra_gain_pct={gain:.2f};pc_increases_with_r={pc_grows};"
+         f"ss_lb_gap_small={gap_small};gap_shrinks_with_r={gap_shrinks}")
+    return rows

@@ -1,0 +1,31 @@
+"""Roofline table from saved dry-run JSONs (deliverable (g) reader).
+Reads experiments/dryrun/*.json and prints one CSV row per (mesh, arch,
+shape): the three terms, dominant bottleneck, and useful-FLOPs ratio."""
+import glob
+import json
+import os
+
+from .common import emit
+
+
+def run(dryrun_dir: str = "experiments/dryrun"):
+    files = sorted(glob.glob(os.path.join(dryrun_dir, "*.json")))
+    if not files:
+        emit("roofline/none", 0.0, "no_dryrun_artifacts_yet=true")
+        return
+    for f in files:
+        with open(f) as fh:
+            r = json.load(fh)
+        if r.get("skipped"):
+            continue
+        ro = r["roofline"]
+        emit(f"roofline/{r['mesh']}/{r['arch']}/{r['shape']}"
+             + (f"/{t}" if (t := os.path.basename(f).split('__')[-1]
+                            .removesuffix('.json')) not in
+                (r['shape'],) else ""),
+             r["timings"]["compile_s"] * 1e6,
+             f"compute_s={ro['compute_s']:.3e};"
+             f"memory_s={ro['memory_s']:.3e};"
+             f"collective_s={ro['collective_s']:.3e};"
+             f"dominant={ro['dominant'].removesuffix('_s')};"
+             f"useful_ratio={ro['useful_ratio']:.3f}")

@@ -1,0 +1,47 @@
+"""Benchmark harness — one entry per paper table/figure (deliverable (d)).
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  fig3   delay-model calibration (comm >> comp)
+  fig4   avg completion vs r, truncated-Gaussian scenarios 1 & 2 (n=16)
+  fig5   avg completion vs r, EC2-calibrated model (n=15)
+  fig6   avg completion vs n (r=n)
+  fig7   avg completion vs k (n=10, r=n)
+  table1 end-to-end DGD iteration per scheme incl. real PC/PCMM decode
+  roofline  per-(mesh, arch, shape) terms from saved dry-run artifacts
+
+Use --quick for CI-speed runs (fewer MC trials).
+"""
+import argparse
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer Monte-Carlo trials")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. fig4,fig7")
+    args = ap.parse_args(argv)
+    trials = 4000 if args.quick else 20000
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import (fig3_delays, fig4_vs_load, fig5_ec2, fig6_vs_workers,
+                   fig7_vs_target, table1_e2e, roofline_report)
+
+    print("name,us_per_call,derived")
+    jobs = {
+        "fig3": lambda: fig3_delays.run(trials),
+        "fig4": lambda: fig4_vs_load.run(trials),
+        "fig5": lambda: fig5_ec2.run(trials),
+        "fig6": lambda: fig6_vs_workers.run(trials),
+        "fig7": lambda: fig7_vs_target.run(trials),
+        "table1": table1_e2e.run,
+        "roofline": roofline_report.run,
+    }
+    for name, job in jobs.items():
+        if only and name not in only:
+            continue
+        job()
+
+
+if __name__ == "__main__":
+    main()

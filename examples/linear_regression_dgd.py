@@ -1,0 +1,127 @@
+"""End-to-end reproduction of the paper's Section VI scenario: distributed
+linear regression with DGD under straggler scheduling.
+
+Runs the full loop for CS / SS / RA / PC / PCMM with the EC2-calibrated
+truncated-Gaussian delay model: every scheme really computes h(X_i) =
+X_i X_i^T theta (the Pallas gram_matvec kernel for the uncoded schemes),
+the coded schemes really encode/decode, the master applies eq. (61)/(49),
+and the virtual clock advances by each round's completion time. Reports
+final loss and total virtual wall-clock.
+
+Run:  PYTHONPATH=src python examples/linear_regression_dgd.py [--iters 100]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import regression_config
+from repro.core import (cyclic_to_matrix, staircase_to_matrix,
+                        random_assignment_to_matrix, ec2_like,
+                        slot_arrival_times, first_k_distinct_mask,
+                        pc_encode, pc_worker_compute, pc_decode,
+                        pc_threshold, pcmm_encode, pcmm_worker_compute,
+                        pcmm_decode, pcmm_threshold)
+from repro.data import regression_dataset, regression_tasks
+from repro.kernels.ops import batched_gram_matvec
+
+
+def loss_of(theta, X, y):
+    res = X @ theta - y
+    return float(res @ res) / X.shape[0]
+
+
+def run_uncoded(C, Xs_cols, Xty_parts, N, model, k, iters, lr, seed=0):
+    """The paper's uncoded DGD loop (Table I, CS/SS/RA rows)."""
+    n, r = C.shape
+    d = Xs_cols.shape[1]
+    theta = np.zeros(d, np.float32)
+    key = jax.random.PRNGKey(seed)
+    clock = 0.0
+    for _ in range(iters):
+        key, kd = jax.random.split(key)
+        T1, T2 = model.sample(kd, 1, n, r)
+        s = slot_arrival_times(T1, T2)[0]
+        w, t_done = first_k_distinct_mask(jnp.asarray(C), s, n, k)
+        clock += float(t_done)
+        # workers: sequential h(X_i) evaluations (Pallas kernel)
+        hs = np.asarray(batched_gram_matvec(Xs_cols, jnp.asarray(theta)))
+        # master: eq. (61) over the k winning distinct tasks
+        wmask = np.asarray(w) > 0
+        sel = sorted({int(C[i, j]) for i in range(n) for j in range(r)
+                      if wmask[i, j]})
+        assert len(sel) == k
+        grad = 2 * n / (k * N) * sum(hs[p] - Xty_parts[p] for p in sel)
+        theta = theta - lr * grad
+    return theta, clock
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=100)
+    args = ap.parse_args()
+    rc = regression_config()
+    n, r, k, lr = rc.n, rc.r, rc.k, rc.lr
+    key = jax.random.PRNGKey(0)
+    X, y, _ = regression_dataset(key, rc.N, rc.d)
+    X = np.asarray(X, np.float32)
+    y = np.asarray(y, np.float32)
+    Xs, ys = regression_tasks(jnp.asarray(X), jnp.asarray(y), n)
+    Xs_cols = jnp.asarray(np.asarray(Xs).transpose(0, 2, 1))  # (n, d, b)
+    Xty_parts = np.stack([np.asarray(Xs[i]).T @ np.asarray(ys[i])
+                          for i in range(n)])
+    Xty = Xty_parts.sum(0)
+    N = n * Xs.shape[1]
+    model = ec2_like(n, seed=1)
+    print(f"paper scenario: N={rc.N} d={rc.d} n={n} r={r} k={k} "
+          f"iters={args.iters}")
+    print(f"{'scheme':8s} {'final loss':>12s} {'virtual time':>14s}")
+
+    for name, C in (("CS", cyclic_to_matrix(n, r)),
+                    ("SS", staircase_to_matrix(n, r)),
+                    ("RA", random_assignment_to_matrix(n, seed=0))):
+        theta, clock = run_uncoded(C, Xs_cols, Xty_parts, N, model, k,
+                                   args.iters, lr)
+        print(f"{name:8s} {loss_of(theta, X, y):12.5f} "
+              f"{clock * 1e3:11.3f} ms")
+
+    # --- PC: one coded message per worker, threshold 2*ceil(n/r)-1 --------
+    theta = np.zeros(rc.d, np.float32)
+    Xt, alphas, _ = pc_encode(np.asarray(Xs_cols, np.float64), r)
+    clock = 0.0
+    keyp = jax.random.PRNGKey(7)
+    for _ in range(args.iters):
+        keyp, kd = jax.random.split(keyp)
+        T1, T2 = model.sample(kd, 1, n, r)
+        t_w = np.asarray(T1.sum(-1) + T2[..., -1])[0]
+        kth = pc_threshold(n, r)
+        order = np.argsort(t_w)[:kth]
+        clock += float(np.sort(t_w)[kth - 1])
+        res = np.stack([pc_worker_compute(Xt[i], theta) for i in order])
+        xxt = pc_decode(res, alphas[order], n, r)
+        theta = theta - lr * 2 / N * (xxt - Xty)
+    print(f"{'PC':8s} {loss_of(theta, X, y):12.5f} {clock * 1e3:11.3f} ms")
+
+    # --- PCMM: sequential coded messages, threshold 2n-1 ------------------
+    theta = np.zeros(rc.d, np.float32)
+    Xh, betas = pcmm_encode(np.asarray(Xs_cols, np.float64), r)
+    clock = 0.0
+    keyp = jax.random.PRNGKey(9)
+    for _ in range(args.iters):
+        keyp, kd = jax.random.split(keyp)
+        T1, T2 = model.sample(kd, 1, n, r)
+        s = np.asarray(slot_arrival_times(T1, T2))[0].reshape(-1)
+        need = pcmm_threshold(n)
+        order = np.argsort(s)[:need]
+        clock += float(np.sort(s)[need - 1])
+        res = np.stack([pcmm_worker_compute(
+            Xh[o // r, o % r], theta) for o in order])
+        pts = np.array([betas[o // r, o % r] for o in order])
+        xxt = pcmm_decode(res, pts, n)
+        theta = theta - lr * 2 / N * (xxt - Xty)
+    print(f"{'PCMM':8s} {loss_of(theta, X, y):12.5f} {clock * 1e3:11.3f} ms")
+
+
+if __name__ == "__main__":
+    main()

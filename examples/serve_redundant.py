@@ -1,0 +1,68 @@
+"""Beyond-paper example: the first-k-distinct selection rule applied to
+SERVING — redundant speculative dispatch of decode requests.
+
+A batch of requests is replicated r times across n model replicas using a
+CS/SS TO matrix; each replica serves its assigned requests sequentially;
+a request completes when its FIRST copy finishes. This is exactly the
+paper's completion-time machinery with tasks = requests, applied to
+inference tail-latency (the paper's eq. 6 with k = n).
+
+Simulates replica latency with the bimodal straggler model and reports
+p50/p99 latency for scheduled-redundant vs single-assignment dispatch,
+then actually decodes the winning requests with a tiny LM to show the
+plumbing end-to-end.
+
+Run:  PYTHONPATH=src python examples/serve_redundant.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (BimodalStragglerDelays, cyclic_to_matrix,
+                        scenario1, slot_arrival_times, task_arrival_times)
+from repro.models import ModelConfig, init_cache
+from repro.train import init_train_state, make_serve_step
+from repro.optim import sgd
+
+
+def tail_latency(C, model, trials=4000, seed=0):
+    n, r = C.shape
+    T1, T2 = model.sample(jax.random.PRNGKey(seed), trials, n, r)
+    s = slot_arrival_times(T1, T2)
+    tau = np.asarray(task_arrival_times(jnp.asarray(C), s, n))  # per-request
+    return np.percentile(tau, 50), np.percentile(tau, 99)
+
+
+def main():
+    n = 16
+    model = BimodalStragglerDelays(base=scenario1(), p_straggle=0.25,
+                                   slow=10.0)
+    single = cyclic_to_matrix(n, 1)          # each request served once
+    for r in (1, 2, 3):
+        C = cyclic_to_matrix(n, r)
+        p50, p99 = tail_latency(C, model)
+        print(f"r={r}: request p50={p50 * 1e3:.3f} ms   "
+              f"p99={p99 * 1e3:.3f} ms")
+    p50_1, p99_1 = tail_latency(single, model)
+    p50_2, p99_2 = tail_latency(cyclic_to_matrix(n, 2), model)
+    print(f"\nredundancy r=2 cuts p99 by "
+          f"{100 * (p99_1 - p99_2) / p99_1:.1f}% "
+          f"(p50 by {100 * (p50_1 - p50_2) / p50_1:.1f}%)")
+
+    # end-to-end: decode the 16 requests with a tiny LM
+    cfg = ModelConfig(name="tiny-serve", arch_type="dense", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab_size=256, param_dtype="float32",
+                      dtype="float32", remat=False)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, sgd(0.0))
+    serve = jax.jit(make_serve_step(cfg))
+    cache = init_cache(cfg, n, 32)
+    tok = jnp.zeros((n, 1), jnp.int32)
+    for _ in range(8):
+        tok, cache = serve(state.params, cache, tok)
+    print(f"decoded final tokens for {n} requests:",
+          np.asarray(tok).ravel()[:8], "...")
+
+
+if __name__ == "__main__":
+    main()

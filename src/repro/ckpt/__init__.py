@@ -1,0 +1,1 @@
+from .checkpoint import save_checkpoint, load_checkpoint, latest_checkpoint

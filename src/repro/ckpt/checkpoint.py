@@ -1,0 +1,75 @@
+"""npz-based pytree checkpointing (keeps the dependency closure to
+jax+numpy; on a real cluster swap for a tensorstore/orbax backend).
+
+Leaves are saved under their tree-path key; structure is rebuilt against a
+template pytree on load, so arbitrary nested dict/tuple/dataclass states
+round-trip as long as the template matches.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_SEP = "|"
+
+
+def _flatten(tree: PyTree):
+    return jax.tree_util.tree_flatten_with_path(tree)
+
+
+def _key(path) -> str:
+    return _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path)
+
+
+def save_checkpoint(path: str, tree: PyTree, step: Optional[int] = None
+                    ) -> str:
+    """Save to ``path`` (".npz" appended if missing). If ``step`` is given,
+    writes ``<path>-<step>.npz``."""
+    if step is not None:
+        path = f"{path}-{step:08d}"
+    if not path.endswith(".npz"):
+        path += ".npz"
+    leaves, _ = _flatten(tree)
+    arrays = {_key(p): np.asarray(l) for p, l in leaves}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **arrays)
+    return path
+
+
+def load_checkpoint(path: str, template: PyTree) -> PyTree:
+    """Restore into the structure of ``template`` (shapes/dtypes of the
+    template's leaves are preserved via cast)."""
+    if not path.endswith(".npz"):
+        path += ".npz"
+    with np.load(path) as data:
+        leaves, treedef = _flatten(template)
+        new = []
+        for p, l in leaves:
+            k = _key(p)
+            if k not in data:
+                raise KeyError(f"checkpoint missing leaf {k!r}")
+            arr = data[k]
+            if tuple(arr.shape) != tuple(l.shape):
+                raise ValueError(f"shape mismatch for {k}: "
+                                 f"{arr.shape} vs {l.shape}")
+            new.append(jax.numpy.asarray(arr, dtype=l.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new)
+
+
+def latest_checkpoint(directory: str, prefix: str = "") -> Optional[str]:
+    pat = re.compile(re.escape(prefix) + r"-(\d+)\.npz$")
+    best, best_step = None, -1
+    if not os.path.isdir(directory):
+        return None
+    for f in os.listdir(directory):
+        m = pat.search(f)
+        if m and int(m.group(1)) > best_step:
+            best, best_step = os.path.join(directory, f), int(m.group(1))
+    return best

@@ -1,0 +1,148 @@
+"""Architecture registry + assigned input shapes + abstract input specs.
+
+``--arch <id>`` resolution, the four assigned input shapes, the long-context
+variants (DESIGN.md §5 shape skips), and ``input_specs`` producing
+ShapeDtypeStruct stand-ins for the dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import ModelConfig
+from . import (jamba_v01_52b, gemma3_4b, mistral_nemo_12b, qwen2_72b,
+               deepseek_v3_671b, rwkv6_1p6b, whisper_base,
+               llama4_maverick_400b, llava_next_34b, phi4_mini_3p8b,
+               paper_regression)
+
+_MODULES = {
+    "jamba-v0.1-52b": jamba_v01_52b,
+    "gemma3-4b": gemma3_4b,
+    "mistral-nemo-12b": mistral_nemo_12b,
+    "qwen2-72b": qwen2_72b,
+    "deepseek-v3-671b": deepseek_v3_671b,
+    "rwkv6-1.6b": rwkv6_1p6b,
+    "whisper-base": whisper_base,
+    "llama4-maverick-400b-a17b": llama4_maverick_400b,
+    "llava-next-34b": llava_next_34b,
+    "phi4-mini-3.8b": phi4_mini_3p8b,
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    try:
+        return _MODULES[arch].config()
+    except KeyError:
+        raise ValueError(f"unknown arch {arch!r}; have {sorted(_MODULES)}")
+
+
+def regression_config():
+    return paper_regression.config()
+
+
+# ---------------------------- input shapes -----------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+LONG_WINDOW = 8192
+
+
+def shape_supported(cfg: ModelConfig, shape: str) -> bool:
+    """DESIGN.md §5 skip rules. Only whisper-base skips long_500k (its
+    decoder has no semantic analogue at 524k); everything else runs —
+    dense archs via the sliding-window long-variant, DeepSeek via the MLA
+    compressed cache, SSM/hybrid natively."""
+    if shape == "long_500k" and cfg.arch_type == "audio":
+        return False
+    return True
+
+
+def long_variant(cfg: ModelConfig) -> ModelConfig:
+    """Sub-quadratic / bounded-memory decode variant for long_500k:
+
+    * ssm (rwkv6): native O(1) state — unchanged.
+    * mla (deepseek): compressed-KV cache is the enabler — unchanged.
+    * hybrid (jamba) + all GQA dense archs: full-attention layers switch to
+      a sliding-window (ring-buffer KV, window LONG_WINDOW) variant.
+    """
+    if cfg.ssm_kind == "rwkv6" or cfg.kv_lora_rank:
+        return dataclasses.replace(cfg, max_seq_len=max(cfg.max_seq_len,
+                                                        SHAPES["long_500k"].seq_len + 8))
+    return dataclasses.replace(
+        cfg, name=cfg.name + "+swa", sliding_window=LONG_WINDOW,
+        local_global_pattern=(1, 0),  # all layers local
+        max_seq_len=SHAPES["long_500k"].seq_len + 8)
+
+
+def resolve(cfg: ModelConfig, shape: str) -> ModelConfig:
+    """Config actually lowered for (arch, shape)."""
+    if shape == "long_500k":
+        return long_variant(cfg)
+    if SHAPES[shape].kind == "decode":
+        return dataclasses.replace(
+            cfg, max_seq_len=min(cfg.max_seq_len, SHAPES[shape].seq_len))
+    return cfg
+
+
+# ---------------------------- abstract inputs --------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, *, n: int = 16,
+                r: int = 1) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of the given shape.
+
+    train: slot-major straggler-round batches (r, n, b, S) (+ modality
+           extras); prefill: (B, S) tokens; decode: (B, 1) token + KV cache
+           (the cache spec is built by the caller from init_cache's shapes).
+    """
+    sh = SHAPES[shape_name]
+    S, B = sh.seq_len, sh.global_batch
+    i32 = jnp.int32
+    f32 = jnp.float32
+    if sh.kind == "train":
+        assert B % n == 0
+        b = B // n
+        St = S - (cfg.frontend_seq or 0)
+        spec = {"slot_tokens": _sds((r, n, b, St), i32),
+                "slot_labels": _sds((r, n, b, St), i32)}
+        if cfg.frontend_seq:
+            spec["slot_embeds"] = _sds((r, n, b, cfg.frontend_seq,
+                                        cfg.frontend_dim), f32)
+        if cfg.encoder_layers:
+            spec["slot_frames"] = _sds((r, n, b, cfg.encoder_seq,
+                                        cfg.frontend_dim), f32)
+        return spec
+    if sh.kind == "prefill":
+        St = S - (cfg.frontend_seq or 0)
+        spec = {"tokens": _sds((B, St), i32)}
+        if cfg.frontend_seq:
+            spec["embeds"] = _sds((B, cfg.frontend_seq, cfg.frontend_dim),
+                                  f32)
+        if cfg.encoder_layers:
+            spec["enc_frames"] = _sds((B, cfg.encoder_seq, cfg.frontend_dim),
+                                      f32)
+        return spec
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": _sds((B, 1), i32)}

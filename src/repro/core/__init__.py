@@ -1,0 +1,19 @@
+"""repro.core — the paper's contribution: straggler-tolerant computation
+scheduling for distributed SGD (Amiri & Gündüz, IEEE TSP 2019)."""
+from .scheduling import (cyclic_to_matrix, staircase_to_matrix,
+                         random_assignment_to_matrix, to_matrix,
+                         validate_to_matrix, SCHEDULES)
+from .delays import (TruncatedGaussianDelays, ShiftedExponentialDelays,
+                     BimodalStragglerDelays, EmpiricalDelays, scenario1,
+                     scenario2, ec2_like)
+from .completion import (slot_arrival_times, task_arrival_times,
+                         completion_time, lower_bound_time,
+                         first_k_distinct_mask, simulate_completion,
+                         simulate_lower_bound, mean_completion_time)
+from .theory import (theorem1_tail_from_H, theorem1_tail_mc, theorem1_mean_mc,
+                     theorem1_tail_r1_independent, sum_survival_grid)
+from .coded import (pc_threshold, pcmm_threshold, pc_encode, pc_decode,
+                    pc_worker_compute, pcmm_encode, pcmm_decode,
+                    pcmm_worker_compute, simulate_pc_completion,
+                    simulate_pcmm_completion)
+from .aggregator import RoundSpec, StragglerAggregator

@@ -1,0 +1,108 @@
+"""First-k-distinct gradient aggregation (paper eq. 61) as a reusable JAX
+module — the bridge between the paper's scheduling theory and the training
+framework.
+
+One SGD iteration = one *round*:
+
+  1. the global batch is split into ``n`` logical tasks (micro-batches);
+  2. worker ``i`` (a data-parallel shard group) evaluates the gradients of
+     tasks ``C[i, 0..r-1]`` sequentially;
+  3. a delay realization (simulated, or measured on a real cluster) gives
+     each (worker, slot) result a virtual arrival time;
+  4. the earliest copies of the k earliest distinct tasks are combined with
+     the unbiased scaling of eq. (61):
+
+         theta <- theta - eta * (n / k) * sum_{selected tasks} g_task
+
+     (the n/k factor is folded into the returned gradient).
+
+The selection mask is a deterministic function of the arrival times and is
+computed identically on every shard (cheap: n*r scalars), keeping the whole
+round a single SPMD step — see DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import scheduling
+from .completion import first_k_distinct_mask, slot_arrival_times
+from .delays import DelayModel
+
+__all__ = ["RoundSpec", "StragglerAggregator"]
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundSpec:
+    """Static description of one scheduling round."""
+    n: int            # number of logical tasks == number of workers
+    r: int            # computation load (tasks per worker)
+    k: int            # computation target (distinct results needed)
+    schedule: str = "ss"   # cs | ss | ra | block
+    seed: int = 0          # for RA matrices
+
+    def __post_init__(self):
+        if not (1 <= self.k <= self.n):
+            raise ValueError(f"need 1 <= k <= n; got k={self.k}, n={self.n}")
+        if not (1 <= self.r <= self.n):
+            raise ValueError(f"need 1 <= r <= n; got r={self.r}, n={self.n}")
+
+    def to_matrix(self) -> np.ndarray:
+        return scheduling.to_matrix(self.schedule, self.n, self.r,
+                                    **({"seed": self.seed}
+                                       if self.schedule == "ra" else {}))
+
+
+class StragglerAggregator:
+    """Combines per-(worker, slot) gradients into the eq.-(61) estimate.
+
+    Usage inside a train step::
+
+        agg = StragglerAggregator(RoundSpec(n=16, r=2, k=12, schedule="ss"),
+                                  delay_model)
+        weights, t_done = agg.round_mask(rng)        # (n, r) weights, scalar
+        grad = agg.combine(slot_grads, weights)      # pytree
+
+    ``slot_grads`` is a pytree whose leaves have leading dims (n, r) — the
+    gradient of task C[i, j] computed by worker i at slot j (already averaged
+    within the micro-batch).
+    """
+
+    def __init__(self, spec: RoundSpec, delay_model: DelayModel):
+        self.spec = spec
+        self.delay_model = delay_model
+        self.C = jnp.asarray(spec.to_matrix())
+
+    def round_mask(self, key: Array) -> Tuple[Array, Array]:
+        """Sample one round's delays, return (weights (n, r), completion
+        time scalar). weights[i, j] in [0, 1]; sums to k over all slots."""
+        n, r, k = self.spec.n, self.spec.r, self.spec.k
+        T1, T2 = self.delay_model.sample(key, 1, n, r)
+        s = slot_arrival_times(T1, T2)[0]                # (n, r)
+        weights, t_done = first_k_distinct_mask(self.C, s, n, k)
+        return weights, t_done
+
+    def combine(self, slot_grads: PyTree, weights: Array) -> PyTree:
+        """eq. (61): grad = (n/k) * mean over selected tasks of task grads
+        == (1/k) * sum selected (if task grads are already per-task means,
+        the global-batch-equivalent estimate is sum * n/k / n = sum/k)."""
+        k = self.spec.k
+        def _one(g):
+            w = weights.reshape(weights.shape + (1,) * (g.ndim - 2))
+            return (g * w).sum(axis=(0, 1)) / k
+        return jax.tree_util.tree_map(_one, slot_grads)
+
+    def expected_completion(self, key: Array, trials: int = 4096) -> float:
+        """MC estimate of the round's average completion time (eq. 5)."""
+        n, r, k = self.spec.n, self.spec.r, self.spec.k
+        T1, T2 = self.delay_model.sample(key, trials, n, r)
+        s = slot_arrival_times(T1, T2)
+        _, t_done = first_k_distinct_mask(self.C, s, n, k)
+        return float(t_done.mean())

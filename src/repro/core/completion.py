@@ -1,0 +1,129 @@
+"""Arrival-time / completion-time computation (paper eqs. 1–6, 46).
+
+Everything is expressed as vectorized JAX ops over a leading ``trials`` axis
+so Monte-Carlo evaluation of the average completion time is one jitted call.
+
+Conventions
+-----------
+* ``C``   — TO matrix, shape (n, r), task indices in [0, n).
+* ``T1``  — per-slot computation delays, shape (trials, n, r). ``T1[t,i,j]``
+            is the compute delay of worker ``i``'s j-th *slot* (the task in
+            that slot is ``C[i, j]``).
+* ``T2``  — per-slot communication delays, same shape.
+
+Derived:
+* slot arrival   ``s[t,i,j] = sum_{m<=j} T1[t,i,m] + T2[t,i,j]``   (eq. 1)
+* task arrival   ``tau[t,p] = min over slots with C[i,j]==p``      (eq. 2)
+* completion     ``t_C(r,k) = k-th smallest of tau``                (eq. 6)
+* oracle LB      ``k-th smallest of all n*r slot arrivals``         (eq. 46)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "slot_arrival_times", "task_arrival_times", "completion_time",
+    "lower_bound_time", "first_k_distinct_mask", "simulate_completion",
+    "simulate_lower_bound", "mean_completion_time",
+]
+
+Array = jax.Array
+INF = jnp.inf
+
+
+def slot_arrival_times(T1: Array, T2: Array) -> Array:
+    """eq. (1): s[..., i, j] = cumsum_j(T1)[..., i, j] + T2[..., i, j]."""
+    return jnp.cumsum(T1, axis=-1) + T2
+
+
+def task_arrival_times(C: Array, s: Array, n: int) -> Array:
+    """eq. (2): per-task earliest arrival across all (worker, slot) holding
+    the task. Tasks never assigned get +inf. Shapes: C (n_w, r), s
+    (..., n_w, r) -> (..., n)."""
+    Cf = jnp.asarray(C).reshape(-1)                  # (n_w * r,)
+    sf = s.reshape(s.shape[:-2] + (-1,))             # (..., n_w * r)
+    init = jnp.full(s.shape[:-2] + (n,), INF, s.dtype)
+    return init.at[..., Cf].min(sf)
+
+
+def completion_time(tau: Array, k: int) -> Array:
+    """eq. (6): time the master holds k distinct results = k-th order
+    statistic of task arrivals. tau (..., n) -> (...,)."""
+    return jnp.sort(tau, axis=-1)[..., k - 1]
+
+
+def lower_bound_time(s: Array, k: int) -> Array:
+    """eq. (46): adaptive lower bound — with delay realizations known ahead,
+    an oracle TO matrix makes the first k received results distinct, so the
+    completion time is the k-th order statistic over ALL n*r slot arrivals."""
+    sf = s.reshape(s.shape[:-2] + (-1,))
+    return jnp.sort(sf, axis=-1)[..., k - 1]
+
+
+def first_k_distinct_mask(C: Array, s: Array, n: int, k: int
+                          ) -> Tuple[Array, Array]:
+    """Which (worker, slot) results the master uses: the earliest copy of
+    each of the k earliest-arriving distinct tasks.
+
+    Returns ``(weights, t_done)`` where ``weights`` has shape
+    ``s.shape`` (…, n_w, r): per-slot aggregation weight (0 for unused slots;
+    winners of selected tasks share weight 1 per task — ties averaged), and
+    ``t_done`` (…,) is the completion time. Everything is differentiable-free
+    masking, usable inside a jitted train step.
+    """
+    C = jnp.asarray(C)
+    tau = task_arrival_times(C, s, n)                    # (..., n)
+    t_done = completion_time(tau, k)                     # (...,)
+    selected = tau <= t_done[..., None]                  # (..., n) k tasks (a.s.)
+    # winner slots: slot arrival equals its task's earliest arrival
+    tau_at_slot = tau[..., C]                            # (..., n_w, r)
+    sel_at_slot = selected[..., C]                       # (..., n_w, r)
+    is_winner = (s <= tau_at_slot) & sel_at_slot
+    # normalize per task so duplicated winners (measure-zero ties) average
+    ones = jnp.where(is_winner, 1.0, 0.0)
+    per_task_count = jnp.zeros_like(tau).at[..., C.reshape(-1)].add(
+        ones.reshape(ones.shape[:-2] + (-1,)))
+    cnt_at_slot = jnp.maximum(per_task_count[..., C], 1.0)
+    weights = ones / cnt_at_slot
+    return weights, t_done
+
+
+# ---------------- Monte-Carlo drivers ----------------------------------------
+
+@partial(jax.jit, static_argnames=("n", "k", "trials"))
+def _simulate(C, T1, T2, n: int, k: int, trials: int):
+    s = slot_arrival_times(T1, T2)
+    tau = task_arrival_times(C, s, n)
+    return completion_time(tau, k)
+
+
+def simulate_completion(C: np.ndarray, model, k: int, *, trials: int = 10000,
+                        seed: int = 0) -> Array:
+    """Sample ``trials`` rounds of the schedule ``C`` under ``model`` and
+    return the completion-time samples, shape (trials,)."""
+    n, r = np.asarray(C).shape
+    key = jax.random.PRNGKey(seed)
+    T1, T2 = model.sample(key, trials, n, r)
+    return _simulate(jnp.asarray(C), T1, T2, n, k, trials)
+
+
+def simulate_lower_bound(model, n: int, r: int, k: int, *, trials: int = 10000,
+                         seed: int = 0) -> Array:
+    """Monte-Carlo eq. (44): mean over trials of the oracle k-th order
+    statistic."""
+    key = jax.random.PRNGKey(seed)
+    T1, T2 = model.sample(key, trials, n, r)
+    s = slot_arrival_times(T1, T2)
+    return lower_bound_time(s, k)
+
+
+def mean_completion_time(C: np.ndarray, model, k: int, *, trials: int = 10000,
+                         seed: int = 0) -> float:
+    """Paper eq. (5): average completion time of schedule C."""
+    return float(jnp.mean(simulate_completion(C, model, k, trials=trials,
+                                              seed=seed)))

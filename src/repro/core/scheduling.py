@@ -1,0 +1,135 @@
+"""Task-ordering (TO) matrices — the paper's central object.
+
+A TO matrix ``C`` is an ``(n, r)`` integer matrix. Row ``i`` lists the task
+indices worker ``i`` executes, in order: worker ``i`` first computes
+``h(X[C[i, 0]])``, then ``h(X[C[i, 1]])``, ... (paper Sec. II). Tasks are
+0-indexed here (the paper is 1-indexed).
+
+Implemented schedules:
+  * Cyclic scheduling   (CS, paper eq. 21):  C(i,j) = g(i + j)
+  * Staircase scheduling (SS, paper eq. 29): C(i,j) = g(i + (-1)^i * j)
+  * Random assignment   (RA, [18]):          each row an independent random
+    permutation of [n] (requires r == n)
+  * round-robin block / custom matrices via validation helpers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+__all__ = [
+    "cyclic_to_matrix",
+    "staircase_to_matrix",
+    "random_assignment_to_matrix",
+    "block_to_matrix",
+    "validate_to_matrix",
+    "to_matrix",
+    "SCHEDULES",
+    "Schedule",
+]
+
+
+def _g(m: np.ndarray, n: int) -> np.ndarray:
+    """Paper's wrap-around map g (eq. 22), 0-indexed: fold into [0, n)."""
+    return np.mod(m, n)
+
+
+def cyclic_to_matrix(n: int, r: int) -> np.ndarray:
+    """CS schedule (eq. 21): every worker walks the ring in the same
+    direction, offset by its index, so each task has the same execution
+    *position* at every worker that holds it."""
+    if not (1 <= r <= n):
+        raise ValueError(f"need 1 <= r <= n, got r={r}, n={n}")
+    i = np.arange(n)[:, None]
+    j = np.arange(r)[None, :]
+    return _g(i + j, n).astype(np.int64)
+
+
+def staircase_to_matrix(n: int, r: int) -> np.ndarray:
+    """SS schedule (eq. 29): even-indexed workers walk the ring ascending,
+    odd-indexed workers descending (0-indexed parity matches the paper's
+    1-indexed convention: paper worker 1 ≙ row 0 ascends)."""
+    if not (1 <= r <= n):
+        raise ValueError(f"need 1 <= r <= n, got r={r}, n={n}")
+    i = np.arange(n)[:, None]
+    j = np.arange(r)[None, :]
+    sign = np.where(i % 2 == 0, 1, -1)
+    return _g(i + sign * j, n).astype(np.int64)
+
+
+def random_assignment_to_matrix(n: int, r: int | None = None, *,
+                                rng: np.random.Generator | None = None,
+                                seed: int | None = 0) -> np.ndarray:
+    """RA scheme [18]: r = n (full dataset at each worker); each row is an
+    independent uniformly random permutation of [n]."""
+    if r is not None and r != n:
+        raise ValueError(f"RA requires r == n (got r={r}, n={n})")
+    if rng is None:
+        rng = np.random.default_rng(seed)
+    return np.stack([rng.permutation(n) for _ in range(n)]).astype(np.int64)
+
+
+def block_to_matrix(n: int, r: int) -> np.ndarray:
+    """Naive blocked redundancy baseline (not in the paper; useful ablation):
+    worker i computes tasks {i, i+1, ..., i+r-1} like CS but all workers
+    start from the *lowest* index of their block — i.e. identical to CS.
+    Differs for the ablation where workers share a start: C(i,j) = g(⌊i/r⌋*r + j).
+    """
+    if not (1 <= r <= n):
+        raise ValueError(f"need 1 <= r <= n, got r={r}, n={n}")
+    i = np.arange(n)[:, None]
+    j = np.arange(r)[None, :]
+    return _g((i // max(r, 1)) * r + j, n).astype(np.int64)
+
+
+def validate_to_matrix(C: np.ndarray, n: int | None = None,
+                       require_distinct: bool = True) -> None:
+    """Check C is a valid TO matrix: shape (n, r), entries in [0, n),
+    optionally distinct within each row (any optimal C has distinct rows,
+    paper Sec. II)."""
+    C = np.asarray(C)
+    if C.ndim != 2:
+        raise ValueError(f"TO matrix must be 2-D, got shape {C.shape}")
+    n_ = C.shape[0] if n is None else n
+    if n is not None and C.shape[0] != n:
+        raise ValueError(f"TO matrix has {C.shape[0]} rows, expected n={n}")
+    if C.shape[1] > n_:
+        raise ValueError(f"computation load r={C.shape[1]} exceeds n={n_}")
+    if C.min() < 0 or C.max() >= n_:
+        raise ValueError(f"task indices must lie in [0, {n_}), got "
+                         f"[{C.min()}, {C.max()}]")
+    if require_distinct:
+        for i, row in enumerate(C):
+            if len(set(row.tolist())) != len(row):
+                raise ValueError(f"row {i} has repeated tasks: {row}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """A named TO-matrix construction."""
+    name: str
+    build: Callable[..., np.ndarray]
+
+    def __call__(self, n: int, r: int, **kw) -> np.ndarray:
+        C = self.build(n, r, **kw) if self.name != "ra" else self.build(n, **kw)
+        validate_to_matrix(C, n)
+        return C
+
+
+SCHEDULES: dict[str, Schedule] = {
+    "cs": Schedule("cs", cyclic_to_matrix),
+    "ss": Schedule("ss", staircase_to_matrix),
+    "ra": Schedule("ra", random_assignment_to_matrix),
+    "block": Schedule("block", block_to_matrix),
+}
+
+
+def to_matrix(name: str, n: int, r: int, **kw) -> np.ndarray:
+    """Build a named TO matrix (``cs`` | ``ss`` | ``ra`` | ``block``)."""
+    try:
+        sched = SCHEDULES[name.lower()]
+    except KeyError:
+        raise ValueError(f"unknown schedule {name!r}; have {sorted(SCHEDULES)}")
+    return sched(n, r, **kw)

@@ -1,0 +1,123 @@
+"""Theorem 1 (paper eqs. 7–8) and the lower bound (Sec. V).
+
+Theorem 1 expresses the completion-time tail through joint task-arrival
+survival probabilities:
+
+  Pr{t_C(r,k) > t} = sum_{i=n-k+1}^{n} (-1)^{n-k+i+1} C(i-1, n-k)
+                     * sum_{S subset [n], |S|=i} Pr{ t_j > t  for all j in S }
+
+The joint survivals H_S(t) = Pr{t_j > t ∀ j∈S} are, in general, the
+high-dimensional integrals (40); the paper evaluates them numerically. Here:
+
+* ``theorem1_tail_from_H`` — the exact combinatorial assembly, given H.
+* ``joint_survival_mc``   — H_S(t) estimated from shared delay samples.
+* ``theorem1_mean_mc``    — average completion time via Thm 1 + MC H_S.
+  (Validating this against the direct order-statistic simulation checks the
+  inclusion–exclusion identity itself — see tests/test_theory.py.)
+* ``theorem1_tail_r1_independent`` — fully analytic special case r=1 with
+  independent per-worker delays: t_j = T1_j + T2_j are independent, so
+  H_S(t) = prod_{j in S} S_j(t); survival of the sum via 1-D convolution.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .completion import slot_arrival_times, task_arrival_times
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "theorem1_tail_from_H", "joint_survival_mc", "theorem1_tail_mc",
+    "theorem1_mean_mc", "sum_survival_grid", "theorem1_tail_r1_independent",
+]
+
+
+def _coef(n: int, k: int, i: int) -> float:
+    """(-1)^{n-k+i+1} * binom(i-1, n-k)."""
+    return (-1.0) ** (n - k + i + 1) * math.comb(i - 1, n - k)
+
+
+def theorem1_tail_from_H(H: Callable[[tuple], np.ndarray], n: int, k: int
+                         ) -> np.ndarray:
+    """Assemble Pr{t_C > t} from per-subset joint survivals.
+
+    ``H(S)`` must return the vector Pr{t_j > t ∀ j∈S} over the evaluation
+    grid. Exponential in n — fine for the paper-scale n ≤ 10 used in tests.
+    """
+    out = None
+    for i in range(n - k + 1, n + 1):
+        c = _coef(n, k, i)
+        for S in itertools.combinations(range(n), i):
+            h = np.asarray(H(S))
+            out = c * h if out is None else out + c * h
+    return out
+
+
+def joint_survival_mc(C: np.ndarray, model, tgrid: np.ndarray, *,
+                      trials: int = 20000, seed: int = 0):
+    """Return ``H(S)`` closure backed by shared MC samples of task arrivals."""
+    n, r = np.asarray(C).shape
+    key = jax.random.PRNGKey(seed)
+    T1, T2 = model.sample(key, trials, n, r)
+    s = slot_arrival_times(T1, T2)
+    tau = np.asarray(task_arrival_times(jnp.asarray(C), s, n))  # (trials, n)
+    tg = np.asarray(tgrid)
+
+    def H(S: tuple) -> np.ndarray:
+        # Pr{ t_j > t for all j in S } for each t in grid
+        m = tau[:, list(S)].min(axis=1)        # all exceed t  <=>  min exceeds t
+        return (m[:, None] > tg[None, :]).mean(axis=0)
+
+    return H
+
+
+def theorem1_tail_mc(C, model, tgrid, *, trials=20000, seed=0, k: int = None):
+    n = np.asarray(C).shape[0]
+    H = joint_survival_mc(C, model, tgrid, trials=trials, seed=seed)
+    return theorem1_tail_from_H(H, n, k)
+
+
+def theorem1_mean_mc(C, model, k: int, *, tmax: float, npts: int = 512,
+                     trials: int = 20000, seed: int = 0) -> float:
+    """Average completion time via eq. (8): integral of the tail."""
+    tgrid = np.linspace(0.0, tmax, npts)
+    tail = theorem1_tail_mc(C, model, tgrid, trials=trials, seed=seed, k=k)
+    return float(np.trapezoid(np.clip(tail, 0.0, 1.0), tgrid))
+
+
+# -------- analytic special case: r = 1, independent delays -------------------
+
+def sum_survival_grid(pdf1: Callable[[np.ndarray], np.ndarray],
+                      pdf2: Callable[[np.ndarray], np.ndarray],
+                      tmax: float, npts: int = 4096):
+    """Survival function of T1 + T2 for independent T1, T2 with the given
+    densities, on a uniform grid via discrete convolution. Returns (tgrid,
+    survival)."""
+    t = np.linspace(0.0, tmax, npts)
+    dt = t[1] - t[0]
+    f1 = pdf1(t)
+    f2 = pdf2(t)
+    fsum = np.convolve(f1, f2)[:npts] * dt          # density of the sum
+    cdf = np.cumsum(fsum) * dt
+    return t, np.clip(1.0 - cdf, 0.0, 1.0)
+
+
+def theorem1_tail_r1_independent(survivals: Sequence[np.ndarray], k: int
+                                 ) -> np.ndarray:
+    """r=1, independent workers: worker i computes only task i, so
+    t_j = T1_j + T2_j independent across j and H_S(t) = prod_{j in S} S_j(t).
+    ``survivals[j]`` is S_j over the grid."""
+    n = len(survivals)
+    S_ = [np.asarray(s) for s in survivals]
+
+    def H(Sset: tuple) -> np.ndarray:
+        out = np.ones_like(S_[0])
+        for j in Sset:
+            out = out * S_[j]
+        return out
+
+    return theorem1_tail_from_H(H, n, k)

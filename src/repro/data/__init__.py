@@ -1,0 +1,2 @@
+from .pipeline import (TaskPartition, lm_task_batches, synthetic_tokens,
+                       bigram_tokens, regression_dataset, regression_tasks)

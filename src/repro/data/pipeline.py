@@ -1,0 +1,118 @@
+"""Data pipeline: the paper's n-way task partitioning + TO-ordered
+per-worker micro-batching, with deterministic synthetic sources.
+
+One SGD round splits the global batch into ``n`` logical tasks (paper
+Remark 1: each task = one mini-batch). ``lm_task_batches`` materializes the
+(slot-major) tensor the straggler train step consumes:
+
+    slots[s, i] = micro-batch of task C[i, s]   — shape (r, n, b, S)
+
+so worker *i* scanning slot ``s`` processes exactly the task the TO matrix
+prescribes, in order. Task micro-batches are generated deterministically
+from (seed, step, task), so two workers assigned the same task materialize
+identical data — redundancy without data exchange (the paper's "portion of
+the dataset available at each worker").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["TaskPartition", "synthetic_tokens", "bigram_tokens",
+           "lm_task_batches", "regression_dataset", "regression_tasks"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskPartition:
+    """Static description of the round's data layout."""
+    n: int              # number of tasks / logical workers
+    global_batch: int   # sequences per round
+    seq_len: int
+    vocab: int
+    seed: int = 0
+    source: str = "uniform"   # uniform | bigram
+
+    @property
+    def task_batch(self) -> int:
+        assert self.global_batch % self.n == 0, \
+            f"global_batch {self.global_batch} not divisible by n={self.n}"
+        return self.global_batch // self.n
+
+
+def synthetic_tokens(key, batch: int, seq: int, vocab: int) -> jax.Array:
+    return jax.random.randint(key, (batch, seq), 0, vocab, jnp.int32)
+
+
+def bigram_tokens(key, batch: int, seq: int, vocab: int,
+                  temperature: float = 0.5,
+                  chain_vocab: int = 1024) -> jax.Array:
+    """Learnable synthetic source: tokens follow a fixed random bigram
+    chain, so an LM can actually reduce loss on it. The chain lives on the
+    first min(vocab, chain_vocab) ids — a full vocab x vocab transition
+    matrix would be O(V^2) memory (4 GB at V=32k)."""
+    vocab = min(vocab, chain_vocab)
+    tkey = jax.random.PRNGKey(1234)           # fixed chain, not per-batch
+    trans = jax.random.normal(tkey, (vocab, vocab)) / temperature
+    k0, k1 = jax.random.split(key)
+    first = jax.random.randint(k0, (batch,), 0, vocab)
+
+    def step(tok, k):
+        nxt = jax.random.categorical(k, trans[tok])
+        return nxt, nxt
+
+    keys = jax.random.split(k1, seq - 1)
+    _, rest = jax.lax.scan(step, first, keys)
+    return jnp.concatenate([first[None], rest], 0).T.astype(jnp.int32)
+
+
+def _task_key(part: TaskPartition, step: int, task: int):
+    k = jax.random.PRNGKey(part.seed)
+    k = jax.random.fold_in(k, step)
+    return jax.random.fold_in(k, task)
+
+
+def task_tokens(part: TaskPartition, step: int, task: int) -> jax.Array:
+    """Deterministic micro-batch of one task: (b, S+1) tokens (inputs +
+    next-token labels via shift)."""
+    key = _task_key(part, step, task)
+    gen = bigram_tokens if part.source == "bigram" else synthetic_tokens
+    return gen(key, part.task_batch, part.seq_len + 1, part.vocab)
+
+
+def lm_task_batches(part: TaskPartition, C: np.ndarray, step: int
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Slot-major batches for the TO matrix ``C`` (n, r):
+    returns (inputs (r, n, b, S), labels (r, n, b, S))."""
+    n, r = C.shape
+    assert n == part.n
+    # generate each distinct task once, then gather into slots
+    uniq = sorted({int(t) for t in C.reshape(-1)})
+    toks = {t: task_tokens(part, step, t) for t in uniq}
+    slots = jnp.stack([jnp.stack([toks[int(C[i, s])] for i in range(n)])
+                       for s in range(r)])          # (r, n, b, S+1)
+    return slots[..., :-1], slots[..., 1:]
+
+
+# ---------------- linear-regression scenario (paper Sec. VI) ----------------
+
+def regression_dataset(key, N: int, d: int, noise: float = 0.1
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Paper Sec. VI-C: X ~ N(0,1)^{N x d}; y_i = (x_i + z)^T u."""
+    kx, kz, ku = jax.random.split(key, 3)
+    X = jax.random.normal(kx, (N, d))
+    Z = noise * jax.random.normal(kz, (N, d))
+    u = jax.random.uniform(ku, (d,))
+    y = (X + Z) @ u
+    return X, y, u
+
+
+def regression_tasks(X: jax.Array, y: jax.Array, n: int
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Split rows into n equal task shards: (n, N/n, d), (n, N/n)."""
+    N, d = X.shape
+    b = N // n
+    return X[:n * b].reshape(n, b, d), y[:n * b].reshape(n, b)

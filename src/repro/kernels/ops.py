@@ -1,0 +1,44 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret=True`` is the default because this container has no TPU; on a
+real TPU runtime pass ``interpret=False`` (e.g. via config.use_pallas) and
+the same BlockSpecs compile to Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .gram_matvec import gram_matvec_pallas
+from .swa_attention import swa_attention_pallas
+from . import ref
+
+__all__ = ["gram_matvec", "swa_attention", "batched_gram_matvec"]
+
+
+@partial(jax.jit, static_argnames=("interpret", "block_d", "block_b"))
+def gram_matvec(X: jax.Array, theta: jax.Array, *, interpret: bool = True,
+                block_d: int = 256, block_b: int = 256) -> jax.Array:
+    """h(X) = X X^T theta via the Pallas kernel. X (d, b), theta (d,)."""
+    return gram_matvec_pallas(X, theta, interpret=interpret,
+                              block_d=block_d, block_b=block_b)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def batched_gram_matvec(Xs: jax.Array, theta: jax.Array, *,
+                        interpret: bool = True) -> jax.Array:
+    """vmapped over the task axis: Xs (n, d, b) -> (n, d)."""
+    return jax.vmap(lambda X: gram_matvec_pallas(X, theta,
+                                                 interpret=interpret))(Xs)
+
+
+@partial(jax.jit, static_argnames=("window", "interpret", "block_q",
+                                   "block_k"))
+def swa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, window: int,
+                  interpret: bool = True, block_q: int = 128,
+                  block_k: int = 128) -> jax.Array:
+    """Causal sliding-window flash attention. q/k/v (T, H, dh)."""
+    return swa_attention_pallas(q, k, v, window=window, interpret=interpret,
+                                block_q=block_q, block_k=block_k)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gram_matvec_ref", "swa_attention_ref"]
+
+
+def gram_matvec_ref(X: jax.Array, theta: jax.Array) -> jax.Array:
+    """The paper's per-task computation h(X_i) = X_i X_i^T theta,
+    X (d, b), theta (d,) -> (d,). Computed as X @ (X^T @ theta) — never
+    materializing the (d, d) Gram matrix."""
+    u = jnp.einsum("db,d->b", X.astype(jnp.float32),
+                   theta.astype(jnp.float32))
+    return jnp.einsum("db,b->d", X.astype(jnp.float32), u).astype(X.dtype)
+
+
+def swa_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                      window: int) -> jax.Array:
+    """Causal sliding-window attention. q/k/v (T, H, dh) -> (T, H, dh).
+    Position t attends to positions (t-window, t]."""
+    T, H, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    s = jnp.einsum("qhd,khd->hqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(T)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    ok = (kpos <= qpos) & (kpos > qpos - window)
+    s = jnp.where(ok[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,khd->qhd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

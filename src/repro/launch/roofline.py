@@ -1,0 +1,93 @@
+"""Roofline aggregation (deliverable (g)): read the dry-run JSON artifacts
+and emit the per-(arch x shape x mesh) table as markdown for EXPERIMENTS.md.
+
+  PYTHONPATH=src python -m repro.launch.roofline [--dir experiments/dryrun]
+      [--md experiments/roofline.md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from collections import defaultdict
+
+HEADER = ("| arch | shape | mesh | compute s | memory s | collective s | "
+          "dominant | HLO GFLOPs/dev | model GFLOPs/dev | useful | "
+          "bottleneck note |")
+SEP = "|" + "---|" * 11
+
+
+def _note(r) -> str:
+    ro = r["roofline"]
+    dom = ro["dominant"]
+    fb = r.get("meta", {}).get("fallbacks", [])
+    bits = []
+    if dom == "memory_s":
+        bits.append("HBM-traffic bound")
+    elif dom == "collective_s":
+        bits.append("ICI bound")
+    else:
+        bits.append("MXU bound")
+    if any("col" in f or "row" in f for f in fb):
+        bits.append(f"{len(fb)} replication fallbacks")
+    if any("kv-seq" in f for f in fb):
+        bits.append("seq-parallel KV cache")
+    return "; ".join(bits)
+
+
+def rows(dryrun_dir: str, mesh_filter=None):
+    out = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        base = os.path.basename(f)
+        if base.count("__") > 2:      # tagged variant (perf iteration)
+            continue
+        with open(f) as fh:
+            r = json.load(fh)
+        if r.get("skipped"):
+            continue
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        out.append(r)
+    return out
+
+
+def to_markdown(rs) -> str:
+    lines = [HEADER, SEP]
+    for r in sorted(rs, key=lambda x: (x["mesh"], x["arch"], x["shape"])):
+        ro = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {ro['compute_s']:.3e} | {ro['memory_s']:.3e} "
+            f"| {ro['collective_s']:.3e} "
+            f"| **{ro['dominant'].removesuffix('_s')}** "
+            f"| {r['flops_per_device'] / 1e9:.1f} "
+            f"| {ro['model_flops_per_device'] / 1e9:.1f} "
+            f"| {ro['useful_ratio']:.2f} | {_note(r)} |")
+    return "\n".join(lines)
+
+
+def summarize(rs) -> dict:
+    dom = defaultdict(int)
+    for r in rs:
+        dom[r["roofline"]["dominant"]] += 1
+    return dict(dom)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--md", default=None)
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args(argv)
+    rs = rows(args.dir, args.mesh)
+    md = to_markdown(rs)
+    print(md)
+    print("\ndominant-term counts:", summarize(rs))
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write(md + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,238 @@
+"""Rule-based parameter / cache / batch shardings with divisibility fallback
+(DESIGN.md §4).
+
+Params follow the Megatron tensor-parallel pattern on the ``model`` axis:
+column-parallel in-projections, row-parallel out-projections, vocab-parallel
+embeddings, expert-parallel MoE weight stacks. Any dim not divisible by the
+axis size is left replicated and the fallback is recorded for the roofline
+report.
+
+Decode caches: batch on the data axes; KV-head dim on ``model`` when
+divisible, else the sequence dim (sequence-parallel cache — how 32k/500k
+caches fit when kv-heads < axis size).
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..sharding import MeshCtx
+
+PyTree = Any
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def _div(dim: int, size: int) -> bool:
+    return size > 1 and dim % size == 0
+
+
+def param_spec(path: str, shape: Tuple[int, ...], ctx: MeshCtx,
+               fallbacks: Optional[List] = None) -> P:
+    """PartitionSpec for one parameter leaf (local shapes, no leading rep
+    axis — caller offsets for stacked segments)."""
+    m = ctx.model_axis
+    ms = ctx.model_size
+    nd = len(shape)
+
+    def col(io=-1):
+        """shard output (last) dim."""
+        if _div(shape[io], ms):
+            sp = [None] * nd
+            sp[io] = m
+            return P(*sp)
+        if fallbacks is not None:
+            fallbacks.append((path, shape, "col"))
+        return P(*([None] * nd))
+
+    def row(io=0):
+        if _div(shape[io], ms):
+            sp = [None] * nd
+            sp[io] = m
+            return P(*sp)
+        if fallbacks is not None:
+            fallbacks.append((path, shape, "row"))
+        return P(*([None] * nd))
+
+    last = path.rsplit("/", 2)[-2:]
+    leaf = path.rsplit("/", 1)[-1]
+
+    if path.endswith("embed") or leaf == "pos_embed":
+        return col(0) if "embed" == leaf.split("/")[-1] and nd == 2 else col(0)
+    if "lm_head" in path:
+        return col(-1) if leaf == "w" else col(0)
+    # MoE expert stacks (E, d, f)/(E, f, d): expert-parallel on E
+    if nd == 3 and ("w_gate" in path or "w_up" in path or "w_down" in path):
+        return row(0)
+    if "router" in path:
+        return P(*([None] * nd))
+    # attention / mla / general projections
+    if leaf == "w":
+        if any(k in path for k in ("wq/", "wk/", "wv/", "w_uq", "w_uk",
+                                   "w_gate", "w_up", "w_k/", "w_r/",
+                                   "w_v/", "w_g/", "in_proj", "w_lora_a",
+                                   "dt_proj")):
+            return col(-1)
+        if any(k in path for k in ("wo/", "w_down", "out_proj", "w_o/",
+                                   "w_lora_b", "x_proj")):
+            return row(0)
+        if any(k in path for k in ("w_dq", "w_dkv", "w_kr", "frontend")):
+            return P(*([None] * nd))
+        return P(*([None] * nd))
+    if leaf == "b":
+        if any(k in path for k in ("wq/", "wk/", "wv/", "in_proj",
+                                   "dt_proj")):
+            return col(0) if nd == 1 else P(*([None] * nd))
+        return P(*([None] * nd))
+    # mamba internals sharded on d_inner
+    if leaf in ("conv_w", "conv_b", "A_log", "D"):
+        io = 0 if leaf in ("conv_b", "A_log", "D") else 1
+        return col(io) if leaf != "conv_w" else col(1)
+    # rwkv head-structured leaves (H, dh)
+    if leaf == "u" or "ln_out" in path:
+        return row(0)
+    return P(*([None] * nd))
+
+
+def params_shardings(param_specs: PyTree, ctx: MeshCtx,
+                     fallbacks: Optional[List] = None) -> PyTree:
+    """NamedSharding pytree for the model params (abstract or concrete).
+    Leaves under stacked segment/encoder containers get a leading None for
+    the rep axis."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(param_specs)
+    out = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        shape = tuple(leaf.shape)
+        stacked = ps.startswith("segments") or "blocks" in ps
+        if stacked and len(shape) >= 1:
+            inner = param_spec(ps, shape[1:], ctx, fallbacks)
+            spec = P(*((None,) + tuple(inner)))
+        else:
+            spec = param_spec(ps, shape, ctx, fallbacks)
+        out.append(NamedSharding(ctx.mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _data_spec_entry(ctx: MeshCtx):
+    return ctx.data_axes if len(ctx.data_axes) > 1 else ctx.data_axes[0]
+
+
+def zero1_shardings(shapes: PyTree, base: PyTree, ctx: MeshCtx) -> PyTree:
+    """ZeRO-1 (§Perf): optimizer-state leaves additionally shard their
+    first still-unsharded divisible dim over the DATA axes (the state is
+    only touched at the optimizer step, so the gather cost is one
+    reduce-scatter/all-gather pair per step — the memory win is
+    data_size x)."""
+    d = _data_spec_entry(ctx)
+    ds = ctx.data_size
+
+    def one(shape_leaf, sh):
+        nd = len(shape_leaf.shape)
+        spec = list(sh.spec) + [None] * (nd - len(sh.spec))
+        for i, dim in enumerate(shape_leaf.shape):
+            if spec[i] is None and dim % ds == 0 and dim >= ds:
+                spec[i] = d
+                return NamedSharding(ctx.mesh, P(*spec))
+        return sh
+
+    return jax.tree_util.tree_map(one, shapes, base)
+
+
+def batch_shardings(batch_specs: PyTree, ctx: MeshCtx, *,
+                    slot_major: bool = False) -> PyTree:
+    """Inputs: shard the batch dim over the data axes. Slot-major straggler
+    batches (r, n, b, ...) shard the WORKER dim (axis 1) — the n logical
+    workers are the data-parallel shard groups."""
+    d = _data_spec_entry(ctx)
+    dsize = ctx.data_size
+
+    def one(leaf):
+        shape = tuple(leaf.shape)
+        if slot_major:
+            if len(shape) >= 2 and shape[1] % dsize == 0:
+                return NamedSharding(ctx.mesh,
+                                     P(*((None, d) + (None,) *
+                                         (len(shape) - 2))))
+            return NamedSharding(ctx.mesh, P(*([None] * len(shape))))
+        if shape and shape[0] % dsize == 0:
+            return NamedSharding(ctx.mesh,
+                                 P(*((d,) + (None,) * (len(shape) - 1))))
+        return NamedSharding(ctx.mesh, P(*([None] * len(shape))))
+
+    return jax.tree_util.tree_map(one, batch_specs)
+
+
+def cache_shardings(cache_specs: PyTree, ctx: MeshCtx,
+                    fallbacks: Optional[List] = None) -> PyTree:
+    """Decode caches. Leaves are stacked (reps, ...) under segments.
+    Heuristic per leaf kind (after the rep axis):
+      k/v   (B, K, S, dh): B->data; K->model if divisible else S->model
+      c_kv  (B, S, R) / k_rope (B, S, rd): B->data; S->model (if divisible)
+      ssm h (B, di, N): B->data, di->model; conv (B, w, di): di->model
+      rwkv S (B, H, dh, dh): B->data, H->model
+      xk/xv (B, H, T, dh): B->data, H->model
+      scalars (pos): replicated
+    If B is not divisible by the data size (e.g. batch 1), the sequence dim
+    is sharded over (data x model) when possible.
+    """
+    d = _data_spec_entry(ctx)
+    dsize, msize = ctx.data_size, ctx.model_size
+    m = ctx.model_axis
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_specs)
+    out = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        shape = tuple(leaf.shape)
+        stacked = ps.startswith("segments")
+        inner = shape[1:] if stacked else shape
+        leafname = ps.rsplit("/", 1)[-1]
+        spec: list = [None] * len(inner)
+        if len(inner) == 0:
+            out.append(NamedSharding(ctx.mesh, P(*([None] * len(shape)))))
+            continue
+        B = inner[0]
+        b_ok = B % dsize == 0
+        if b_ok:
+            spec[0] = d
+        if leafname in ("k", "v", "xk", "xv") and len(inner) == 4:
+            K, S = inner[1], inner[2]
+            if K % msize == 0:
+                spec[1] = m
+            elif S % msize == 0:
+                spec[2] = m
+                if fallbacks is not None:
+                    fallbacks.append((ps, shape, "kv-seq-parallel"))
+            if not b_ok and S % (dsize * msize) == 0 and spec[2] is None:
+                spec[2] = (d, m) if isinstance(d, str) else tuple(
+                    list(d if isinstance(d, tuple) else (d,)) + [m])
+            elif not b_ok and spec[2] == m and S % (dsize * msize) == 0:
+                spec[2] = tuple((list(d) if isinstance(d, tuple) else [d])
+                                + [m])
+        elif leafname in ("c_kv", "k_rope") and len(inner) == 3:
+            S = inner[1]
+            if b_ok and S % msize == 0:
+                spec[1] = m
+            elif not b_ok and S % (dsize * msize) == 0:
+                spec[1] = tuple((list(d) if isinstance(d, tuple) else [d])
+                                + [m])
+            elif S % msize == 0:
+                spec[1] = m
+        elif leafname == "h" and len(inner) == 3:
+            if inner[1] % msize == 0:
+                spec[1] = m
+        elif leafname == "conv" and len(inner) == 3:
+            if inner[2] % msize == 0:
+                spec[2] = m
+        elif leafname == "S" and len(inner) == 4:
+            if inner[1] % msize == 0:
+                spec[1] = m
+        full = P(*(((None,) if stacked else ()) + tuple(spec)))
+        out.append(NamedSharding(ctx.mesh, full))
+    return jax.tree_util.tree_unflatten(treedef, out)

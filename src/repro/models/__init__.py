@@ -1,0 +1,3 @@
+from .config import ModelConfig, LayerSpec, layer_specs, find_period
+from .model import (init_params, forward, encode, init_cache, plan_segments,
+                    num_params, active_params, Segment)

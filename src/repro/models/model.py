@@ -1,0 +1,459 @@
+"""Model assembly: periodic scan-over-layers core + unrolled tail segments.
+
+The per-layer spec list (config.layer_specs) is compressed into segments
+(config.find_period): the periodic core is applied with ``lax.scan`` over
+stacked params (HLO stays small for 80-layer models); any tail is split into
+runs of identical specs, each its own scanned stack.
+
+Param pytree:
+  {"embed": (V_pad, d), "segments": [seg_params...], "final_norm": ...,
+   "lm_head": {...}, optional "pos_embed", "frontend_proj", "encoder": {...}}
+Cache pytree mirrors the segment structure plus a global "pos" scalar.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..sharding import DATA, MODEL, shard
+from . import layers as L
+from .config import LayerSpec, ModelConfig, find_period, layer_specs
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    specs: Tuple[LayerSpec, ...]   # one period of layer specs
+    reps: int                      # scan length
+
+
+def _run_segments(specs) -> List[Segment]:
+    out: List[Segment] = []
+    i = 0
+    while i < len(specs):
+        j = i
+        while j < len(specs) and specs[j] == specs[i]:
+            j += 1
+        out.append(Segment((specs[i],), j - i))
+        i = j
+    return out
+
+
+def plan_segments(cfg: ModelConfig) -> Tuple[Segment, ...]:
+    """Periodic core + run-length tail; falls back to pure run-length
+    segmentation when that yields fewer distinct layer bodies (e.g.
+    DeepSeek's 3-dense-prefix + 58-MoE stack)."""
+    specs = layer_specs(cfg)
+    p, reps = find_period(specs)
+    periodic: List[Segment] = [Segment(specs[:p], reps)]
+    periodic += _run_segments(list(specs[p * reps:]))
+    runs = _run_segments(list(specs))
+    cost_p = sum(len(s.specs) for s in periodic)
+    cost_r = sum(len(s.specs) for s in runs)
+    return tuple(runs) if cost_r < cost_p else tuple(periodic)
+
+
+# ---------------------------------------------------------------------------
+# single transformer block
+# ---------------------------------------------------------------------------
+
+def _mixer_init(key, cfg: ModelConfig, spec: LayerSpec) -> PyTree:
+    if spec.mixer in ("gqa", "swa"):
+        return L.gqa_init(key, cfg)
+    if spec.mixer == "mla":
+        return L.mla_init(key, cfg)
+    if spec.mixer == "mamba":
+        return L.mamba_init(key, cfg)
+    if spec.mixer == "rwkv6":
+        return L.rwkv6_init(key, cfg)
+    raise ValueError(spec.mixer)
+
+
+def _ffn_init(key, cfg: ModelConfig, spec: LayerSpec) -> PyTree:
+    if spec.ffn == "swiglu":
+        return L.swiglu_init(key, cfg)
+    if spec.ffn == "gelu":
+        return L.gelu_mlp_init(key, cfg)
+    if spec.ffn == "cmix":
+        return L.cmix_init(key, cfg)
+    if spec.ffn == "moe":
+        return L.moe_init(key, cfg)
+    raise ValueError(spec.ffn)
+
+
+def block_init(key, cfg: ModelConfig, spec: LayerSpec) -> PyTree:
+    ks = jax.random.split(key, 4)
+    p = {"norm1": L.norm_init(cfg), "mixer": _mixer_init(ks[0], cfg, spec),
+         "norm2": L.norm_init(cfg), "ffn": _ffn_init(ks[1], cfg, spec)}
+    if spec.cross_attn:
+        p["norm_x"] = L.norm_init(cfg)
+        p["xattn"] = L.gqa_init(ks[2], cfg)
+    return p
+
+
+def block_apply(p: PyTree, cfg: ModelConfig, spec: LayerSpec, x: Array, *,
+                positions: Array, cache: Optional[PyTree] = None,
+                causal: bool = True, use_rope: bool = True,
+                enc_out: Optional[Array] = None
+                ) -> Tuple[Array, Optional[PyTree], Array]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = dict(cache) if cache is not None else None
+    h = L.norm(cfg, p["norm1"], x)
+    if spec.mixer in ("gqa", "swa"):
+        window = cfg.sliding_window if spec.mixer == "swa" else None
+        mc = None if cache is None else cache["attn"]
+        h, mc_new = L.gqa_apply(p["mixer"], cfg, h, window=window,
+                                positions=positions, cache=mc,
+                                use_rope=use_rope, causal=causal)
+        if new_cache is not None:
+            new_cache["attn"] = mc_new
+    elif spec.mixer == "mla":
+        mc = None if cache is None else cache["attn"]
+        h, mc_new = L.mla_apply(p["mixer"], cfg, h, positions=positions,
+                                cache=mc)
+        if new_cache is not None:
+            new_cache["attn"] = mc_new
+    elif spec.mixer == "mamba":
+        st = None if cache is None else cache["ssm"]
+        h, st_new = L.mamba_apply(p["mixer"], cfg, h, state=st)
+        if new_cache is not None:
+            new_cache["ssm"] = st_new
+    elif spec.mixer == "rwkv6":
+        st = None if cache is None else cache["ssm"]
+        h, st_new = L.rwkv6_apply(p["mixer"], cfg, h, state=st)
+        if new_cache is not None:
+            new_cache["ssm"] = st_new
+    else:
+        raise ValueError(spec.mixer)
+    x = x + h
+
+    if spec.cross_attn:
+        hx = L.norm(cfg, p["norm_x"], x)
+        if enc_out is not None:
+            K, dh, B = cfg.n_kv_heads, cfg.head_dim, x.shape[0]
+            pa = p["xattn"]
+            xk = L.dense(pa["wk"], enc_out).reshape(
+                B, -1, K, dh).transpose(0, 2, 1, 3)
+            xv = L.dense(pa["wv"], enc_out).reshape(
+                B, -1, K, dh).transpose(0, 2, 1, 3)
+            xk = L.repeat_kv(xk, cfg.n_heads // K)
+            xv = L.repeat_kv(xv, cfg.n_heads // K)
+            if new_cache is not None:
+                new_cache["xk"], new_cache["xv"] = xk, xv
+        elif cache is not None:
+            xk, xv = cache["xk"], cache["xv"]
+        else:
+            raise ValueError("cross-attention needs enc_out or cached KV")
+        hx, _ = L.gqa_apply(p["xattn"], cfg, hx, xattn_kv=(xk, xv),
+                            use_rope=False)
+        x = x + hx
+
+    h = L.norm(cfg, p["norm2"], x)
+    if spec.ffn == "swiglu":
+        h = L.swiglu_apply(p["ffn"], h)
+    elif spec.ffn == "gelu":
+        h = L.gelu_mlp_apply(p["ffn"], h)
+    elif spec.ffn == "cmix":
+        prev = None if cache is None else cache["cmix_prev"]
+        h, last = L.cmix_apply(p["ffn"], h, prev=prev)
+        if new_cache is not None:
+            new_cache["cmix_prev"] = last
+    elif spec.ffn == "moe":
+        h, aux = L.moe_apply(p["ffn"], cfg, h)
+    x = x + h
+    return x, new_cache, aux
+
+
+def block_cache_init(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                     max_len: int) -> PyTree:
+    c: dict = {}
+    if spec.mixer in ("gqa", "swa"):
+        c["attn"] = L.gqa_cache_init(
+            cfg, batch, max_len,
+            window=cfg.sliding_window if spec.mixer == "swa" else None)
+    elif spec.mixer == "mla":
+        c["attn"] = L.mla_cache_init(cfg, batch, max_len)
+    elif spec.mixer == "mamba":
+        c["ssm"] = L.mamba_state_init(cfg, batch)
+    elif spec.mixer == "rwkv6":
+        c["ssm"] = L.rwkv6_state_init(cfg, batch)
+    if spec.ffn == "cmix":
+        c["cmix_prev"] = jnp.zeros((batch, cfg.d_model),
+                                   jnp.dtype(cfg.dtype))
+    if spec.cross_attn:
+        dh = cfg.head_dim
+        c["xk"] = jnp.zeros((batch, cfg.n_heads, cfg.encoder_seq, dh),
+                            jnp.dtype(cfg.dtype))
+        c["xv"] = jnp.zeros((batch, cfg.n_heads, cfg.encoder_seq, dh),
+                            jnp.dtype(cfg.dtype))
+    return c
+
+
+# ---------------------------------------------------------------------------
+# whole model
+# ---------------------------------------------------------------------------
+
+def _sinusoid(seq: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, jnp.float32) * (-math.log(1e4) / d))
+    pe = jnp.zeros((seq, d))
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+def init_params(key, cfg: ModelConfig) -> PyTree:
+    keys = jax.random.split(key, 8)
+    V = cfg.padded_vocab
+    pdt = jnp.dtype(cfg.param_dtype)
+    emb_scale = 1.0 / math.sqrt(cfg.d_model)
+    params: dict = {
+        "embed": (jax.random.normal(keys[0], (V, cfg.d_model), jnp.float32)
+                  * emb_scale).astype(pdt),
+        "final_norm": L.norm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(keys[1], cfg.d_model, V, dtype=pdt)
+    segs = plan_segments(cfg)
+    seg_params = []
+    kseg = jax.random.split(keys[2], len(segs))
+    for seg, ks in zip(segs, kseg):
+        def one_rep(k):
+            kk = jax.random.split(k, len(seg.specs))
+            return tuple(block_init(kk[j], cfg, seg.specs[j])
+                         for j in range(len(seg.specs)))
+        reps_keys = jax.random.split(ks, seg.reps)
+        seg_params.append(jax.vmap(one_rep)(reps_keys))
+    params["segments"] = seg_params
+
+    if cfg.arch_type == "audio":
+        params["pos_embed"] = (jax.random.normal(
+            keys[3], (cfg.max_seq_len, cfg.d_model), jnp.float32) * 0.01
+        ).astype(pdt)
+    if cfg.frontend:
+        params["frontend_proj"] = L.dense_init(
+            keys[4], cfg.frontend_dim, cfg.d_model, bias=True, dtype=pdt)
+    if cfg.encoder_layers:
+        enc_spec = LayerSpec(mixer="gqa", ffn="gelu", cross_attn=False)
+        def enc_rep(k):
+            return (block_init(k, cfg, enc_spec),)
+        ek = jax.random.split(keys[5], cfg.encoder_layers)
+        params["encoder"] = {
+            "blocks": jax.vmap(enc_rep)(ek),
+            "final_norm": L.norm_init(cfg),
+        }
+    return params
+
+
+def _apply_segments(params: PyTree, cfg: ModelConfig, x: Array, *,
+                    positions: Array, cache: Optional[PyTree],
+                    causal: bool = True, use_rope: bool = True,
+                    enc_out: Optional[Array] = None
+                    ) -> Tuple[Array, Optional[PyTree], Array]:
+    segs = plan_segments(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_seg_caches: list = []
+    for si, (seg, sp) in enumerate(zip(segs, params["segments"])):
+        seg_cache = None if cache is None else cache["segments"][si]
+
+        if seg_cache is None:
+            def body(xc, p_rep, _seg=seg):
+                aux_rep = jnp.zeros((), jnp.float32)
+                for j, spec in enumerate(_seg.specs):
+                    xc, _, aux_j = block_apply(
+                        p_rep[j], cfg, spec, xc, positions=positions,
+                        cache=None, causal=causal, use_rope=use_rope,
+                        enc_out=enc_out)
+                    aux_rep = aux_rep + aux_j
+                return xc, aux_rep
+
+            body_fn = jax.checkpoint(body) if cfg.remat else body
+            if cfg.scan_layers:
+                x, auxs = lax.scan(body_fn, x, sp)
+            else:
+                aux_list = []
+                for rep_i in range(seg.reps):
+                    p_i = jax.tree_util.tree_map(lambda a: a[rep_i], sp)
+                    x, a_i = body_fn(x, p_i)
+                    aux_list.append(a_i)
+                auxs = jnp.stack(aux_list)
+        else:
+            def body_c(xc, rep, _seg=seg):
+                p_rep, c_rep = rep
+                aux_rep = jnp.zeros((), jnp.float32)
+                new_c = []
+                for j, spec in enumerate(_seg.specs):
+                    xc, cj_new, aux_j = block_apply(
+                        p_rep[j], cfg, spec, xc, positions=positions,
+                        cache=c_rep[j], causal=causal, use_rope=use_rope,
+                        enc_out=enc_out)
+                    aux_rep = aux_rep + aux_j
+                    new_c.append(cj_new)
+                return xc, (tuple(new_c), aux_rep)
+
+            body_fn = jax.checkpoint(body_c) if cfg.remat else body_c
+            if cfg.scan_layers:
+                x, (new_c, auxs) = lax.scan(body_fn, x, (sp, seg_cache))
+            else:
+                nc_list, aux_list = [], []
+                for rep_i in range(seg.reps):
+                    rep = jax.tree_util.tree_map(lambda a: a[rep_i],
+                                                 (sp, seg_cache))
+                    x, (nc_i, a_i) = body_fn(x, rep)
+                    nc_list.append(nc_i)
+                    aux_list.append(a_i)
+                new_c = jax.tree_util.tree_map(
+                    lambda *ls: jnp.stack(ls), *nc_list)
+                auxs = jnp.stack(aux_list)
+            new_seg_caches.append(new_c)
+        aux_total = aux_total + auxs.sum()
+    new_cache = None if cache is None else {"segments": new_seg_caches,
+                                            "pos": cache["pos"] +
+                                            x.shape[1]}
+    return x, new_cache, aux_total
+
+
+def encode(params: PyTree, cfg: ModelConfig, frames: Array) -> Array:
+    """Whisper-style encoder over precomputed frame embeddings
+    (B, T_enc, frontend_dim) -> (B, T_enc, d)."""
+    x = L.dense(params["frontend_proj"], frames.astype(jnp.dtype(cfg.dtype)))
+    x = x + _sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+    enc_spec = LayerSpec(mixer="gqa", ffn="gelu", cross_attn=False)
+
+    def body(xc, p_rep):
+        out, _, _ = block_apply(p_rep[0], cfg, enc_spec, xc,
+                                positions=jnp.arange(xc.shape[1])[None],
+                                causal=False, use_rope=False)
+        return out, None
+
+    if cfg.scan_layers:
+        x, _ = lax.scan(body, x, params["encoder"]["blocks"])
+    else:
+        for rep_i in range(cfg.encoder_layers):
+            p_i = jax.tree_util.tree_map(lambda a: a[rep_i],
+                                         params["encoder"]["blocks"])
+            x, _ = body(x, p_i)
+    return L.norm(cfg, params["encoder"]["final_norm"], x)
+
+
+def forward(params: PyTree, cfg: ModelConfig, tokens: Array, *,
+            embeds: Optional[Array] = None,
+            enc_frames: Optional[Array] = None,
+            cache: Optional[PyTree] = None
+            ) -> Tuple[Array, Array, Optional[PyTree]]:
+    """Returns (logits (B, T, V_pad), aux_loss, new_cache).
+
+    tokens (B, T_txt); ``embeds`` (B, P, frontend_dim) stub modality tokens
+    prepended (VLM / early fusion); ``enc_frames`` triggers the encoder and
+    requires cross-attention layers (whisper) — its KV is (re)computed and
+    stored in the cache when one is provided.
+    """
+    dt = jnp.dtype(cfg.dtype)
+    B, Tt = tokens.shape
+    x = params["embed"][tokens].astype(dt)
+    x = shard(x, DATA, None, None, note="embed")
+    if embeds is not None:
+        pe = L.dense(params["frontend_proj"], embeds.astype(dt))
+        x = jnp.concatenate([pe, x], axis=1)
+    T = x.shape[1]
+    pos0 = cache["pos"] if cache is not None else 0
+    positions = pos0 + jnp.arange(T)[None, :]
+    if cfg.arch_type == "audio":
+        pe = lax.dynamic_slice_in_dim(params["pos_embed"], pos0, T, 0) \
+            if cache is not None else params["pos_embed"][:T]
+        x = x + pe.astype(dt)[None]
+
+    enc_out = None
+    if enc_frames is not None and cfg.encoder_layers:
+        enc_out = encode(params, cfg, enc_frames)
+
+    use_rope = cfg.arch_type != "audio"
+    x, new_cache, aux = _apply_segments(params, cfg, x, positions=positions,
+                                        cache=cache, causal=True,
+                                        use_rope=use_rope, enc_out=enc_out)
+    x = L.norm(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].astype(dt).T
+    else:
+        logits = L.dense(params["lm_head"], x)
+    logits = shard(logits, DATA, None, MODEL, note="logits")
+    # mask padded vocab tail
+    if cfg.padded_vocab != cfg.vocab_size:
+        neg = jnp.asarray(-1e9, logits.dtype)
+        mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(mask[None, None, :], neg, logits)
+    return logits, aux, new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+    segs = plan_segments(cfg)
+    seg_caches = []
+    for seg in segs:
+        one = tuple(block_cache_init(cfg, spec, batch, max_len)
+                    for spec in seg.specs)
+        seg_caches.append(jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (seg.reps,) + l.shape), one))
+    return {"segments": seg_caches, "pos": jnp.zeros((), jnp.int32)}
+
+
+def num_params(params: PyTree) -> int:
+    return sum(int(jnp.size(l)) for l in jax.tree_util.tree_leaves(params))
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Approximate ACTIVE parameter count (MoE counts only routed-in
+    experts) — used for MODEL_FLOPS = 6*N_active*D in the roofline."""
+    d, V = cfg.d_model, cfg.padded_vocab
+    specs = layer_specs(cfg)
+    total = V * d * (1 if cfg.tie_embeddings else 2)
+    for s in specs:
+        if s.mixer in ("gqa", "swa"):
+            dh = cfg.head_dim
+            total += d * dh * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+        elif s.mixer == "mla":
+            qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+            total += d * cfg.kv_lora_rank
+            total += cfg.kv_lora_rank * cfg.n_heads * (cfg.qk_nope_dim +
+                                                       cfg.v_head_dim)
+            total += d * cfg.qk_rope_dim
+            if cfg.q_lora_rank:
+                total += d * cfg.q_lora_rank + cfg.q_lora_rank * cfg.n_heads * qk
+            else:
+                total += d * cfg.n_heads * qk
+            total += cfg.n_heads * cfg.v_head_dim * d
+        elif s.mixer == "mamba":
+            di = cfg.d_inner
+            dt_rank = max(1, math.ceil(d / 16))
+            total += d * 2 * di + cfg.d_conv * di + \
+                di * (dt_rank + 2 * cfg.d_state) + dt_rank * di + di * d
+        elif s.mixer == "rwkv6":
+            total += 6 * d * d
+        if s.cross_attn:
+            dh = cfg.head_dim
+            total += d * dh * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+        if s.ffn == "swiglu":
+            total += 3 * d * cfg.d_ff
+        elif s.ffn == "gelu":
+            total += 2 * d * cfg.d_ff
+        elif s.ffn == "cmix":
+            total += 2 * d * cfg.d_ff + d * d
+        elif s.ffn == "moe":
+            f = cfg.d_ff_expert or cfg.d_ff
+            total += 3 * d * f * cfg.experts_per_token
+            total += 3 * d * f * cfg.n_shared_experts
+            total += d * cfg.n_experts  # router
+    # encoder
+    if cfg.encoder_layers:
+        dh = cfg.head_dim
+        per = d * dh * (cfg.n_heads * 2 + cfg.n_kv_heads * 2) + 2 * d * cfg.d_ff
+        total += cfg.encoder_layers * per
+    return total

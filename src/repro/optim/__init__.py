@@ -1,0 +1,3 @@
+from .optimizers import (Optimizer, sgd, momentum, adam, adamw,
+                         clip_by_global_norm, global_norm,
+                         cosine_schedule, constant_schedule)

@@ -1,0 +1,138 @@
+"""Hand-rolled pytree optimizers (no optax in the dependency closure).
+
+API mirrors optax: ``opt = adamw(lr); state = opt.init(params);
+updates, state = opt.update(grads, state, params); params = apply(params,
+updates)`` where updates are *deltas to add*.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(peak: float, total_steps: int, warmup: int = 0,
+                    floor: float = 0.0) -> Schedule:
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0, 1)
+        cos = floor + (peak - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return f
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float
+                        ) -> Tuple[PyTree, jnp.ndarray]:
+    g = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree_util.tree_map(lambda l: l * scale, tree), g
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., Tuple[PyTree, PyTree]]  # (grads, state, params)
+
+    def apply(self, params: PyTree, updates: PyTree) -> PyTree:
+        return jax.tree_util.tree_map(
+            lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+            params, updates)
+
+
+def _sched(lr) -> Schedule:
+    return lr if callable(lr) else constant_schedule(lr)
+
+
+def sgd(lr) -> Optimizer:
+    lr = _sched(lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        step = state["step"]
+        s = lr(step)
+        upd = jax.tree_util.tree_map(
+            lambda g: -s * g.astype(jnp.float32), grads)
+        return upd, {"step": step + 1}
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    lr = _sched(lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params=None):
+        step = state["step"]
+        s = lr(step)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: beta * m + g.astype(jnp.float32),
+            state["mu"], grads)
+        if nesterov:
+            upd = jax.tree_util.tree_map(
+                lambda m, g: -s * (beta * m + g.astype(jnp.float32)),
+                mu, grads)
+        else:
+            upd = jax.tree_util.tree_map(lambda m: -s * m, mu)
+        return upd, {"step": step + 1, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8
+         ) -> Optimizer:
+    return adamw(lr, b1=b1, b2=b2, eps=eps, weight_decay=0.0)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01) -> Optimizer:
+    lr = _sched(lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree_util.tree_map(z, params),
+                "v": jax.tree_util.tree_map(z, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        s = lr(step - 1)
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) *
+            jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m_, v_, p):
+            mhat = m_ / bc1
+            vhat = v_ / bc2
+            return -s * (mhat / (jnp.sqrt(vhat) + eps)
+                         + weight_decay * p.astype(jnp.float32))
+
+        updates = jax.tree_util.tree_map(upd, m, v, params)
+        return updates, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)

@@ -1,0 +1,115 @@
+"""Mesh context + sharding-constraint helpers shared by models and launch.
+
+``MeshCtx`` carries the axis names so model code never hard-codes a mesh
+shape; on a single device (smoke tests) the context is ``None`` and every
+helper becomes a no-op.
+
+Divisibility fallback (DESIGN.md §4): a dim is only sharded if the axis size
+divides it — otherwise that dim stays replicated and the event is recorded
+in ``MeshCtx.fallbacks`` for the roofline report.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["MeshCtx", "current_mesh_ctx", "mesh_context", "shard", "axis_size",
+           "DATA", "MODEL", "BOTH"]
+
+DATA = "__data__"    # placeholder resolved to the ctx's (possibly stacked) data axes
+MODEL = "__model__"  # placeholder resolved to the ctx's model axis
+BOTH = "__both__"    # data axes + model axis (fully-sharded dim)
+
+_state = threading.local()
+
+
+@dataclasses.dataclass
+class MeshCtx:
+    mesh: Mesh
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: Optional[str] = "model"   # None = pure data parallelism
+    fallbacks: list = dataclasses.field(default_factory=list)
+
+    @property
+    def data_size(self) -> int:
+        out = 1
+        for a in self.data_axes:
+            out *= self.mesh.shape[a]
+        return out
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape[self.model_axis] if self.model_axis else 1
+
+    def resolve(self, spec_entry):
+        if spec_entry == DATA:
+            return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+        if spec_entry == MODEL:
+            return self.model_axis
+        if spec_entry == BOTH:
+            if self.model_axis is None:
+                return self.resolve(DATA)
+            return tuple(self.data_axes) + (self.model_axis,)
+        return spec_entry
+
+    def spec(self, *entries) -> P:
+        return P(*[self.resolve(e) for e in entries])
+
+
+def current_mesh_ctx() -> Optional[MeshCtx]:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def mesh_context(ctx: Optional[MeshCtx]):
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _state.ctx = prev
+
+
+def axis_size(entry) -> int:
+    """Size of a placeholder axis under the current ctx (1 if no mesh)."""
+    ctx = current_mesh_ctx()
+    if ctx is None:
+        return 1
+    ax = ctx.resolve(entry)
+    if ax is None:
+        return 1
+    if isinstance(ax, (tuple, list)):
+        n = 1
+        for a in ax:
+            n *= ctx.mesh.shape[a]
+        return n
+    return ctx.mesh.shape[ax]
+
+
+def shard(x: jax.Array, *entries, note: str = "") -> jax.Array:
+    """Apply a sharding constraint with divisibility fallback. ``entries``
+    use DATA/MODEL placeholders or literal axis names / None."""
+    ctx = current_mesh_ctx()
+    if ctx is None:
+        return x
+    resolved = []
+    for dim, e in enumerate(entries):
+        if e is None:
+            resolved.append(None)
+            continue
+        ax = ctx.resolve(e)
+        size = axis_size(e)
+        if size <= 1:
+            resolved.append(None)
+        elif x.shape[dim] % size != 0:
+            ctx.fallbacks.append((note or "tensor", dim, x.shape[dim], size))
+            resolved.append(None)
+        else:
+            resolved.append(ax)
+    sh = NamedSharding(ctx.mesh, P(*resolved))
+    return jax.lax.with_sharding_constraint(x, sh)

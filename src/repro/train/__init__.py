@@ -1,0 +1,2 @@
+from .steps import (TrainState, make_train_step, make_straggler_train_step,
+                    make_serve_step, lm_loss, init_train_state)

@@ -1,0 +1,184 @@
+"""Train / serve steps.
+
+``make_straggler_train_step`` is the paper's technique as a first-class
+feature: one SGD iteration = one scheduling round. The n logical workers
+(data-parallel shard groups) each evaluate their r TO-assigned micro-batch
+gradients *sequentially* (lax.scan over slots, mirroring the paper's
+sequential computation); the first-k-distinct winner mask (repro.core)
+weights the per-(worker, slot) losses so the resulting gradient equals the
+unbiased eq.-(61) estimator. The round's virtual completion time is a step
+metric.
+
+The weighted-loss trick avoids materializing per-worker gradient pytrees:
+    grad( sum_{i,s} w[i,s] * loss_{i,s} / k ) = (1/k) sum w[i,s] g_{i,s}.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.aggregator import RoundSpec, StragglerAggregator
+from ..core.completion import first_k_distinct_mask, slot_arrival_times
+from ..models import ModelConfig, forward, init_params
+from ..optim import Optimizer, clip_by_global_norm
+from ..sharding import DATA, shard
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: PyTree
+    opt_state: PyTree
+    step: jax.Array
+
+    def tree_flatten(self):
+        return (self.params, self.opt_state, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState, TrainState.tree_flatten, TrainState.tree_unflatten)
+
+
+def init_train_state(key, cfg: ModelConfig, opt: Optimizer) -> TrainState:
+    params = init_params(key, cfg)
+    return TrainState(params=params, opt_state=opt.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def lm_loss_per_seq(params: PyTree, cfg: ModelConfig, tokens: jax.Array,
+                    labels: jax.Array, *, embeds=None, enc_frames=None
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Per-sequence next-token cross-entropy (B,); returns (losses, aux)."""
+    logits, aux, _ = forward(params, cfg, tokens, embeds=embeds,
+                             enc_frames=enc_frames)
+    if embeds is not None:
+        logits = logits[:, embeds.shape[1]:]      # loss on text positions
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    return -ll.mean(axis=-1), aux
+
+
+def lm_loss(params: PyTree, cfg: ModelConfig, tokens: jax.Array,
+            labels: jax.Array, *, embeds=None, enc_frames=None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Mean next-token cross-entropy; returns (loss, moe_aux)."""
+    losses, aux = lm_loss_per_seq(params, cfg, tokens, labels,
+                                  embeds=embeds, enc_frames=enc_frames)
+    return losses.mean(), aux
+
+
+def make_train_step(cfg: ModelConfig, opt: Optimizer, *,
+                    clip_norm: float = 1.0,
+                    loss_fn: Optional[Callable] = None):
+    """Plain synchronous data-parallel step (baseline, k = n, r = 1)."""
+    loss_fn = loss_fn or lm_loss
+
+    def step(state: TrainState, tokens, labels, extras=None):
+        extras = extras or {}
+
+        def total(p):
+            l, aux = loss_fn(p, cfg, tokens, labels, **extras)
+            return l + cfg.router_aux_coef * aux, (l, aux)
+
+        (ltot, (l, aux)), grads = jax.value_and_grad(total, has_aux=True)(
+            state.params)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = opt.update(grads, state.opt_state, state.params)
+        params = opt.apply(state.params, updates)
+        metrics = {"loss": l, "aux": aux, "grad_norm": gnorm}
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    return step
+
+
+def make_straggler_train_step(cfg: ModelConfig, opt: Optimizer,
+                              round_spec: RoundSpec, delay_model, *,
+                              clip_norm: float = 1.0,
+                              scan_slots: bool = True):
+    """The paper's scheduled round as a jittable SGD step.
+
+    Inputs per step: ``slot_tokens``/``slot_labels`` (r, n, b, S) from
+    ``repro.data.lm_task_batches``, an rng for the delay realization, and
+    optionally ``extras`` (dict of slot-major modality inputs, e.g.
+    ``enc_frames`` (r, n, b, T_enc, D) for whisper). Returns metrics incl.
+    the round's virtual completion time (eq. 6) and the winner count.
+
+    Layout: the worker axis is FLATTENED into the batch (worker-major), so
+    each data shard holds exactly its workers' sequences and the model
+    forward is one plain SPMD call per slot — per-sequence losses are then
+    weighted by the worker's first-k-distinct mask (eq. 61). ``scan_slots``
+    mirrors the paper's sequential per-slot execution; set False to unroll
+    (used by the dry-run for exact HLO cost accounting).
+    """
+    n, r, k = round_spec.n, round_spec.r, round_spec.k
+    C = jnp.asarray(round_spec.to_matrix())
+
+    def step(state: TrainState, slot_tokens, slot_labels, rng, extras=None):
+        extras = extras or {}
+        b = slot_tokens.shape[2]
+        # --- delay realization & first-k-distinct winner weights ---------
+        T1, T2 = delay_model.sample(rng, 1, n, r)
+        arr = slot_arrival_times(T1, T2)[0]                  # (n, r)
+        weights, t_done = first_k_distinct_mask(C, arr, n, k)  # (n, r)
+
+        def slot_loss(p, s):
+            toks = slot_tokens[s].reshape(n * b, -1)         # worker-major
+            labs = slot_labels[s].reshape(n * b, -1)
+            toks = shard(toks, DATA, None, note="slot.tokens")
+            kw = {key: v[s].reshape((n * b,) + v.shape[3:])
+                  for key, v in extras.items()}
+            losses, aux = lm_loss_per_seq(p, cfg, toks, labs, **kw)
+            w_seq = jnp.repeat(weights[:, s], b) / (k * b)   # eq. (61)
+            return (w_seq * losses).sum(), aux * (weights[:, s].sum() / k)
+
+        def total(p):
+            if scan_slots:
+                def slot_term(carry, s):
+                    l, a = slot_loss(p, s)
+                    return (carry[0] + l, carry[1] + a), None
+                (loss, aux), _ = jax.lax.scan(
+                    slot_term, (jnp.zeros(()), jnp.zeros(())),
+                    jnp.arange(r))
+            else:
+                loss = aux = jnp.zeros(())
+                for s in range(r):
+                    l, a = slot_loss(p, s)
+                    loss, aux = loss + l, aux + a
+            return loss + cfg.router_aux_coef * aux, (loss, aux)
+
+        (ltot, (l, aux)), grads = jax.value_and_grad(total, has_aux=True)(
+            state.params)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = opt.update(grads, state.opt_state, state.params)
+        params = opt.apply(state.params, updates)
+        metrics = {"loss": l, "aux": aux, "grad_norm": gnorm,
+                   "completion_time": t_done,
+                   "winners": (weights > 0).sum()}
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    return step
+
+
+def make_serve_step(cfg: ModelConfig, *, greedy: bool = True):
+    """One decode step: (params, cache, tokens (B,1)) -> (next (B,1), cache).
+    """
+    def step(params, cache, tokens, rng=None):
+        logits, _, cache = forward(params, cfg, tokens, cache=cache)
+        last = logits[:, -1]
+        if greedy or rng is None:
+            nxt = jnp.argmax(last, axis=-1)
+        else:
+            nxt = jax.random.categorical(rng, last)
+        return nxt[:, None].astype(jnp.int32), cache
+
+    return step

@@ -1,0 +1,63 @@
+"""StragglerAggregator + RoundSpec property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import RoundSpec, StragglerAggregator, scenario1
+
+
+class TestRoundSpec:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            RoundSpec(n=4, r=2, k=5)
+        with pytest.raises(ValueError):
+            RoundSpec(n=4, r=5, k=2)
+        with pytest.raises(ValueError):
+            RoundSpec(n=4, r=0, k=2)
+
+    def test_to_matrix_schedules(self):
+        for sched in ("cs", "ss", "block"):
+            C = RoundSpec(n=6, r=3, k=4, schedule=sched).to_matrix()
+            assert C.shape == (6, 3)
+        C = RoundSpec(n=6, r=6, k=4, schedule="ra").to_matrix()
+        assert C.shape == (6, 6)
+
+
+class TestAggregator:
+    def test_round_mask_and_combine(self):
+        spec = RoundSpec(n=4, r=2, k=3, schedule="cs")
+        agg = StragglerAggregator(spec, scenario1())
+        w, t = agg.round_mask(jax.random.PRNGKey(0))
+        assert w.shape == (4, 2)
+        assert np.isclose(float(w.sum()), 3.0, atol=1e-5)
+        grads = {"a": jnp.ones((4, 2, 3)), "b": jnp.ones((4, 2))}
+        out = agg.combine(grads, w)
+        # sum of weights / k = 1 -> combined grad of all-ones is 1
+        np.testing.assert_allclose(np.asarray(out["a"]), 1.0, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(out["b"]), 1.0, rtol=1e-5)
+
+    def test_expected_completion_positive_and_orders(self):
+        m = scenario1()
+        fast = StragglerAggregator(RoundSpec(n=8, r=4, k=4), m)
+        slow = StragglerAggregator(RoundSpec(n=8, r=4, k=8), m)
+        key = jax.random.PRNGKey(1)
+        tf = fast.expected_completion(key)
+        ts = slow.expected_completion(key)
+        assert 0 < tf < ts
+
+    @settings(deadline=None, max_examples=20)
+    @given(st.integers(2, 8), st.data())
+    def test_property_combine_unbiased_weighting(self, n, data):
+        r = data.draw(st.integers(1, n))
+        k = data.draw(st.integers(1, n))
+        sched = data.draw(st.sampled_from(["cs", "ss"]))
+        spec = RoundSpec(n=n, r=r, k=k, schedule=sched)
+        agg = StragglerAggregator(spec, scenario1())
+        w, _ = agg.round_mask(jax.random.PRNGKey(data.draw(
+            st.integers(0, 2**16))))
+        # combine of per-slot gradient g=1 equals (sum w)/k = 1 exactly
+        g = {"x": jnp.ones((n, r, 5))}
+        out = agg.combine(g, w)
+        np.testing.assert_allclose(np.asarray(out["x"]), 1.0, rtol=1e-4)

@@ -1,0 +1,94 @@
+"""PC / PCMM coded-baseline tests (paper Sec. VI-B, Examples 4-5)."""
+import numpy as np
+import pytest
+
+from repro.core import (pc_threshold, pcmm_threshold, pc_encode, pc_decode,
+                        pc_worker_compute, pcmm_encode, pcmm_decode,
+                        pcmm_worker_compute, simulate_pc_completion,
+                        simulate_pcmm_completion, simulate_completion,
+                        cyclic_to_matrix, scenario1)
+
+
+def _problem(n, d, b, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, d, b))
+    theta = rng.standard_normal(d)
+    truth = sum(X[i] @ (X[i].T @ theta) for i in range(n))
+    return X, theta, truth
+
+
+def test_thresholds_match_paper():
+    assert pc_threshold(4, 2) == 3        # Example 4: any 3 workers
+    assert pcmm_threshold(4) == 7         # Example 5: 7 computations
+    assert pc_threshold(15, 3) == 9
+    assert pc_threshold(15, 15) == 1
+
+
+@pytest.mark.parametrize("n,r", [(4, 2), (6, 2), (6, 3), (5, 2), (8, 4)])
+def test_pc_exact_recovery_from_threshold_workers(n, r):
+    X, theta, truth = _problem(n, d=7, b=4)
+    Xt, alphas, _ = pc_encode(X, r)
+    res = np.stack([pc_worker_compute(Xt[i], theta) for i in range(n)])
+    kth = pc_threshold(n, r)
+    # any subset of kth workers suffices — try a few
+    for sel in ([*range(kth)], [*range(n - kth, n)]):
+        out = pc_decode(res[sel], alphas[sel], n, r)
+        np.testing.assert_allclose(out, truth, rtol=1e-6, atol=1e-8)
+
+
+def test_pc_insufficient_workers_raises():
+    n, r = 4, 2
+    X, theta, _ = _problem(n, 5, 3)
+    Xt, alphas, _ = pc_encode(X, r)
+    res = np.stack([pc_worker_compute(Xt[i], theta) for i in range(2)])
+    with pytest.raises(ValueError):
+        pc_decode(res, alphas[:2], n, r)
+
+
+@pytest.mark.parametrize("n,r", [(3, 2), (4, 2), (5, 2)])
+def test_pcmm_exact_recovery(n, r):
+    X, theta, truth = _problem(n, d=6, b=4)
+    Xh, betas = pcmm_encode(X, r)
+    res, pts = [], []
+    for i in range(n):
+        for j in range(r):
+            res.append(pcmm_worker_compute(Xh[i, j], theta))
+            pts.append(betas[i, j])
+    need = pcmm_threshold(n)
+    out = pcmm_decode(np.stack(res)[:need], np.array(pts)[:need], n)
+    np.testing.assert_allclose(out, truth, rtol=1e-3)
+
+
+def test_pcmm_infeasible_when_too_few_slots():
+    with pytest.raises(ValueError):
+        simulate_pcmm_completion(scenario1(), n=4, r=1, trials=8)
+
+
+def test_pc_single_message_slower_than_uncoded_partial():
+    """Paper Figs. 4-5: CS/SS with partial results beat PC for homogeneous
+    delays (PC waits for full r-task compute at each worker)."""
+    n, r, = 8, 4
+    m = scenario1()
+    t_pc = float(simulate_pc_completion(m, n, r, trials=4000).mean())
+    t_cs = float(np.mean(np.asarray(
+        simulate_completion(cyclic_to_matrix(n, r), m, k=n, trials=4000))))
+    assert t_cs < t_pc
+
+
+def test_pcmm_beats_pc_like_paper():
+    """Paper Fig. 4: PCMM (multi-message) improves upon PC."""
+    n, r = 12, 4
+    m = scenario1()
+    t_pc = float(simulate_pc_completion(m, n, r, trials=4000).mean())
+    t_pcmm = float(simulate_pcmm_completion(m, n, r, trials=4000).mean())
+    assert t_pcmm < t_pc
+
+
+def test_pc_completion_increases_with_r_homogeneous():
+    """Paper Fig. 5 observation: PC completion time *increases* with r when
+    worker delays are not highly skewed."""
+    n = 12
+    m = scenario1()
+    ts = [float(simulate_pc_completion(m, n, r, trials=4000).mean())
+          for r in (2, 4, 6)]
+    assert ts[0] < ts[-1]

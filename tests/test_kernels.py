@@ -1,0 +1,127 @@
+"""Per-kernel interpret-mode validation against the pure-jnp oracles:
+shape/dtype sweeps + hypothesis property tests (deliverable (c))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.ops import gram_matvec, batched_gram_matvec, swa_attention
+
+
+class TestGramMatvec:
+    @pytest.mark.parametrize("d,b", [(64, 32), (128, 128), (300, 200),
+                                     (100, 300), (512, 64), (37, 53)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_shapes_dtypes(self, d, b, dtype):
+        key = jax.random.PRNGKey(d * 1000 + b)
+        X = jax.random.normal(key, (d, b), dtype)
+        th = jax.random.normal(jax.random.PRNGKey(7), (d,), dtype)
+        out = gram_matvec(X, th)
+        want = ref.gram_matvec_ref(X, th)
+        tol = 1e-5 if dtype == jnp.float32 else 3e-2
+        rel = (np.abs(np.asarray(out, np.float32) -
+                      np.asarray(want, np.float32)).max()
+               / (np.abs(np.asarray(want, np.float32)).max() + 1e-9))
+        assert rel < tol, rel
+        assert out.dtype == X.dtype
+
+    def test_block_sizes(self):
+        X = jax.random.normal(jax.random.PRNGKey(0), (384, 256))
+        th = jax.random.normal(jax.random.PRNGKey(1), (384,))
+        want = np.asarray(ref.gram_matvec_ref(X, th))
+        for bd, bb in [(128, 128), (256, 64), (384, 256), (64, 256)]:
+            out = np.asarray(gram_matvec(X, th, block_d=bd, block_b=bb))
+            np.testing.assert_allclose(out, want, rtol=1e-5, atol=2e-3)
+
+    def test_batched_matches_paper_gradient_piece(self):
+        """sum_i h(X_i) must equal X^T X theta (paper eq. 48)."""
+        n, d, b = 4, 96, 48
+        Xs = jax.random.normal(jax.random.PRNGKey(0), (n, d, b))
+        th = jax.random.normal(jax.random.PRNGKey(1), (d,))
+        hs = batched_gram_matvec(Xs, th)
+        assert hs.shape == (n, d)
+        Xflat = np.concatenate([np.asarray(Xs[i]) for i in range(n)], axis=1)
+        want = Xflat @ (Xflat.T @ np.asarray(th))
+        np.testing.assert_allclose(np.asarray(hs.sum(0)), want,
+                                   rtol=1e-4, atol=1e-3)
+
+    @settings(deadline=None, max_examples=20)
+    @given(st.integers(8, 200), st.integers(8, 200), st.integers(0, 2**16))
+    def test_property_matches_oracle(self, d, b, seed):
+        X = jax.random.normal(jax.random.PRNGKey(seed), (d, b))
+        th = jax.random.normal(jax.random.PRNGKey(seed + 1), (d,))
+        out = np.asarray(gram_matvec(X, th, block_d=64, block_b=64))
+        want = np.asarray(ref.gram_matvec_ref(X, th))
+        np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-4)
+
+
+class TestSWAAttention:
+    @pytest.mark.parametrize("T,H,dh,W", [
+        (128, 2, 64, 32), (200, 1, 32, 64), (256, 2, 128, 100),
+        (64, 4, 16, 8), (96, 1, 64, 96),      # window == seq (full causal)
+        (130, 2, 32, 17),                      # odd sizes
+    ])
+    def test_shapes(self, T, H, dh, W):
+        q = jax.random.normal(jax.random.PRNGKey(0), (T, H, dh)) * 0.5
+        k = jax.random.normal(jax.random.PRNGKey(1), (T, H, dh)) * 0.5
+        v = jax.random.normal(jax.random.PRNGKey(2), (T, H, dh))
+        out = swa_attention(q, k, v, window=W, block_q=64, block_k=64)
+        want = ref.swa_attention_ref(q, k, v, W)
+        assert np.abs(np.asarray(out) - np.asarray(want)).max() < 2e-4
+
+    @pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-4),
+                                           (jnp.bfloat16, 3e-2)])
+    def test_dtypes(self, dtype, tol):
+        T, H, dh, W = 128, 2, 64, 48
+        q = (jax.random.normal(jax.random.PRNGKey(0), (T, H, dh)) * 0.5
+             ).astype(dtype)
+        k = (jax.random.normal(jax.random.PRNGKey(1), (T, H, dh)) * 0.5
+             ).astype(dtype)
+        v = jax.random.normal(jax.random.PRNGKey(2), (T, H, dh)).astype(dtype)
+        out = swa_attention(q, k, v, window=W)
+        want = ref.swa_attention_ref(q, k, v, W)
+        assert out.dtype == dtype
+        assert np.abs(np.asarray(out, np.float32) -
+                      np.asarray(want, np.float32)).max() < tol
+
+    def test_window_1_is_self_only(self):
+        """window=1: each position attends only to itself -> output = v."""
+        T, H, dh = 64, 1, 32
+        q = jax.random.normal(jax.random.PRNGKey(0), (T, H, dh))
+        k = jax.random.normal(jax.random.PRNGKey(1), (T, H, dh))
+        v = jax.random.normal(jax.random.PRNGKey(2), (T, H, dh))
+        out = swa_attention(q, k, v, window=1, block_q=32, block_k=32)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(v),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_full_window_matches_causal_softmax(self):
+        """window >= T reduces to plain causal attention."""
+        T, H, dh = 96, 2, 32
+        q = jax.random.normal(jax.random.PRNGKey(0), (T, H, dh)) * 0.3
+        k = jax.random.normal(jax.random.PRNGKey(1), (T, H, dh)) * 0.3
+        v = jax.random.normal(jax.random.PRNGKey(2), (T, H, dh))
+        out = swa_attention(q, k, v, window=T, block_q=32, block_k=32)
+        # dense causal reference
+        s = np.einsum("qhd,khd->hqk", np.asarray(q), np.asarray(k)
+                      ) / np.sqrt(dh)
+        mask = np.tril(np.ones((T, T), bool))
+        s = np.where(mask[None], s, -np.inf)
+        p = np.exp(s - s.max(-1, keepdims=True))
+        p /= p.sum(-1, keepdims=True)
+        want = np.einsum("hqk,khd->qhd", p, np.asarray(v))
+        np.testing.assert_allclose(np.asarray(out), want, rtol=2e-4,
+                                   atol=2e-4)
+
+    @settings(deadline=None, max_examples=15)
+    @given(st.integers(16, 160), st.integers(1, 3),
+           st.sampled_from([16, 32, 64]), st.integers(1, 160),
+           st.integers(0, 2**16))
+    def test_property_matches_oracle(self, T, H, dh, W, seed):
+        q = jax.random.normal(jax.random.PRNGKey(seed), (T, H, dh)) * 0.4
+        k = jax.random.normal(jax.random.PRNGKey(seed + 1), (T, H, dh)) * 0.4
+        v = jax.random.normal(jax.random.PRNGKey(seed + 2), (T, H, dh))
+        out = swa_attention(q, k, v, window=W, block_q=32, block_k=32)
+        want = ref.swa_attention_ref(q, k, v, W)
+        assert np.abs(np.asarray(out) - np.asarray(want)).max() < 3e-4

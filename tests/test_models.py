@@ -1,0 +1,208 @@
+"""Model substrate tests: forward shapes, decode/full consistency per
+mixer family, segment planning, MoE dispatch equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import (ModelConfig, LayerSpec, layer_specs, find_period,
+                          init_params, forward, init_cache, plan_segments,
+                          num_params)
+
+F32 = dict(param_dtype="float32", dtype="float32", remat=False)
+
+
+def _mk(name="m", **kw):
+    base = dict(name=name, arch_type="dense", n_layers=2, d_model=64,
+                n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97, **F32)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _decode_vs_full(cfg, T=9, prefill=5, atol=2e-3):
+    key = jax.random.PRNGKey(0)
+    p = init_params(key, cfg)
+    toks = jax.random.randint(key, (2, T), 0, cfg.vocab_size)
+    full, _, _ = forward(p, cfg, toks)
+    cache = init_cache(cfg, 2, 32)
+    _, _, cache = forward(p, cfg, toks[:, :prefill], cache=cache)
+    for t in range(prefill, T):
+        lg, _, cache = forward(p, cfg, toks[:, t:t + 1], cache=cache)
+        err = np.abs(np.asarray(lg[:, 0] - full[:, t],
+                                np.float32)).max()
+        assert err < atol, f"{cfg.name} step {t}: err {err}"
+    return full
+
+
+class TestDecodeConsistency:
+    def test_gqa(self):
+        _decode_vs_full(_mk("gqa"))
+
+    def test_gqa_with_bias_and_softcap(self):
+        _decode_vs_full(_mk("gqa-b", qkv_bias=True, attn_logit_softcap=30.0))
+
+    def test_swa_ring_buffer(self):
+        cfg = _mk("swa", sliding_window=4, local_global_pattern=(1, 1),
+                  n_layers=4)
+        _decode_vs_full(cfg, T=12, prefill=6)
+
+    def test_mla(self):
+        cfg = _mk("mla", q_lora_rank=32, kv_lora_rank=16, qk_nope_dim=16,
+                  qk_rope_dim=8, v_head_dim=16, head_dim=24, n_kv_heads=4)
+        _decode_vs_full(cfg)
+
+    def test_mamba(self):
+        cfg = _mk("mamba", arch_type="ssm", ssm_kind="mamba", d_state=8)
+        _decode_vs_full(cfg)
+
+    def test_rwkv6(self):
+        cfg = _mk("rwkv", arch_type="ssm", ssm_kind="rwkv6", n_kv_heads=4)
+        _decode_vs_full(cfg)
+
+    def test_moe(self):
+        cfg = _mk("moe", arch_type="moe", n_experts=4, experts_per_token=2,
+                  d_ff_expert=96, n_shared_experts=1, dense_prefix=1,
+                  capacity_factor=8.0)  # high cf: no drops -> deterministic
+        _decode_vs_full(cfg)
+
+    def test_hybrid_jamba_like(self):
+        cfg = _mk("hyb", arch_type="hybrid", n_layers=8, ssm_kind="mamba",
+                  ssm_period=4, ssm_attn_offset=2, n_experts=4,
+                  experts_per_token=2, d_ff_expert=96, moe_period=2,
+                  moe_offset=1, d_state=8, capacity_factor=8.0)
+        _decode_vs_full(cfg)
+
+
+class TestSWAWindowSemantics:
+    def test_window_limits_context(self):
+        """A token beyond the window must not influence the output."""
+        cfg = _mk("swa1", sliding_window=3, local_global_pattern=(1, 0),
+                  n_layers=1)
+        key = jax.random.PRNGKey(1)
+        p = init_params(key, cfg)
+        t1 = jax.random.randint(key, (1, 8), 0, cfg.vocab_size)
+        t2 = t1.at[:, 0].set((t1[:, 0] + 1) % cfg.vocab_size)
+        l1, _, _ = forward(p, cfg, t1)
+        l2, _, _ = forward(p, cfg, t2)
+        # position 7 attends to 5,6,7 only (window 3) -> unchanged
+        np.testing.assert_allclose(np.asarray(l1[:, -1]),
+                                   np.asarray(l2[:, -1]), atol=1e-5)
+        # position 1 is within reach of position 0 -> changed
+        assert np.abs(np.asarray(l1[:, 1] - l2[:, 1])).max() > 1e-4
+
+
+class TestSegmentPlanning:
+    def test_uniform_stack_single_segment(self):
+        cfg = _mk("u", n_layers=12)
+        segs = plan_segments(cfg)
+        assert len(segs) == 1 and segs[0].reps == 12
+
+    def test_gemma_like_pattern_with_tail(self):
+        cfg = _mk("g", n_layers=34, sliding_window=8,
+                  local_global_pattern=(5, 1))
+        segs = plan_segments(cfg)
+        assert sum(len(s.specs) * s.reps for s in segs) == 34
+        assert segs[0].specs[0].mixer == "swa"
+        assert segs[0].specs[5].mixer == "gqa"
+        assert len(segs[0].specs) == 6 and segs[0].reps == 5
+
+    def test_deepseek_like_prefix(self):
+        cfg = _mk("d", n_layers=9, arch_type="moe", n_experts=4,
+                  experts_per_token=2, d_ff_expert=96, dense_prefix=3)
+        specs = layer_specs(cfg)
+        assert all(s.ffn == "swiglu" for s in specs[:3])
+        assert all(s.ffn == "moe" for s in specs[3:])
+
+    def test_find_period(self):
+        a, b = LayerSpec("gqa"), LayerSpec("swa")
+        assert find_period((a, a, a, a)) == (1, 4)
+        assert find_period((a, b, a, b)) == (2, 2)
+        assert find_period((b, b, a, b, b, a, b)) == (3, 2)
+
+
+class TestMoEDispatch:
+    def test_grouped_gemm_matches_dense_oracle(self):
+        """Capacity-based grouped GEMM == explicit per-token dense compute
+        when capacity is large enough for zero drops."""
+        from repro.models import layers as L
+        cfg = _mk("moe", arch_type="moe", n_experts=4, experts_per_token=2,
+                  d_ff_expert=32, capacity_factor=16.0)
+        key = jax.random.PRNGKey(0)
+        p = L.moe_init(key, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (3, 5, cfg.d_model))
+        out, aux = L.moe_apply(p, cfg, x)
+        # oracle: route each token through its top-k experts directly
+        x2 = np.asarray(x.reshape(-1, cfg.d_model))
+        logits = x2 @ np.asarray(p["router"])
+        probs = jax.nn.softmax(jnp.asarray(logits), -1)
+        w, ids = jax.lax.top_k(probs, 2)
+        w = np.asarray(w / w.sum(-1, keepdims=True))
+        ids = np.asarray(ids)
+        ref = np.zeros_like(x2)
+        for t in range(x2.shape[0]):
+            for j in range(2):
+                e = ids[t, j]
+                g = np.asarray(p["w_gate"])[e]
+                u = np.asarray(p["w_up"])[e]
+                d = np.asarray(p["w_down"])[e]
+                h = jax.nn.silu(jnp.asarray(x2[t] @ g)) * (x2[t] @ u)
+                ref[t] += w[t, j] * np.asarray(h @ d)
+        np.testing.assert_allclose(np.asarray(out).reshape(-1, cfg.d_model),
+                                   ref, rtol=2e-4, atol=2e-5)
+        assert np.isfinite(float(aux))
+
+    def test_capacity_drops_tokens_gracefully(self):
+        from repro.models import layers as L
+        cfg = _mk("moec", arch_type="moe", n_experts=4, experts_per_token=2,
+                  d_ff_expert=32, capacity_factor=0.25)
+        p = L.moe_init(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+        out, _ = L.moe_apply(p, cfg, x)
+        assert np.isfinite(np.asarray(out)).all()
+
+
+class TestAttentionCore:
+    def test_chunked_matches_naive(self):
+        from repro.models.layers import attention_core
+        key = jax.random.PRNGKey(0)
+        B, H, T, dh = 1, 2, 128, 16
+        q = jax.random.normal(key, (B, H, T, dh))
+        k = jax.random.normal(jax.random.PRNGKey(1), (B, H, T, dh))
+        v = jax.random.normal(jax.random.PRNGKey(2), (B, H, T, dh))
+        ref = attention_core(q, k, v, causal=True, q_offset=0)
+        chunked = attention_core(q, k, v, causal=True, q_offset=0,
+                                 chunk_q=32, chunk_k=32)
+        # force the chunked path by shrinking the naive threshold
+        from repro.models import layers as Lm
+        out = Lm.attention_core.__wrapped__(q, k, v, causal=True, q_offset=0) \
+            if hasattr(Lm.attention_core, "__wrapped__") else chunked
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(chunked),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_windowed_chunked_matches_naive(self):
+        from repro.models.layers import attention_core
+        key = jax.random.PRNGKey(3)
+        B, H, T, dh = 1, 2, 96, 8
+        q, k, v = (jax.random.normal(jax.random.PRNGKey(i), (B, H, T, dh))
+                   for i in (0, 1, 2))
+        ref = attention_core(q, k, v, causal=True, q_offset=0, window=17)
+        out = attention_core(q, k, v, causal=True, q_offset=0, window=17,
+                             chunk_q=16, chunk_k=16)
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_vocab_padding_masks_tail():
+    cfg = _mk("pad", vocab_size=100, vocab_pad_to=64)
+    assert cfg.padded_vocab == 128
+    p = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jnp.zeros((1, 4), jnp.int32)
+    lg, _, _ = forward(p, cfg, toks)
+    assert (np.asarray(lg)[..., 100:] < -1e8).all()
+
+
+def test_num_params_counts_everything():
+    cfg = _mk("np")
+    p = init_params(jax.random.PRNGKey(0), cfg)
+    n = num_params(p)
+    assert n > cfg.padded_vocab * cfg.d_model  # at least the embedding

@@ -1,0 +1,93 @@
+"""§Perf optimization variants must be numerically equivalent to the
+baselines they replace (EXPERIMENTS.md: 'debug forward, keep the speedup')."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ModelConfig, init_params, forward, init_cache
+
+F32 = dict(param_dtype="float32", dtype="float32", remat=False)
+
+
+def _decode_logits(cfg, seed=0, T=10, prefill=4):
+    p = init_params(jax.random.PRNGKey(seed), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, T), 0,
+                              cfg.vocab_size)
+    cache = init_cache(cfg, 2, 32)
+    _, _, cache = forward(p, cfg, toks[:, :prefill], cache=cache)
+    outs = []
+    for t in range(prefill, T):
+        lg, _, cache = forward(p, cfg, toks[:, t:t + 1], cache=cache)
+        outs.append(np.asarray(lg[:, 0]))
+    return np.stack(outs)
+
+
+class TestAbsorbedMLA:
+    def test_matches_naive_decode(self):
+        base = ModelConfig(name="mla", arch_type="moe", n_layers=2,
+                           d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                           vocab_size=97, q_lora_rank=32, kv_lora_rank=16,
+                           qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16,
+                           head_dim=24, **F32)
+        naive = _decode_logits(base)
+        absorbed = _decode_logits(dataclasses.replace(base,
+                                                      mla_absorb=True))
+        np.testing.assert_allclose(absorbed, naive, rtol=2e-4, atol=2e-4)
+
+
+class TestGroupedGQA:
+    def test_matches_repeat_kv_decode(self):
+        base = ModelConfig(name="g", arch_type="dense", n_layers=2,
+                           d_model=64, n_heads=8, n_kv_heads=2, d_ff=128,
+                           vocab_size=97, **F32)
+        naive = _decode_logits(base)
+        grouped = _decode_logits(dataclasses.replace(base,
+                                                     grouped_gqa=True))
+        np.testing.assert_allclose(grouped, naive, rtol=2e-4, atol=2e-4)
+
+
+class TestSeqShardedDecode:
+    def test_matches_grouped_reference(self):
+        """Partial-softmax combine over the (trivially 1-way) model axis
+        equals the dense grouped attention with an updated cache."""
+        import jax.numpy as jnp
+        from repro.models import layers as L
+        from repro.launch.mesh import make_local_mesh_ctx
+        from repro.sharding import mesh_context
+        cfg = ModelConfig(name="rd", arch_type="dense", n_layers=1,
+                          d_model=64, n_heads=8, n_kv_heads=2, d_ff=128,
+                          vocab_size=97, seq_shard_decode=True, **F32)
+        q = jax.random.normal(jax.random.PRNGKey(3), (2, 8, 1, 8))
+        kx = jax.random.normal(jax.random.PRNGKey(4), (2, 2, 1, 8))
+        vx = jax.random.normal(jax.random.PRNGKey(5), (2, 2, 1, 8))
+        c = {"k": jax.random.normal(jax.random.PRNGKey(6), (2, 2, 16, 8)),
+             "v": jax.random.normal(jax.random.PRNGKey(7), (2, 2, 16, 8)),
+             "pos": jnp.asarray(5, jnp.int32)}
+        with mesh_context(make_local_mesh_ctx(1, 1)):
+            out, nc = L.seq_sharded_decode_attention(cfg, q, kx, vx, c)
+        kf = c["k"].at[:, :, 5].set(kx[:, :, 0])
+        vf = c["v"].at[:, :, 5].set(vx[:, :, 0])
+        ref = L.grouped_attention(q, kf, vf, kv_len=6,
+                                  scale=1 / np.sqrt(8), q_offset=5)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(nc["k"]), np.asarray(kf),
+                                   atol=1e-6)
+        assert int(nc["pos"]) == 6
+
+
+class TestBatchShardFallback:
+    def test_noop_without_mesh(self):
+        """Flag changes sharding hints only — numerics identical."""
+        base = ModelConfig(name="b", arch_type="dense", n_layers=2,
+                           d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                           vocab_size=97, **F32)
+        p = init_params(jax.random.PRNGKey(0), base)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 97)
+        a, _, _ = forward(p, base, toks)
+        b, _, _ = forward(
+            p, dataclasses.replace(base, attn_batch_shard_fallback=True),
+            toks)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

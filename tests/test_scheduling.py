@@ -1,0 +1,97 @@
+"""Unit + property tests for TO-matrix constructions (paper Sec. II, IV)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (cyclic_to_matrix, staircase_to_matrix,
+                        random_assignment_to_matrix, to_matrix,
+                        validate_to_matrix)
+
+
+def test_paper_example2_cs():
+    # Paper eq. (27), 1-indexed -> 0-indexed
+    C = cyclic_to_matrix(4, 3)
+    assert (C == np.array([[0, 1, 2], [1, 2, 3], [2, 3, 0], [3, 0, 1]])).all()
+
+
+def test_paper_example3_ss():
+    # Paper eq. (34)
+    C = staircase_to_matrix(4, 3)
+    assert (C == np.array([[0, 1, 2], [1, 0, 3], [2, 3, 0], [3, 2, 1]])).all()
+
+
+def test_cs_equals_ss_for_r1():
+    for n in (1, 2, 5, 8):
+        assert (cyclic_to_matrix(n, 1) == staircase_to_matrix(n, 1)).all()
+
+
+@pytest.mark.parametrize("name", ["cs", "ss"])
+def test_invalid_r_raises(name):
+    with pytest.raises(ValueError):
+        to_matrix(name, 4, 5)
+    with pytest.raises(ValueError):
+        to_matrix(name, 4, 0)
+
+
+def test_ra_requires_full_load():
+    with pytest.raises(ValueError):
+        random_assignment_to_matrix(4, 2)
+    C = random_assignment_to_matrix(5, seed=1)
+    validate_to_matrix(C, 5)
+    assert C.shape == (5, 5)
+    for row in C:
+        assert sorted(row.tolist()) == list(range(5))
+
+
+def test_validate_rejects_bad_matrices():
+    with pytest.raises(ValueError):
+        validate_to_matrix(np.array([[0, 0], [1, 1]]), 2)  # repeated in row
+    with pytest.raises(ValueError):
+        validate_to_matrix(np.array([[0, 3], [1, 0]]), 2)  # out of range
+    with pytest.raises(ValueError):
+        validate_to_matrix(np.zeros((2,)), 2)              # not 2-D
+
+
+@settings(deadline=None, max_examples=60)
+@given(st.integers(1, 24), st.data())
+def test_property_cs_ss_valid_and_cover(n, data):
+    """CS: each task appears in exactly r rows (cyclic symmetry). SS: same
+    for even n; for odd n the alternating directions break exact balance,
+    but slot-0 diagonal C(i,0)=i still guarantees full coverage."""
+    r = data.draw(st.integers(1, n))
+    C = cyclic_to_matrix(n, r)
+    validate_to_matrix(C, n)
+    assert (np.bincount(C.reshape(-1), minlength=n) == r).all()
+    S = staircase_to_matrix(n, r)
+    validate_to_matrix(S, n)
+    counts = np.bincount(S.reshape(-1), minlength=n)
+    assert counts.sum() == n * r and (counts >= 1).all()
+    if n % 2 == 0:
+        assert (counts == r).all()
+    assert (S[:, 0] == np.arange(n)).all()  # diagonal start
+
+
+
+@settings(deadline=None, max_examples=40)
+@given(st.integers(2, 16), st.data())
+def test_property_cs_task_position_constant(n, data):
+    """CS's defining property: task p sits at slot j of worker g(p - j);
+    i.e. each task occupies every slot position 0..r-1 exactly once."""
+    r = data.draw(st.integers(1, n))
+    C = cyclic_to_matrix(n, r)
+    for p in range(n):
+        slots = sorted(int(j) for i in range(n) for j in range(r)
+                       if C[i, j] == p)
+        assert slots == list(range(r))
+
+
+@settings(deadline=None, max_examples=40)
+@given(st.integers(2, 16), st.data())
+def test_property_ss_alternating_direction(n, data):
+    """SS: even rows ascend (mod n), odd rows descend."""
+    r = data.draw(st.integers(2, n))
+    C = staircase_to_matrix(n, r)
+    for i in range(n):
+        d = np.mod(np.diff(C[i].astype(int)), n)
+        expect = 1 if i % 2 == 0 else n - 1
+        assert (d == expect).all()

@@ -1,0 +1,74 @@
+"""Theorem 1 and lower-bound tests (paper Sec. III, V)."""
+import numpy as np
+import pytest
+from scipy import stats
+
+from repro.core import (cyclic_to_matrix, staircase_to_matrix, scenario1,
+                        theorem1_tail_mc, theorem1_mean_mc,
+                        theorem1_tail_r1_independent, sum_survival_grid,
+                        mean_completion_time, simulate_completion,
+                        simulate_lower_bound, TruncatedGaussianDelays)
+
+
+@pytest.mark.parametrize("n,r,k,sched", [
+    (4, 2, 3, "cs"), (4, 2, 4, "cs"), (5, 2, 4, "ss"),
+    (6, 3, 4, "cs"), (6, 3, 6, "ss"), (5, 5, 2, "cs"),
+])
+def test_theorem1_identity_vs_direct_mc(n, r, k, sched):
+    """The inclusion-exclusion assembly (eq. 7-8) must equal the direct
+    k-th-order-statistic simulation when fed the same H_S estimates."""
+    C = cyclic_to_matrix(n, r) if sched == "cs" else staircase_to_matrix(n, r)
+    m = scenario1()
+    t_thm = theorem1_mean_mc(C, m, k=k, tmax=4e-3, trials=6000)
+    t_mc = mean_completion_time(C, m, k=k, trials=6000)
+    assert abs(t_thm - t_mc) / t_mc < 0.03
+
+
+def test_theorem1_tail_is_valid_survival():
+    n, r, k = 5, 2, 4
+    C = cyclic_to_matrix(n, r)
+    tg = np.linspace(0, 4e-3, 128)
+    tail = theorem1_tail_mc(C, scenario1(), tg, trials=6000, k=k)
+    assert tail[0] > 0.999          # Pr{t_C > 0} = 1
+    assert tail[-1] < 1e-3          # far tail -> 0
+    assert (np.diff(tail) <= 1e-6).all()  # nonincreasing (within MC noise)
+
+
+def test_theorem1_analytic_r1_independent():
+    """r=1 with independent truncated-Gaussian delays: fully analytic tail
+    via 1-D convolution vs Monte-Carlo simulation."""
+    n, k = 6, 4
+    m = scenario1()
+    mu1, s1, a1 = m.mu1, m.sigma1, m.a1
+    mu2, s2, a2 = m.mu2, m.sigma2, m.a2
+
+    def tpdf(mu, sg, a):
+        lo, hi = mu - a, mu + a
+        d = stats.truncnorm((lo - mu) / sg, (hi - mu) / sg, loc=mu, scale=sg)
+        return lambda t: d.pdf(t)
+
+    tmax = 2e-3
+    tg, surv = sum_survival_grid(tpdf(mu1, s1, a1), tpdf(mu2, s2, a2), tmax)
+    tail = theorem1_tail_r1_independent([surv] * n, k)
+    t_analytic = float(np.trapezoid(np.clip(tail, 0, 1), tg))
+    C = cyclic_to_matrix(n, 1)
+    t_mc = mean_completion_time(C, m, k, trials=20000)
+    assert abs(t_analytic - t_mc) / t_mc < 0.02
+
+
+def test_lower_bound_tight_for_r_equal_n_small_k():
+    """Paper Fig. 7: SS coincides with the LB for small/medium k when r=n."""
+    n = 8
+    m = scenario1()
+    C = staircase_to_matrix(n, n)
+    for k in (2, 4):
+        ub = mean_completion_time(C, m, k, trials=6000)
+        lb = float(simulate_lower_bound(m, n, n, k, trials=6000).mean())
+        assert (ub - lb) / lb < 0.08, (k, ub, lb)
+
+
+def test_lower_bound_increases_with_k():
+    m = scenario1()
+    lbs = [float(simulate_lower_bound(m, 6, 3, k, trials=3000).mean())
+           for k in range(1, 7)]
+    assert all(a < b for a, b in zip(lbs, lbs[1:]))
