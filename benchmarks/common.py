@@ -1,4 +1,16 @@
-"""Shared helpers for the paper-figure benchmarks."""
+"""Shared helpers for the paper-figure benchmarks.
+
+Common random numbers
+---------------------
+``scheme_means`` and ``scheme_mean_table`` evaluate EVERY scheme at a grid
+point through one fused engine call (``repro.core.sweep``): the delay
+tensors are sampled once, with one PRNG subkey per trial, and every scheme
+(CS/SS/RA/PC/PCMM/LB) is scored against the *same* draws.  Scheme
+differences are therefore paired-sample estimates — the MC noise that is
+common to two schemes cancels in their gap — and the same seed yields
+identical paired samples under any trial chunking.  The seed code instead
+re-sampled per scheme, so cross-scheme gaps carried independent noise.
+"""
 from __future__ import annotations
 
 import time
@@ -6,34 +18,55 @@ import time
 import numpy as np
 
 from repro.core import (cyclic_to_matrix, staircase_to_matrix,
-                        random_assignment_to_matrix, mean_completion_time,
-                        simulate_lower_bound, simulate_pc_completion,
-                        simulate_pcmm_completion)
+                        random_assignment_to_matrix, to_spec, lb_spec,
+                        pc_spec, pcmm_spec, sweep)
+
+
+def _grid_specs(n: int, r: int, *, seed: int, include_coded: bool,
+                include_ra: bool) -> list:
+    specs = [to_spec("cs", cyclic_to_matrix(n, r)),
+             to_spec("ss", staircase_to_matrix(n, r))]
+    if include_ra:
+        specs.append(to_spec("ra", random_assignment_to_matrix(n, seed=seed)))
+    if include_coded and r >= 2:
+        specs.append(pc_spec(r))
+        if n * r >= 2 * n - 1:
+            specs.append(pcmm_spec(r))
+    specs.append(lb_spec(r))
+    return specs
 
 
 def scheme_means(model, n: int, r: int, k: int, *, trials: int = 20000,
                  seed: int = 0, include_coded: bool = True,
-                 include_ra: bool = True) -> dict:
-    """Average completion time of every scheme at one (n, r, k) point.
-    Times are in the delay model's unit (seconds for the paper's models)."""
+                 include_ra: bool = True, chunk: int | None = None) -> dict:
+    """Average completion time of every scheme at one (n, r, k) point, from
+    ONE fused sweep over shared delay draws. Times are in the delay model's
+    unit (seconds for the paper's models)."""
+    specs = _grid_specs(n, r, seed=seed, include_coded=include_coded,
+                        include_ra=include_ra)
+    res = sweep(specs, model, n, trials=trials, seed=seed, chunk=chunk)
+    # coded schemes always report their own decode thresholds (k ignored)
+    return {spec.name: res.at_k(spec.name, k) for spec in specs}
+
+
+def scheme_mean_table(model, n: int, r: int, *, trials: int = 20000,
+                      seed: int = 0, include_coded: bool = False,
+                      include_ra: bool = True,
+                      chunk: int | None = None) -> dict:
+    """Average completion time of every scheme for EVERY k in 1..n at once
+    (one sort of the shared task arrivals — the whole Fig.-7 k-sweep is a
+    single engine call).  Returns ``{scheme: (n,) per-k means}``; coded
+    schemes keep their own fixed thresholds (``pc`` reported at
+    ``2*ceil(n/r)-1``, ``pcmm`` at ``2n-1``) broadcast across k."""
+    specs = _grid_specs(n, r, seed=seed, include_coded=include_coded,
+                        include_ra=include_ra)
+    res = sweep(specs, model, n, trials=trials, seed=seed, chunk=chunk)
     out = {}
-    out["cs"] = mean_completion_time(cyclic_to_matrix(n, r), model, k,
-                                     trials=trials, seed=seed)
-    out["ss"] = mean_completion_time(staircase_to_matrix(n, r), model, k,
-                                     trials=trials, seed=seed)
-    if include_ra:
-        out["ra"] = mean_completion_time(
-            random_assignment_to_matrix(n, seed=seed), model, k,
-            trials=trials, seed=seed)
-    if include_coded and r >= 2:
-        out["pc"] = float(np.mean(np.asarray(
-            simulate_pc_completion(model, n, r, trials=trials, seed=seed))))
-        if n * r >= 2 * n - 1:
-            out["pcmm"] = float(np.mean(np.asarray(
-                simulate_pcmm_completion(model, n, r, trials=trials,
-                                         seed=seed))))
-    out["lb"] = float(np.mean(np.asarray(
-        simulate_lower_bound(model, n, r, k, trials=trials, seed=seed))))
+    for spec in specs:
+        if spec.name in res.fixed:     # coded: own threshold, constant in k
+            out[spec.name] = np.full(n, res.at_k(spec.name))
+        else:
+            out[spec.name] = np.asarray(res.means[spec.name])
     return out
 
 

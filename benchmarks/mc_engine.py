@@ -1,0 +1,136 @@
+"""Monte-Carlo sweep-engine throughput: seed per-scheme path vs fused engine.
+
+The seed evaluated each scheme with its own delay sampling pass, a
+scatter-min for task arrivals, and a full sort per scheme; the fused engine
+(repro.core.montecarlo) samples once, gathers task arrivals through a
+static layout shared by all stacked TO matrices, and sorts once per scheme
+family.  This benchmark measures both at the paper's Fig.-4 corner
+(n = 16, r = 16) and reports throughput in trials*schemes/sec, plus a
+large chunked sweep demonstrating O(chunk) memory at 10^6+ trials.
+
+Rows:
+  mc_engine/legacy     seed-style per-scheme evaluation
+  mc_engine/fused      one engine call, same schemes, shared draws
+  mc_engine/speedup    fused over legacy throughput ratio
+  mc_engine/chunked1M  10^6-trial sweep streamed in 20k-trial chunks
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (cyclic_to_matrix, staircase_to_matrix,
+                        random_assignment_to_matrix, pc_threshold,
+                        pcmm_threshold, scenario1, sweep, to_spec, lb_spec,
+                        pc_spec, pcmm_spec)
+from .common import emit
+
+
+# ----------------------- seed-style per-scheme path --------------------------
+# A faithful replica of the seed's hot path, kept here so the speedup stays
+# measurable after the library switched to the fused engine.
+
+@partial(jax.jit, static_argnames=("n", "k"))
+def _legacy_to(C, T1, T2, n: int, k: int):
+    s = jnp.cumsum(T1, axis=-1) + T2
+    Cf = jnp.asarray(C).reshape(-1)
+    sf = s.reshape(s.shape[:-2] + (-1,))
+    init = jnp.full(s.shape[:-2] + (n,), jnp.inf, s.dtype)
+    tau = init.at[..., Cf].min(sf)
+    return jnp.sort(tau, axis=-1)[..., k - 1]
+
+
+@partial(jax.jit, static_argnames=("kth",))
+def _legacy_pc(T1, T2, kth: int):
+    t_worker = T1.sum(axis=-1) + T2[..., -1]
+    return jnp.sort(t_worker, axis=-1)[..., kth - 1]
+
+
+@partial(jax.jit, static_argnames=("kth",))
+def _legacy_flat_sort(T1, T2, kth: int):
+    s = (jnp.cumsum(T1, axis=-1) + T2).reshape(T1.shape[0], -1)
+    return jnp.sort(s, axis=-1)[..., kth - 1]
+
+
+def _legacy_scheme_means(model, n: int, r: int, k: int, *, trials: int,
+                         seed: int = 0) -> dict:
+    """Seed behavior: every scheme re-samples its own (trials, n, r) delays
+    from the same PRNGKey(seed) and runs its own jitted simulation."""
+    out = {}
+    for name, C in (("cs", cyclic_to_matrix(n, r)),
+                    ("ss", staircase_to_matrix(n, r)),
+                    ("ra", random_assignment_to_matrix(n, seed=seed))):
+        T1, T2 = model.sample(jax.random.PRNGKey(seed), trials, n,
+                              C.shape[1])
+        out[name] = float(jnp.mean(
+            _legacy_to(jnp.asarray(C), T1, T2, n, k)))
+    T1, T2 = model.sample(jax.random.PRNGKey(seed), trials, n, r)
+    out["pc"] = float(jnp.mean(_legacy_pc(T1, T2, pc_threshold(n, r))))
+    T1, T2 = model.sample(jax.random.PRNGKey(seed), trials, n, r)
+    out["pcmm"] = float(jnp.mean(_legacy_flat_sort(T1, T2,
+                                                   pcmm_threshold(n))))
+    T1, T2 = model.sample(jax.random.PRNGKey(seed), trials, n, r)
+    out["lb"] = float(jnp.mean(_legacy_flat_sort(T1, T2, k)))
+    return out
+
+
+def _fused_specs(n: int, r: int, seed: int):
+    return (to_spec("cs", cyclic_to_matrix(n, r)),
+            to_spec("ss", staircase_to_matrix(n, r)),
+            to_spec("ra", random_assignment_to_matrix(n, seed=seed)),
+            pc_spec(r), pcmm_spec(r), lb_spec(r))
+
+
+def _time(fn, reps: int = 3) -> float:
+    fn()                                   # warm (compile) — not timed
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(trials: int = 20000):
+    n = r = k = 16
+    model = scenario1()
+    n_schemes = 6
+
+    t_legacy = _time(lambda: _legacy_scheme_means(model, n, r, k,
+                                                  trials=trials))
+    thr_legacy = trials * n_schemes / t_legacy
+    emit("mc_engine/legacy", t_legacy * 1e6,
+         f"trials={trials};schemes={n_schemes};"
+         f"throughput={thr_legacy:,.0f}_trials_schemes_per_s")
+
+    specs = _fused_specs(n, r, seed=0)
+    t_fused = _time(lambda: sweep(specs, model, n, trials=trials, seed=0))
+    thr_fused = trials * n_schemes / t_fused
+    emit("mc_engine/fused", t_fused * 1e6,
+         f"trials={trials};schemes={n_schemes};"
+         f"throughput={thr_fused:,.0f}_trials_schemes_per_s")
+
+    emit("mc_engine/speedup", 0.0,
+         f"fused_over_legacy={thr_fused / thr_legacy:.2f}x")
+
+    # chunked large sweep: memory stays O(chunk * n * r) regardless of trials
+    big = 1_000_000 if trials >= 20000 else 50 * trials
+    chunk = 20000
+    t0 = time.perf_counter()
+    res = sweep(specs, model, n, trials=big, seed=0, chunk=chunk)
+    t_big = time.perf_counter() - t0
+    emit("mc_engine/chunked1M", t_big * 1e6,
+         f"trials={big};chunk={chunk};"
+         f"throughput={big * n_schemes / t_big:,.0f}_trials_schemes_per_s;"
+         f"cs_at_k={res.at_k('cs', k) * 1e3:.5f}ms"
+         f"+-{float(res.stderr['cs'][k - 1]) * 1e3:.5f}ms")
+    return {"legacy_s": t_legacy, "fused_s": t_fused,
+            "speedup": thr_fused / thr_legacy, "big_s": t_big}
+
+
+if __name__ == "__main__":
+    run()

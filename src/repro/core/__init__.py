@@ -6,6 +6,10 @@ from .scheduling import (cyclic_to_matrix, staircase_to_matrix,
 from .delays import (TruncatedGaussianDelays, ShiftedExponentialDelays,
                      BimodalStragglerDelays, EmpiricalDelays, scenario1,
                      scenario2, ec2_like)
+from .montecarlo import (SchemeSpec, SweepResult, to_spec, lb_spec, pc_spec,
+                         pcmm_spec, tau_spec, task_gather_plan,
+                         task_arrival_times_gather, sweep, completion_samples,
+                         task_arrival_samples)
 from .completion import (slot_arrival_times, task_arrival_times,
                          completion_time, lower_bound_time,
                          first_k_distinct_mask, simulate_completion,

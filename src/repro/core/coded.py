@@ -28,10 +28,9 @@ import math
 from typing import Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from .completion import slot_arrival_times
+from . import montecarlo
 
 __all__ = [
     "pc_threshold", "pcmm_threshold", "pc_encode", "pc_worker_compute",
@@ -174,25 +173,27 @@ def pcmm_decode(results: np.ndarray, betas_rx: np.ndarray, n: int
 
 
 # --------------------- completion-time simulation ----------------------------
+# Backed by the fused sweep engine (montecarlo.py): per-trial subkeys mean
+# the draws are the common random numbers shared with the uncoded schemes
+# when evaluated inside one sweep, and lax.top_k replaces the full sort.
 
 def simulate_pc_completion(model, n: int, r: int, *, trials: int = 10000,
-                           seed: int = 0) -> jax.Array:
+                           seed: int = 0, chunk: int | None = None
+                           ) -> jax.Array:
     """eq. (51)-(52): worker i's single message lands at
     sum_j T1[i, j] + T2[i, -1]; completion = (2*ceil(n/r)-1)-th order stat."""
-    key = jax.random.PRNGKey(seed)
-    T1, T2 = model.sample(key, trials, n, r)
-    t_worker = T1.sum(axis=-1) + T2[..., -1]             # (trials, n)
-    kth = pc_threshold(n, r)
-    return jnp.sort(t_worker, axis=-1)[..., kth - 1]
+    return montecarlo.completion_samples(
+        montecarlo.pc_spec(r), model, n, trials=trials, seed=seed,
+        chunk=chunk)
 
 
 def simulate_pcmm_completion(model, n: int, r: int, *, trials: int = 10000,
-                             seed: int = 0) -> jax.Array:
+                             seed: int = 0, chunk: int | None = None
+                             ) -> jax.Array:
     """eq. (56)-(57): all n*r slot arrivals; completion = (2n-1)-th order
     statistic (requires n*r >= 2n-1, i.e. r >= 2 as in the paper)."""
     if n * r < pcmm_threshold(n):
         raise ValueError(f"PCMM infeasible: n*r={n*r} < 2n-1={2*n-1}")
-    key = jax.random.PRNGKey(seed)
-    T1, T2 = model.sample(key, trials, n, r)
-    s = slot_arrival_times(T1, T2).reshape(trials, -1)
-    return jnp.sort(s, axis=-1)[..., pcmm_threshold(n) - 1]
+    return montecarlo.completion_samples(
+        montecarlo.pcmm_spec(r), model, n, trials=trials, seed=seed,
+        chunk=chunk)

@@ -19,12 +19,13 @@ Derived:
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from . import montecarlo
 
 __all__ = [
     "slot_arrival_times", "task_arrival_times", "completion_time",
@@ -94,36 +95,32 @@ def first_k_distinct_mask(C: Array, s: Array, n: int, k: int
 
 
 # ---------------- Monte-Carlo drivers ----------------------------------------
-
-@partial(jax.jit, static_argnames=("n", "k", "trials"))
-def _simulate(C, T1, T2, n: int, k: int, trials: int):
-    s = slot_arrival_times(T1, T2)
-    tau = task_arrival_times(C, s, n)
-    return completion_time(tau, k)
-
+# Thin wrappers over the fused sweep engine (see montecarlo.py): one
+# per-trial PRNG subkey stream, static gather layout for eq. (2), chunkable
+# trial streaming, and lax.top_k for single-k order statistics.
 
 def simulate_completion(C: np.ndarray, model, k: int, *, trials: int = 10000,
-                        seed: int = 0) -> Array:
+                        seed: int = 0, chunk: int | None = None) -> Array:
     """Sample ``trials`` rounds of the schedule ``C`` under ``model`` and
     return the completion-time samples, shape (trials,)."""
-    n, r = np.asarray(C).shape
-    key = jax.random.PRNGKey(seed)
-    T1, T2 = model.sample(key, trials, n, r)
-    return _simulate(jnp.asarray(C), T1, T2, n, k, trials)
+    n = np.asarray(C).shape[0]
+    return montecarlo.completion_samples(
+        montecarlo.to_spec("to", C), model, n, trials=trials, seed=seed,
+        chunk=chunk, k=k)
 
 
 def simulate_lower_bound(model, n: int, r: int, k: int, *, trials: int = 10000,
-                         seed: int = 0) -> Array:
-    """Monte-Carlo eq. (44): mean over trials of the oracle k-th order
-    statistic."""
-    key = jax.random.PRNGKey(seed)
-    T1, T2 = model.sample(key, trials, n, r)
-    s = slot_arrival_times(T1, T2)
-    return lower_bound_time(s, k)
+                         seed: int = 0, chunk: int | None = None) -> Array:
+    """Monte-Carlo eq. (44): samples of the oracle k-th order statistic."""
+    return montecarlo.completion_samples(
+        montecarlo.lb_spec(r), model, n, trials=trials, seed=seed,
+        chunk=chunk, k=k)
 
 
 def mean_completion_time(C: np.ndarray, model, k: int, *, trials: int = 10000,
-                         seed: int = 0) -> float:
+                         seed: int = 0, chunk: int | None = None) -> float:
     """Paper eq. (5): average completion time of schedule C."""
-    return float(jnp.mean(simulate_completion(C, model, k, trials=trials,
-                                              seed=seed)))
+    n = np.asarray(C).shape[0]
+    res = montecarlo.sweep([montecarlo.to_spec("to", C)], model, n,
+                           trials=trials, seed=seed, chunk=chunk, ks=k)
+    return res.at_k("to", k)

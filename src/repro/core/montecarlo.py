@@ -1,0 +1,451 @@
+"""Fused batched Monte-Carlo sweep engine — the repo's hot path.
+
+Every paper figure (Figs. 4-7) is an average-completion-time sweep over a
+(scheme, r, k, scenario) grid.  The seed code re-sampled delays and re-jitted
+a fresh simulation for every scheme at every grid point.  This module
+replaces all of that with ONE jitted evaluator that:
+
+1. draws one PRNG subkey **per trial** and samples the delay tensors once
+   per scenario — every scheme sees the *same* draws (common random
+   numbers), so scheme comparisons are variance-reduced paired samples and
+   per-trial completion samples are bit-identical under any chunking of the
+   trial axis (chunk-accumulated means agree to float32 round-off);
+2. evaluates all stacked TO matrices against the shared draws in one fused
+   computation (a single stacked gather + one batched sort);
+3. streams trials through ``lax.scan`` in fixed-size chunks, so peak memory
+   is O(chunk * n * r) and 10^6+ trials run on a laptop;
+4. returns completion times for EVERY k in 1..n from one sort of the task
+   arrivals (a whole Fig.-7 k-sweep is one call), while single-k queries
+   take the cheaper ``lax.top_k`` partial-selection path;
+5. computes task arrival times with a statically precomputed gather +
+   min-reduction (each task's copy positions are known from the TO matrix
+   at trace time) instead of a dynamic scatter-min — the TPU-friendly form.
+
+Scheme kinds
+------------
+* ``"to"``   — a TO matrix ``C``: order statistics of the per-task arrival
+               times (paper eqs. 1-2, 6).
+* ``"lb"``   — the oracle lower bound at load ``r``: order statistics over
+               all ``n*r`` slot arrivals (eq. 46).
+* ``"pc"``   — polynomially-coded workers at load ``r``: the
+               ``2*ceil(n/r)-1``-th order statistic of the per-worker
+               single-message times (eqs. 51-52).  Like ``pcmm``, always a
+               single column at the scheme's own decode threshold — the
+               sweep's ``k`` never applies to coded schemes.
+* ``"pcmm"`` — PC multi-message at load ``r``: the ``2n-1``-th order
+               statistic over all slot arrivals (eqs. 56-57).
+* ``"tau"``  — raw (unsorted) per-task arrival times, for estimators that
+               need the joint distribution (e.g. Theorem 1's H_S).
+
+Specs with smaller loads than the widest scheme in a sweep simply use the
+leading slots of the shared delay tensors (delay statistics are
+order-independent, paper Remark 6) — that is what makes cross-``r``
+comparisons paired as well.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "SchemeSpec", "SweepResult", "to_spec", "lb_spec", "pc_spec", "pcmm_spec",
+    "tau_spec", "task_gather_plan", "task_arrival_times_gather", "sweep",
+    "completion_samples", "task_arrival_samples", "clear_cache",
+]
+
+Array = jax.Array
+INF = jnp.inf
+
+
+# --------------------------- scheme specification ----------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SchemeSpec:
+    """One scheme to evaluate in a sweep. Hashable (C stored as nested
+    tuples) so compiled evaluators can be cached across calls."""
+    name: str
+    kind: str                       # "to" | "lb" | "pc" | "pcmm" | "tau"
+    C: Optional[tuple] = None       # TO matrix for "to"/"tau"
+    r: Optional[int] = None         # computation load for "lb"/"pc"/"pcmm"
+
+    @property
+    def load(self) -> int:
+        """Number of per-worker slots this scheme touches."""
+        if self.kind in ("to", "tau"):
+            return len(self.C[0])
+        return int(self.r)
+
+    def matrix(self) -> np.ndarray:
+        return np.asarray(self.C, dtype=np.int64)
+
+
+def _freeze_matrix(C) -> tuple:
+    C = np.asarray(C)
+    if C.ndim != 2:
+        raise ValueError(f"TO matrix must be 2-D, got shape {C.shape}")
+    return tuple(tuple(int(v) for v in row) for row in C)
+
+
+def to_spec(name: str, C) -> SchemeSpec:
+    """A TO-matrix scheme (CS / SS / RA / custom)."""
+    return SchemeSpec(name=name, kind="to", C=_freeze_matrix(C))
+
+
+def tau_spec(name: str, C) -> SchemeSpec:
+    """Raw task-arrival samples for a TO matrix (no order statistics)."""
+    return SchemeSpec(name=name, kind="tau", C=_freeze_matrix(C))
+
+
+def lb_spec(r: int, name: str = "lb") -> SchemeSpec:
+    """Oracle lower bound (eq. 46) at computation load ``r``."""
+    return SchemeSpec(name=name, kind="lb", r=int(r))
+
+
+def pc_spec(r: int, name: str = "pc") -> SchemeSpec:
+    """Polynomially-coded single-message scheme at load ``r``."""
+    return SchemeSpec(name=name, kind="pc", r=int(r))
+
+
+def pcmm_spec(r: int, name: str = "pcmm") -> SchemeSpec:
+    """Polynomially-coded multi-message scheme at load ``r``."""
+    return SchemeSpec(name=name, kind="pcmm", r=int(r))
+
+
+def _pc_threshold(n: int, r: int) -> int:
+    return 2 * math.ceil(n / r) - 1
+
+
+def _pcmm_threshold(n: int) -> int:
+    return 2 * n - 1
+
+
+# ------------------- static gather layout for task arrivals ------------------
+
+def task_gather_plan(C, n: int, r_max: Optional[int] = None) -> np.ndarray:
+    """Precompute, at trace time, where every task's copies live.
+
+    Returns an ``(n, m)`` int32 array of *flat* slot indices into the
+    row-major ``(n_w, r_max)`` slot grid, where ``m`` is the maximum copy
+    multiplicity.  Rows are padded with the sentinel ``n_w * r_max``, which
+    callers map to +inf, so ``min`` over the gathered values reproduces the
+    scatter-min of eq. (2) with a static gather — the TPU-friendly form.
+    """
+    C = np.asarray(C)
+    n_w, r = C.shape
+    r_max = r if r_max is None else int(r_max)
+    if r > r_max:
+        raise ValueError(f"TO matrix load r={r} exceeds slot grid r_max={r_max}")
+    sentinel = n_w * r_max
+    positions: list[list[int]] = [[] for _ in range(n)]
+    for i in range(n_w):
+        for j in range(r):
+            positions[int(C[i, j])].append(i * r_max + j)
+    m = max((len(p) for p in positions), default=0) or 1
+    plan = np.full((n, m), sentinel, dtype=np.int32)
+    for p, lst in enumerate(positions):
+        plan[p, :len(lst)] = lst
+    return plan
+
+
+def task_arrival_times_gather(plan: np.ndarray, s: Array) -> Array:
+    """eq. (2) via the static gather plan.
+
+    ``s`` has shape (..., n_w, r_max); ``plan`` may be ``(n, m)`` for one
+    scheme or ``(S, n, m)`` for a stack, giving (..., n) or (..., S, n).
+    Tasks never assigned come out +inf, matching the scatter-min version.
+    """
+    sf = s.reshape(s.shape[:-2] + (-1,))
+    pad = jnp.full(sf.shape[:-1] + (1,), INF, s.dtype)
+    sp = jnp.concatenate([sf, pad], axis=-1)
+    return jnp.min(sp[..., jnp.asarray(plan)], axis=-1)
+
+
+def _stack_plans(specs: Sequence[SchemeSpec], n: int, r_max: int) -> np.ndarray:
+    plans = [task_gather_plan(sp.matrix(), n, r_max) for sp in specs]
+    m = max(p.shape[1] for p in plans)
+    sentinel = n * r_max
+    out = np.full((len(plans), n, m), sentinel, dtype=np.int32)
+    for i, p in enumerate(plans):
+        out[i, :, :p.shape[1]] = p
+    return out
+
+
+# ----------------------------- fused evaluator -------------------------------
+
+def _smallest(x: Array, k: int) -> Array:
+    """The k smallest entries of x along the last axis, ascending — a
+    partial selection via ``lax.top_k`` (no full O(L log L) sort)."""
+    return -jax.lax.top_k(-x, k)[0]
+
+
+def _stat_width(spec: SchemeSpec, n: int, ks: Optional[int]) -> int:
+    if spec.kind in ("pc", "pcmm"):        # fixed decode thresholds
+        return 1
+    if spec.kind == "tau":
+        return n
+    return n if ks is None else 1
+
+
+def _build_stats_fn(specs: Tuple[SchemeSpec, ...], model, n: int, r_max: int,
+                    ks: Optional[int]):
+    """Per-chunk evaluator: (chunk, 2) per-trial keys -> {name: (chunk, L)}.
+
+    All static structure (gather plans, thresholds, slot windows) is baked
+    in at trace time; the returned function is pure and jit/scan-friendly.
+    """
+    to_specs = tuple(sp for sp in specs if sp.kind == "to")
+    plan_stack = _stack_plans(to_specs, n, r_max) if to_specs else None
+
+    # lb/pcmm both rank the same flattened slot-arrival window; group them
+    # by load so each distinct window is partially selected exactly once.
+    flat_width: Dict[int, int] = {}
+    for sp in specs:
+        if sp.kind == "lb":
+            need = n if ks is None else ks
+        elif sp.kind == "pcmm":
+            need = _pcmm_threshold(n)
+        else:
+            continue
+        flat_width[sp.load] = max(flat_width.get(sp.load, 0), need)
+
+    def stats_fn(keys: Array) -> Dict[str, Array]:
+        def one(kk):
+            T1, T2 = model.sample(kk, 1, n, r_max)
+            return T1[0], T2[0]
+
+        T1, T2 = jax.vmap(one)(keys)                 # (chunk, n, r_max)
+        s = jnp.cumsum(T1, axis=-1) + T2             # slot arrivals, eq. (1)
+        out: Dict[str, Array] = {}
+
+        if to_specs:
+            tau = task_arrival_times_gather(plan_stack, s)   # (chunk, S, n)
+            if ks is None:
+                stat = jnp.sort(tau, axis=-1)                # all k at once
+            else:
+                stat = _smallest(tau, ks)[..., -1:]          # k-th only
+            for i, sp in enumerate(to_specs):
+                out[sp.name] = stat[:, i]
+
+        flat_stats = {
+            r: _smallest(s[..., :, :r].reshape(s.shape[0], -1), w)
+            for r, w in flat_width.items()}          # (chunk, w) ascending
+
+        for sp in specs:
+            if sp.kind == "tau":
+                plan = task_gather_plan(sp.matrix(), n, r_max)
+                out[sp.name] = task_arrival_times_gather(plan, s)
+            elif sp.kind == "lb":
+                fs = flat_stats[sp.load]
+                out[sp.name] = fs[..., :n] if ks is None else fs[..., ks - 1:ks]
+            elif sp.kind == "pc":
+                r = sp.load
+                tw = s[..., r - 1]         # = sum_j T1[..., :r] + T2[..., r-1]
+                th = _pc_threshold(n, r)   # PC's own decode threshold — the
+                out[sp.name] = _smallest(tw, th)[..., -1:]   # sweep k never
+                # applies to coded schemes (same rule as pcmm below)
+            elif sp.kind == "pcmm":
+                th = _pcmm_threshold(n)
+                out[sp.name] = flat_stats[sp.load][..., th - 1:th]
+        return out
+
+    return stats_fn
+
+
+_EXEC_CACHE: dict = {}
+
+
+def clear_cache() -> None:
+    """Drop compiled evaluators (mainly for benchmarking cold starts)."""
+    _EXEC_CACHE.clear()
+
+
+def _get_exec(specs: Tuple[SchemeSpec, ...], model, n: int, r_max: int,
+              ks: Optional[int]):
+    """Compiled (stats, sums-scan, samples-scan) triple, cached per
+    (specs, model, n, r_max, ks) so repeated sweep calls skip retracing."""
+    cache_key = None
+    try:
+        cache_key = (specs, model, n, r_max, ks)
+        hit = _EXEC_CACHE.get(cache_key)
+        if hit is not None:
+            return hit
+    except TypeError:              # unhashable custom model: build uncached
+        cache_key = None
+
+    stats_fn = _build_stats_fn(specs, model, n, r_max, ks)
+    widths = {sp.name: _stat_width(sp, n, ks) for sp in specs}
+
+    def sums_scan(keys3):          # (nc, chunk, 2) -> (sum, sumsq) per name
+        zeros = {name: jnp.zeros((w,), jnp.float32)
+                 for name, w in widths.items()}
+        init = (zeros, {k2: v for k2, v in zeros.items()})
+
+        def body(carry, kc):
+            st = stats_fn(kc)
+            s0, s1 = carry
+            s0 = {k2: s0[k2] + st[k2].sum(axis=0) for k2 in s0}
+            s1 = {k2: s1[k2] + jnp.square(st[k2]).sum(axis=0) for k2 in s1}
+            return (s0, s1), None
+
+        carry, _ = jax.lax.scan(body, init, keys3)
+        return carry
+
+    def samples_scan(keys3):       # (nc, chunk, 2) -> {name: (nc, chunk, L)}
+        def body(carry, kc):
+            return carry, stats_fn(kc)
+
+        _, ys = jax.lax.scan(body, None, keys3)
+        return ys
+
+    exec_ = (jax.jit(stats_fn), jax.jit(sums_scan), jax.jit(samples_scan))
+    if cache_key is not None:
+        _EXEC_CACHE[cache_key] = exec_
+    return exec_
+
+
+def _check_specs(specs: Sequence[SchemeSpec], n: int) -> Tuple[SchemeSpec, ...]:
+    specs = tuple(specs)
+    if not specs:
+        raise ValueError("need at least one SchemeSpec")
+    names = [sp.name for sp in specs]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate scheme names: {names}")
+    for sp in specs:
+        if sp.kind in ("to", "tau") and len(sp.C) != n:
+            raise ValueError(f"{sp.name}: TO matrix has {len(sp.C)} rows, "
+                             f"expected n={n}")
+        if sp.kind in ("lb", "pc", "pcmm") and not 1 <= sp.load:
+            raise ValueError(f"{sp.name}: bad load r={sp.r}")
+        if sp.kind == "pcmm" and n * sp.load < _pcmm_threshold(n):
+            raise ValueError(
+                f"{sp.name}: PCMM infeasible: n*r={n * sp.load} < "
+                f"2n-1={_pcmm_threshold(n)}")
+    return specs
+
+
+def _run(specs: Sequence[SchemeSpec], model, n: int, *, trials: int,
+         seed: int, chunk: Optional[int], ks: Optional[int],
+         want_samples: bool):
+    specs = _check_specs(specs, n)
+    if ks is not None and not 1 <= ks <= n:
+        raise ValueError(f"need 1 <= k <= n={n}, got k={ks}")
+    r_max = max(sp.load for sp in specs)
+    chunk = trials if chunk is None else max(1, min(int(chunk), trials))
+    jstats, jsums, jsamples = _get_exec(specs, model, n, r_max, ks)
+
+    keys = jax.random.split(jax.random.PRNGKey(seed), trials)
+    nc = trials // chunk
+    main = nc * chunk
+    main_keys = keys[:main].reshape(nc, chunk, 2)
+    tail_keys = keys[main:]
+
+    if want_samples:
+        ys = jsamples(main_keys)
+        parts = {name: [v.reshape(main, v.shape[-1])] for name, v in ys.items()}
+        if main < trials:
+            for name, v in jstats(tail_keys).items():
+                parts[name].append(v)
+        return {name: jnp.concatenate(vs, axis=0) if len(vs) > 1 else vs[0]
+                for name, vs in parts.items()}
+
+    s0, s1 = jsums(main_keys)
+    if main < trials:
+        st = jstats(tail_keys)
+        s0 = {k2: s0[k2] + st[k2].sum(axis=0) for k2 in s0}
+        s1 = {k2: s1[k2] + jnp.square(st[k2]).sum(axis=0) for k2 in s1}
+    means, stderr = {}, {}
+    for name in s0:
+        mu = np.asarray(s0[name]) / trials
+        var = np.maximum(np.asarray(s1[name]) / trials - mu * mu, 0.0)
+        means[name] = mu
+        stderr[name] = np.sqrt(var / trials)
+    return means, stderr
+
+
+# ------------------------------- public API ----------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """Mean completion times (and MC standard errors) per scheme.
+
+    ``means[name]`` has one column per k in 1..n when the sweep ran in
+    all-k mode (``ks=None``), a single column for single-k sweeps and for
+    ``pcmm`` (whose threshold ``2n-1`` exceeds ``n``).
+    """
+    means: Dict[str, np.ndarray]
+    stderr: Dict[str, np.ndarray]
+    trials: int
+    n: int
+    ks: Optional[int]
+    fixed: frozenset = frozenset()      # pc/pcmm: scheme-defined thresholds
+
+    def at_k(self, name: str, k: Optional[int] = None) -> float:
+        """Mean completion time of ``name`` at target ``k``.  Coded schemes
+        (``pc``/``pcmm``) always report their own decode threshold, so ``k``
+        is ignored for them."""
+        v = self.means[name]
+        if name in self.fixed:
+            return float(v[0])
+        if k is None:
+            raise ValueError(f"{name} needs an explicit k")
+        if v.shape[-1] == self.n:
+            if not 1 <= k <= self.n:
+                raise ValueError(f"need 1 <= k <= {self.n}, got {k}")
+            return float(v[k - 1])
+        if self.ks is not None and k != self.ks:
+            raise ValueError(f"sweep ran with k={self.ks}; asked for k={k}")
+        return float(v[0])
+
+
+def sweep(specs: Sequence[SchemeSpec], model, n: int, *, trials: int = 20000,
+          seed: int = 0, chunk: Optional[int] = None,
+          ks: Optional[int] = None) -> SweepResult:
+    """Evaluate every scheme against ONE shared set of delay draws.
+
+    Parameters
+    ----------
+    specs:  schemes to evaluate (see ``to_spec``/``lb_spec``/...).
+    model:  a ``DelayModel``; sampled once per trial with a per-trial subkey.
+    n:      number of tasks (= workers in the paper's setting).
+    trials: Monte-Carlo rounds.
+    chunk:  trials are streamed through ``lax.scan`` in chunks of this size
+            (default: one chunk).  The per-trial draws are chunk-invariant,
+            so means agree to float32 accumulation round-off (and
+            ``completion_samples`` is bit-identical) for any chunk size;
+            memory is O(chunk * n * r_max).
+    ks:     ``None`` → all-k mode: one sort yields every k in 1..n.
+            An int → only that order statistic, via ``lax.top_k``.
+    """
+    means, stderr = _run(specs, model, n, trials=trials, seed=seed,
+                         chunk=chunk, ks=ks, want_samples=False)
+    fixed = frozenset(sp.name for sp in specs if sp.kind in ("pc", "pcmm"))
+    return SweepResult(means=means, stderr=stderr, trials=trials, n=n, ks=ks,
+                       fixed=fixed)
+
+
+def completion_samples(spec: SchemeSpec, model, n: int, *, trials: int = 10000,
+                       seed: int = 0, chunk: Optional[int] = None,
+                       k: Optional[int] = None) -> Array:
+    """Per-trial completion-time samples for one scheme.
+
+    Returns shape ``(trials,)`` when ``k`` is given (or for ``pcmm``), else
+    ``(trials, n)`` with column ``k-1`` holding the k-th order statistic.
+    """
+    out = _run([spec], model, n, trials=trials, seed=seed, chunk=chunk,
+               ks=k, want_samples=True)[spec.name]
+    return out[:, 0] if out.shape[-1] == 1 else out
+
+
+def task_arrival_samples(C, model, *, trials: int = 10000, seed: int = 0,
+                         chunk: Optional[int] = None) -> Array:
+    """Raw per-task arrival-time samples ``tau`` of shape (trials, n) for a
+    TO matrix — shared-draw backing for joint-survival estimators."""
+    n = np.asarray(C).shape[0]
+    spec = tau_spec("tau", C)
+    return _run([spec], model, n, trials=trials, seed=seed, chunk=chunk,
+                ks=None, want_samples=True)[spec.name]

@@ -113,7 +113,9 @@ class Schedule:
     build: Callable[..., np.ndarray]
 
     def __call__(self, n: int, r: int, **kw) -> np.ndarray:
-        C = self.build(n, r, **kw) if self.name != "ra" else self.build(n, **kw)
+        # ``r`` is passed through for every schedule — RA's builder rejects
+        # r != n rather than silently ignoring the requested load.
+        C = self.build(n, r, **kw)
         validate_to_matrix(C, n)
         return C
 

@@ -26,9 +26,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from .completion import slot_arrival_times, task_arrival_times
-import jax
-import jax.numpy as jnp
+from . import montecarlo
 
 __all__ = [
     "theorem1_tail_from_H", "joint_survival_mc", "theorem1_tail_mc",
@@ -58,13 +56,13 @@ def theorem1_tail_from_H(H: Callable[[tuple], np.ndarray], n: int, k: int
 
 
 def joint_survival_mc(C: np.ndarray, model, tgrid: np.ndarray, *,
-                      trials: int = 20000, seed: int = 0):
-    """Return ``H(S)`` closure backed by shared MC samples of task arrivals."""
-    n, r = np.asarray(C).shape
-    key = jax.random.PRNGKey(seed)
-    T1, T2 = model.sample(key, trials, n, r)
-    s = slot_arrival_times(T1, T2)
-    tau = np.asarray(task_arrival_times(jnp.asarray(C), s, n))  # (trials, n)
+                      trials: int = 20000, seed: int = 0,
+                      chunk: int | None = None):
+    """Return ``H(S)`` closure backed by shared MC samples of task arrivals
+    (drawn through the fused sweep engine, so they are the same common
+    random numbers the direct order-statistic simulation sees)."""
+    tau = np.asarray(montecarlo.task_arrival_samples(
+        C, model, trials=trials, seed=seed, chunk=chunk))   # (trials, n)
     tg = np.asarray(tgrid)
 
     def H(S: tuple) -> np.ndarray:
@@ -75,10 +73,16 @@ def joint_survival_mc(C: np.ndarray, model, tgrid: np.ndarray, *,
     return H
 
 
-def theorem1_tail_mc(C, model, tgrid, *, trials=20000, seed=0, k: int = None):
+def theorem1_tail_mc(C, model, tgrid, *, trials=20000, seed=0, k):
+    """Pr{t_C(r, k) > t} over ``tgrid`` via Theorem 1 with MC-estimated
+    joint survivals. ``k`` is a required keyword (the computation target)."""
     n = np.asarray(C).shape[0]
+    if not isinstance(k, (int, np.integer)) or not 1 <= int(k) <= n:
+        raise ValueError(
+            f"k must be an integer computation target in [1, n={n}]; got "
+            f"k={k!r}")
     H = joint_survival_mc(C, model, tgrid, trials=trials, seed=seed)
-    return theorem1_tail_from_H(H, n, k)
+    return theorem1_tail_from_H(H, n, int(k))
 
 
 def theorem1_mean_mc(C, model, k: int, *, tmax: float, npts: int = 512,

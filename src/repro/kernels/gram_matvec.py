@@ -23,6 +23,22 @@ DEFAULT_BLOCK_D = 256
 DEFAULT_BLOCK_B = 256
 
 
+def default_interpret(*, tpu_only: bool = False) -> bool:
+    """Interpret Pallas kernels only when no accelerator is attached: on an
+    accelerator backend the same BlockSpecs compile natively; on CPU
+    interpret mode is the only way to run them.  Kernels using TPU-specific
+    primitives (e.g. ``pltpu.VMEM`` scratch) pass ``tpu_only=True`` so they
+    stay interpreted on GPU, where Triton cannot lower them."""
+    compiled = ("tpu",) if tpu_only else ("tpu", "gpu", "cuda", "rocm")
+    return jax.default_backend() not in compiled
+
+
+def resolve_interpret(interpret: bool | None, *, tpu_only: bool = False
+                      ) -> bool:
+    return default_interpret(tpu_only=tpu_only) if interpret is None \
+        else interpret
+
+
 def _xt_theta_kernel(x_ref, th_ref, u_ref):
     """u[b_tile] += X[d_tile, b_tile]^T theta[d_tile]; grid (nd, nb)."""
     i = pl.program_id(0)
@@ -52,8 +68,10 @@ def _x_u_kernel(x_ref, u_ref, y_ref):
 def gram_matvec_pallas(X: jax.Array, theta: jax.Array, *,
                        block_d: int = DEFAULT_BLOCK_D,
                        block_b: int = DEFAULT_BLOCK_B,
-                       interpret: bool = True) -> jax.Array:
-    """h(X) = X (X^T theta). X (d, b), theta (d,) -> (d,)."""
+                       interpret: bool | None = None) -> jax.Array:
+    """h(X) = X (X^T theta). X (d, b), theta (d,) -> (d,). ``interpret``
+    defaults to backend-aware: compiled on TPU/GPU, interpreted on CPU."""
+    interpret = resolve_interpret(interpret)
     d, b = X.shape
     bd, bb = min(block_d, d), min(block_b, b)
     pad_d = (-d) % bd

@@ -1,8 +1,9 @@
 """Jitted public wrappers for the Pallas kernels.
 
-``interpret=True`` is the default because this container has no TPU; on a
-real TPU runtime pass ``interpret=False`` (e.g. via config.use_pallas) and
-the same BlockSpecs compile to Mosaic.
+``interpret=None`` (the default) resolves per backend: on CPU the kernels
+run in interpret mode (no Mosaic available); on a TPU/GPU runtime the same
+BlockSpecs compile natively.  Pass an explicit bool to override (e.g. to
+force interpret mode while debugging on an accelerator).
 """
 from __future__ import annotations
 
@@ -19,7 +20,8 @@ __all__ = ["gram_matvec", "swa_attention", "batched_gram_matvec"]
 
 
 @partial(jax.jit, static_argnames=("interpret", "block_d", "block_b"))
-def gram_matvec(X: jax.Array, theta: jax.Array, *, interpret: bool = True,
+def gram_matvec(X: jax.Array, theta: jax.Array, *,
+                interpret: bool | None = None,
                 block_d: int = 256, block_b: int = 256) -> jax.Array:
     """h(X) = X X^T theta via the Pallas kernel. X (d, b), theta (d,)."""
     return gram_matvec_pallas(X, theta, interpret=interpret,
@@ -28,7 +30,7 @@ def gram_matvec(X: jax.Array, theta: jax.Array, *, interpret: bool = True,
 
 @partial(jax.jit, static_argnames=("interpret",))
 def batched_gram_matvec(Xs: jax.Array, theta: jax.Array, *,
-                        interpret: bool = True) -> jax.Array:
+                        interpret: bool | None = None) -> jax.Array:
     """vmapped over the task axis: Xs (n, d, b) -> (n, d)."""
     return jax.vmap(lambda X: gram_matvec_pallas(X, theta,
                                                  interpret=interpret))(Xs)
@@ -37,7 +39,7 @@ def batched_gram_matvec(Xs: jax.Array, theta: jax.Array, *,
 @partial(jax.jit, static_argnames=("window", "interpret", "block_q",
                                    "block_k"))
 def swa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, window: int,
-                  interpret: bool = True, block_q: int = 128,
+                  interpret: bool | None = None, block_q: int = 128,
                   block_k: int = 128) -> jax.Array:
     """Causal sliding-window flash attention. q/k/v (T, H, dh)."""
     return swa_attention_pallas(q, k, v, window=window, interpret=interpret,

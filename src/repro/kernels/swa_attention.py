@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .gram_matvec import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -71,8 +73,11 @@ def _swa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 def swa_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                          window: int, block_q: int = 128,
                          block_k: int = 128,
-                         interpret: bool = True) -> jax.Array:
-    """q/k/v (T, H, dh) -> (T, H, dh); causal, window-limited attention."""
+                         interpret: bool | None = None) -> jax.Array:
+    """q/k/v (T, H, dh) -> (T, H, dh); causal, window-limited attention.
+    ``interpret`` defaults to backend-aware: compiled on TPU, interpreted
+    elsewhere (the VMEM scratch shapes are TPU-specific)."""
+    interpret = resolve_interpret(interpret, tpu_only=True)
     T, H, dh = q.shape
     bq, bk = min(block_q, T), min(block_k, T)
     pad = (-T) % max(bq, bk)

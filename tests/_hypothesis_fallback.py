@@ -1,0 +1,111 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The test environment may lack the real package (and installing is not
+always possible).  This shim registers a minimal ``hypothesis`` module in
+``sys.modules`` implementing the exact subset this repo's tests use —
+``given``, ``settings``, ``strategies.integers/sampled_from/data`` — with
+seeded pseudo-random example generation, so the property tests still run
+as deterministic randomized tests.  When the real hypothesis is available
+it is used untouched (see conftest.py); this fallback never shadows it.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def floats(min_value=0.0, max_value=1.0, **_) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+class _DataObject:
+    """Interactive draws inside the test body (``st.data()``)."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy, label: str | None = None):
+        return strategy._draw(self._rng)
+
+
+class _DataStrategy(_Strategy):
+    def __init__(self):
+        super().__init__(lambda rng: _DataObject(rng))
+
+
+def data() -> _Strategy:
+    return _DataStrategy()
+
+
+def given(*strategies: _Strategy):
+    def decorate(test):
+        @functools.wraps(test)
+        def wrapper(*args, **kwargs):
+            n_examples = getattr(wrapper, "_hf_max_examples",
+                                 _DEFAULT_MAX_EXAMPLES)
+            base = hash(test.__qualname__) & 0xFFFFFF
+            for i in range(n_examples):
+                rng = random.Random(base + i)
+                drawn = [s._draw(rng) for s in strategies]
+                test(*args, *drawn, **kwargs)
+
+        # hide the strategy-bound (right-aligned) parameters from pytest so
+        # it does not look for fixtures named after them
+        sig = inspect.signature(test)
+        params = list(sig.parameters.values())[:-len(strategies)]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        wrapper.hypothesis_fallback = True
+        return wrapper
+
+    return decorate
+
+
+def settings(deadline=None, max_examples: int = _DEFAULT_MAX_EXAMPLES, **_):
+    def decorate(test):
+        # examples are cheap shrinking-free reruns here; cap them so the
+        # fallback stays faster than real hypothesis on slow MC tests
+        test._hf_max_examples = min(max_examples, _DEFAULT_MAX_EXAMPLES)
+        return test
+
+    return decorate
+
+
+def install() -> None:
+    """Register the shim as ``hypothesis`` / ``hypothesis.strategies``."""
+    st = types.ModuleType("hypothesis.strategies")
+    for fn in (integers, sampled_from, booleans, floats, data):
+        setattr(st, fn.__name__, fn)
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    hyp.__is_fallback__ = True
+
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st
