@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig5   avg completion vs r, EC2-calibrated model (n=15)
   fig6   avg completion vs n (r=n)
   fig7   avg completion vs k (n=10, r=n)
+  fig8   rounds-axis wall-clock: persistence x heterogeneity grid, static
+         CS/SS vs feedback-adaptive row assignment vs oracle LB
   mc_engine  fused sweep-engine throughput vs the seed per-scheme path
   table1 end-to-end DGD iteration per scheme incl. real PC/PCMM decode
   roofline  per-(mesh, arch, shape) terms from saved dry-run artifacts
@@ -26,7 +28,8 @@ def main(argv=None) -> None:
     only = set(args.only.split(",")) if args.only else None
 
     from . import (fig3_delays, fig4_vs_load, fig5_ec2, fig6_vs_workers,
-                   fig7_vs_target, mc_engine, table1_e2e, roofline_report)
+                   fig7_vs_target, fig8_convergence, mc_engine, table1_e2e,
+                   roofline_report)
 
     print("name,us_per_call,derived")
     jobs = {
@@ -35,6 +38,7 @@ def main(argv=None) -> None:
         "fig5": lambda: fig5_ec2.run(trials),
         "fig6": lambda: fig6_vs_workers.run(trials),
         "fig7": lambda: fig7_vs_target.run(trials),
+        "fig8": lambda: fig8_convergence.run(trials),
         "mc_engine": lambda: mc_engine.run(trials),
         "table1": table1_e2e.run,
         "roofline": roofline_report.run,

@@ -45,7 +45,7 @@ def main():
                         source="bigram")
     step = jax.jit(make_straggler_train_step(cfg, opt, spec, model))
     toks, labs = lm_task_batches(part, spec.to_matrix(), 0)
-    state, m = step(state, toks, labs, jax.random.PRNGKey(1))
+    state, m, _ = step(state, toks, labs, jax.random.PRNGKey(1))
     print(f"  loss={float(m['loss']):.3f}  "
           f"completion={float(m['completion_time']) * 1e3:.4f} ms  "
           f"winners={int(m['winners'])}/{n} tasks")

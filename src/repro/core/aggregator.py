@@ -7,8 +7,11 @@ One SGD iteration = one *round*:
   1. the global batch is split into ``n`` logical tasks (micro-batches);
   2. worker ``i`` (a data-parallel shard group) evaluates the gradients of
      tasks ``C[i, 0..r-1]`` sequentially;
-  3. a delay realization (simulated, or measured on a real cluster) gives
-     each (worker, slot) result a virtual arrival time;
+  3. the round's delay realization comes from a stateful ``DelayProcess``
+     (``repro.core.cluster``): worker-specific straggling *persists* across
+     ``round_mask`` calls, so consecutive rounds see correlated delays just
+     like a real cluster (stateless ``DelayModel``s are coerced to the
+     zero-correlation ``IIDProcess``);
   4. the earliest copies of the k earliest distinct tasks are combined with
      the unbiased scaling of eq. (61):
 
@@ -16,21 +19,32 @@ One SGD iteration = one *round*:
 
      (the n/k factor is folded into the returned gradient).
 
+With ``adaptive=True`` the aggregator re-permutes the base TO matrix's rows
+every round from observed per-worker delay feedback (greedy
+least-covered-first, ``repro.core.scheduling.AdaptiveScheduler``): fetch the
+effective schedule for the coming round with ``current_matrix()`` *before*
+calling ``round_mask`` (it decides which task's data each worker loads).
+
 The selection mask is a deterministic function of the arrival times and is
 computed identically on every shard (cheap: n*r scalars), keeping the whole
-round a single SPMD step — see DESIGN.md §2.
+round a single SPMD step.  Task arrivals go through the fused MC engine's
+static gather layout (``task_gather_plan``) rather than the old per-call
+scatter-min, and ``expected_completion`` delegates to the engine's
+``sweep_rounds`` — there is no separate simulation code path left here.
 """
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import scheduling
-from .completion import first_k_distinct_mask, slot_arrival_times
+from . import montecarlo, scheduling
+from .cluster import IIDProcess, as_process
+from .completion import slot_arrival_times, winner_mask_gather
 from .delays import DelayModel
 
 __all__ = ["RoundSpec", "StragglerAggregator"]
@@ -60,33 +74,86 @@ class RoundSpec:
                                        if self.schedule == "ra" else {}))
 
 
-class StragglerAggregator:
-    """Combines per-(worker, slot) gradients into the eq.-(61) estimate.
+def _seed_of(key) -> int:
+    """Accept an int seed or a PRNG key — raw uint32 or new-style typed —
+    (compat with the pre-round API, which took a key).  The whole key
+    feeds the seed so distinct keys give distinct MC streams."""
+    if key is None:
+        return 0
+    if isinstance(key, (int, np.integer)):
+        return int(key)
+    try:
+        data = np.asarray(jax.random.key_data(key))
+    except TypeError:
+        data = np.asarray(key)
+    if data.ndim == 0:
+        return int(data)
+    return zlib.crc32(np.ascontiguousarray(data).tobytes()) & 0x7FFFFFFF
 
-    Usage inside a train step::
+
+class StragglerAggregator:
+    """Combines per-(worker, slot) gradients into the eq.-(61) estimate,
+    holding the cluster's straggler state across rounds.
+
+    Usage inside a train loop::
 
         agg = StragglerAggregator(RoundSpec(n=16, r=2, k=12, schedule="ss"),
-                                  delay_model)
-        weights, t_done = agg.round_mask(rng)        # (n, r) weights, scalar
-        grad = agg.combine(slot_grads, weights)      # pytree
+                                  ec2_cluster(16, persistence=0.95))
+        for step in range(steps):
+            C = agg.current_matrix()                 # schedule this round
+            ...load each worker's task data from C...
+            weights, t_done = agg.round_mask(rng)    # (n, r) weights, scalar
+            grad = agg.combine(slot_grads, weights)  # pytree
 
     ``slot_grads`` is a pytree whose leaves have leading dims (n, r) — the
     gradient of task C[i, j] computed by worker i at slot j (already averaged
     within the micro-batch).
     """
 
-    def __init__(self, spec: RoundSpec, delay_model: DelayModel):
+    def __init__(self, spec: RoundSpec, delay, *, adaptive: bool = False,
+                 init_key: Array | None = None, feedback_beta: float = 0.7,
+                 coverage_gamma: float = 0.5):
         self.spec = spec
-        self.delay_model = delay_model
-        self.C = jnp.asarray(spec.to_matrix())
+        self.process = as_process(delay)
+        self.base_C = spec.to_matrix()
+        self._plan = montecarlo.task_gather_plan(self.base_C, spec.n)
+        self.scheduler = (scheduling.AdaptiveScheduler(
+            self.base_C, beta=feedback_beta, gamma=coverage_gamma)
+            if adaptive else None)
+        if init_key is None:
+            init_key = jax.random.PRNGKey(spec.seed)
+        self._state = self.process.init(init_key[None], spec.n)
+        self._round = jax.jit(self._round_fn)
+
+    # --- one round, jitted: delays + winner weights in base-row space ------
+    def _round_fn(self, state, keys, row_of_worker):
+        n, r, k = self.spec.n, self.spec.r, self.spec.k
+        state, T1, T2 = self.process.step(state, keys, n, r)
+        s = slot_arrival_times(T1, T2)[0]                # (n, r), eq. (1)
+        worker_of_row = jnp.argsort(row_of_worker)       # inverse permutation
+        s2 = s[worker_of_row]                            # row-major arrivals
+        w2, t_done = winner_mask_gather(self.base_C, self._plan, s2, n, k)
+        weights = w2[row_of_worker]                      # back to worker-major
+        return state, T1[0], weights, t_done
+
+    def current_matrix(self) -> np.ndarray:
+        """The effective TO matrix for the coming round (row ``w`` = tasks
+        worker ``w`` executes).  Static schedules return the base matrix;
+        adaptive ones the feedback-driven row re-assignment."""
+        if self.scheduler is None:
+            return self.base_C
+        return self.scheduler.matrix()
 
     def round_mask(self, key: Array) -> Tuple[Array, Array]:
-        """Sample one round's delays, return (weights (n, r), completion
-        time scalar). weights[i, j] in [0, 1]; sums to k over all slots."""
-        n, r, k = self.spec.n, self.spec.r, self.spec.k
-        T1, T2 = self.delay_model.sample(key, 1, n, r)
-        s = slot_arrival_times(T1, T2)[0]                # (n, r)
-        weights, t_done = first_k_distinct_mask(self.C, s, n, k)
+        """Advance the cluster one round, returning (weights (n, r),
+        completion time scalar). weights[i, j] in [0, 1]; sums to k over all
+        slots and matches ``current_matrix()``'s worker/slot layout."""
+        row_of_worker = (np.arange(self.spec.n) if self.scheduler is None
+                         else self.scheduler.row_of_worker())
+        self._state, t1, weights, t_done = self._round(
+            self._state, key[None], jnp.asarray(row_of_worker))
+        if self.scheduler is not None:
+            self.scheduler.observe(np.asarray(t1))
         return weights, t_done
 
     def combine(self, slot_grads: PyTree, weights: Array) -> PyTree:
@@ -99,10 +166,23 @@ class StragglerAggregator:
             return (g * w).sum(axis=(0, 1)) / k
         return jax.tree_util.tree_map(_one, slot_grads)
 
-    def expected_completion(self, key: Array, trials: int = 4096) -> float:
-        """MC estimate of the round's average completion time (eq. 5)."""
-        n, r, k = self.spec.n, self.spec.r, self.spec.k
-        T1, T2 = self.delay_model.sample(key, trials, n, r)
-        s = slot_arrival_times(T1, T2)
-        _, t_done = first_k_distinct_mask(self.C, s, n, k)
-        return float(t_done.mean())
+    def expected_completion(self, key: Array | int = 0, trials: int = 4096,
+                            rounds: int | None = None) -> float:
+        """MC estimate of the average per-round completion time (eq. 5),
+        via the fused engine.  For stateful processes the estimate scans
+        ``rounds`` consecutive rounds (default 8) and averages; for the
+        i.i.d. shim one round suffices.  ``key`` may be an int seed or a
+        PRNG key (compat)."""
+        if rounds is None:
+            rounds = 1 if isinstance(self.process, IIDProcess) else 8
+        spec = (montecarlo.adaptive_spec("s", self.base_C)
+                if self.scheduler is not None
+                else montecarlo.to_spec("s", self.base_C))
+        kw = {}
+        if self.scheduler is not None:   # estimate the policy actually run
+            kw = dict(feedback_beta=self.scheduler.beta,
+                      coverage_gamma=self.scheduler.gamma)
+        res = montecarlo.sweep_rounds(
+            [spec], self.process, self.spec.n, rounds=rounds, k=self.spec.k,
+            trials=trials, seed=_seed_of(key), **kw)
+        return res.mean_round("s")

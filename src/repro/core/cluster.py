@@ -1,0 +1,255 @@
+"""Round-aware cluster delay processes — stateful straggling across SGD
+rounds.
+
+The paper models each SGD iteration as a computation *round*.  The original
+``DelayModel.sample(key, trials, n, r)`` API draws delays i.i.d. across
+rounds, but real clusters straggle in a worker-specific, *persistent* way
+(paper Sec. VI-A EC2 measurements; Behrouzi-Far & Soljanin, arXiv:1808.02838):
+a worker that was slow this round is likely still slow next round, and some
+workers are simply slower machines than others.  That is the regime where
+schedule order — and round-to-round adaptation — matters most.
+
+A ``DelayProcess`` is the stateful generalization:
+
+    state            = process.init(keys, n)          # keys (trials, 2)
+    state, T1, T2    = process.step(state, keys, n, r)
+
+``keys`` carries one PRNG subkey **per trial** (the fused MC engine's
+common-random-numbers convention), so draws are chunk-invariant and every
+scheme evaluated against one process sees identical delay realizations.
+``state`` is a pytree of arrays with leading dimension ``trials`` that rides
+through ``lax.scan`` over rounds.  ``T1``/``T2`` keep the established
+``(trials, n, r)`` layout of per-slot computation / communication delays.
+
+Processes
+---------
+* ``IIDProcess``          — compatibility shim: any stateless ``DelayModel``
+                            as the zero-correlation special case.
+* ``MarkovRegimeProcess`` — per-worker two-state (fast/slow) Markov chain.
+                            ``persistence`` is the chain's one-step
+                            autocorrelation; ``persistence=0`` recovers
+                            i.i.d. Bernoulli straggling per round (exactly
+                            ``BimodalStragglerDelays``'s marginal), and
+                            ``p_slow=0`` or ``slow=1`` recovers the base
+                            model.  ``worker_scale`` adds heterogeneous
+                            per-worker machine speeds.
+* ``AR1Process``          — continuous log-speed latent with AR(1) dynamics:
+                            smooth drifts instead of regime switches.
+                            ``rho=0`` is round-i.i.d., ``sigma=0`` is the
+                            base model exactly.
+
+``heterogeneous_scales`` builds geometrically spread per-worker speed
+multipliers; ``ec2_cluster`` bundles the calibrated truncated-Gaussian base
+with heterogeneity + persistence into one realistic cluster.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .delays import DelayModel, TruncatedGaussianDelays, ec2_like
+
+__all__ = [
+    "DelayProcess", "IIDProcess", "MarkovRegimeProcess", "AR1Process",
+    "as_process", "heterogeneous_scales", "ec2_cluster",
+]
+
+Array = jax.Array
+State = Any
+
+
+def _per_trial(model: DelayModel, keys: Array, n: int, r: int
+               ) -> Tuple[Array, Array]:
+    """Sample (trials, n, r) delay tensors with one subkey per trial — the
+    same convention the fused engine uses, so results are chunk-invariant."""
+    def one(kk):
+        T1, T2 = model.sample(kk, 1, n, r)
+        return T1[0], T2[0]
+    return jax.vmap(one)(keys)
+
+
+def _scale_column(worker_scale, n: int) -> Array:
+    """Per-worker speed multipliers broadcast to the (trials, n, r) layout."""
+    w = jnp.broadcast_to(jnp.asarray(worker_scale, jnp.float32), (n,))
+    return w[None, :, None]
+
+
+@dataclasses.dataclass(frozen=True)
+class DelayProcess:
+    """Base class.  Subclasses implement ``init``/``step``; both take
+    per-trial keys of shape ``(trials, 2)``."""
+
+    def init(self, keys: Array, n: int) -> State:
+        raise NotImplementedError
+
+    def step(self, state: State, keys: Array, n: int, r: int
+             ) -> Tuple[State, Array, Array]:
+        raise NotImplementedError
+
+    def sample_rounds(self, key: Array, trials: int, n: int, r: int,
+                      rounds: int) -> Tuple[Array, Array]:
+        """Convenience: unroll the process, returning delay tensors of shape
+        ``(rounds, trials, n, r)`` (small-scale inspection / tests)."""
+        allk = jax.vmap(lambda kk: jax.random.split(kk, rounds + 1))(
+            jax.random.split(key, trials))           # (trials, rounds+1, 2)
+        state = self.init(allk[:, 0], n)
+
+        def body(st, kr):
+            st, T1, T2 = self.step(st, kr, n, r)
+            return st, (T1, T2)
+
+        _, (T1, T2) = jax.lax.scan(body, state, jnp.swapaxes(allk[:, 1:], 0, 1))
+        return T1, T2
+
+
+@dataclasses.dataclass(frozen=True)
+class IIDProcess(DelayProcess):
+    """A stateless ``DelayModel`` as a (trivially stateful) process — the
+    zero-correlation, homogeneous special case.  Single-round statistics are
+    identical to the model's own."""
+    model: DelayModel = TruncatedGaussianDelays()
+
+    def init(self, keys, n):
+        return ()
+
+    def step(self, state, keys, n, r):
+        T1, T2 = _per_trial(self.model, keys, n, r)
+        return (), T1, T2
+
+
+@dataclasses.dataclass(frozen=True)
+class MarkovRegimeProcess(DelayProcess):
+    """Per-worker fast/slow regime chain with persistent stragglers.
+
+    Each worker carries a two-state Markov chain; in the slow regime all of
+    the worker's delays (compute *and* communication — a busy neighbor VM
+    slows both) are multiplied by ``slow``.  Parameterized by the stationary
+    slow probability ``p_slow`` and the chain's one-step autocorrelation
+    ``persistence`` = 1 - p_fast_to_slow - p_slow_to_fast, so
+
+      * ``persistence = 0``  → regimes i.i.d. across rounds
+        (``BimodalStragglerDelays``'s marginal every round);
+      * ``persistence = 1``  → stragglers frozen at their stationary
+        initial draw for the whole run.
+
+    ``worker_scale`` (scalar or length-n tuple) multiplies every delay of
+    worker i — persistent machine heterogeneity on top of the regime chain.
+    The chain starts from its stationary distribution, so marginals are
+    round-invariant.
+    """
+    base: DelayModel = TruncatedGaussianDelays()
+    worker_scale: tuple | float = 1.0
+    p_slow: float = 0.2
+    persistence: float = 0.9
+    slow: float = 5.0
+
+    def __post_init__(self):
+        if not 0.0 <= self.p_slow <= 1.0:
+            raise ValueError(f"p_slow must be in [0, 1], got {self.p_slow}")
+        if not 0.0 <= self.persistence <= 1.0:
+            raise ValueError(
+                f"persistence must be in [0, 1], got {self.persistence}")
+
+    @property
+    def _p_fs(self) -> float:            # fast -> slow
+        return (1.0 - self.persistence) * self.p_slow
+
+    @property
+    def _p_sf(self) -> float:            # slow -> fast
+        return (1.0 - self.persistence) * (1.0 - self.p_slow)
+
+    def init(self, keys, n):
+        def one(kk):
+            return jax.random.bernoulli(kk, self.p_slow, (n,))
+        return jax.vmap(one)(keys)                        # (trials, n) bool
+
+    def step(self, state, keys, n, r):
+        def split3(kk):
+            return tuple(jax.random.split(kk, 3))
+        kb, kc, _ = jax.vmap(split3)(keys)
+        # advance the regime chain first: the sampled round reflects the
+        # post-transition regime, and round-1 output already matches the
+        # stationary marginal (init is stationary).
+        def chain(kk):
+            return jax.random.uniform(kk, (n,))
+        u = jax.vmap(chain)(kc)                           # (trials, n)
+        slow_now = jnp.where(state, u >= self._p_sf, u < self._p_fs)
+        T1, T2 = _per_trial(self.base, kb, n, r)
+        f = jnp.where(slow_now[..., None], self.slow, 1.0)
+        f = f * _scale_column(self.worker_scale, n)
+        return slow_now, T1 * f, T2 * f
+
+
+@dataclasses.dataclass(frozen=True)
+class AR1Process(DelayProcess):
+    """Smoothly drifting worker speeds: a per-worker AR(1) latent
+    ``x' = rho * x + sigma * sqrt(1 - rho^2) * eps`` (stationary N(0, sigma^2))
+    multiplies delays by ``exp(x - sigma^2 / 2)`` (unit-mean log-normal).
+    ``rho`` is the round-to-round correlation of the log speed; ``sigma``
+    its dispersion.  ``worker_scale`` as in ``MarkovRegimeProcess``."""
+    base: DelayModel = TruncatedGaussianDelays()
+    worker_scale: tuple | float = 1.0
+    rho: float = 0.9
+    sigma: float = 0.3
+
+    def __post_init__(self):
+        if not -1.0 < self.rho < 1.0:
+            raise ValueError(f"rho must be in (-1, 1), got {self.rho}")
+
+    def init(self, keys, n):
+        def one(kk):
+            return self.sigma * jax.random.normal(kk, (n,))
+        return jax.vmap(one)(keys)                        # (trials, n)
+
+    def step(self, state, keys, n, r):
+        def split3(kk):
+            return tuple(jax.random.split(kk, 3))
+        kb, kx, _ = jax.vmap(split3)(keys)
+        eps = jax.vmap(lambda kk: jax.random.normal(kk, (n,)))(kx)
+        x = self.rho * state + self.sigma * np.sqrt(1.0 - self.rho ** 2) * eps
+        T1, T2 = _per_trial(self.base, kb, n, r)
+        f = jnp.exp(x - 0.5 * self.sigma ** 2)[..., None]
+        f = f * _scale_column(self.worker_scale, n)
+        return x, T1 * f, T2 * f
+
+
+def as_process(delay) -> DelayProcess:
+    """Coerce a stateless ``DelayModel`` into an ``IIDProcess``; pass
+    ``DelayProcess`` instances through unchanged."""
+    if isinstance(delay, DelayProcess):
+        return delay
+    if isinstance(delay, DelayModel):
+        return IIDProcess(delay)
+    raise TypeError(f"expected DelayModel or DelayProcess, got {type(delay)}")
+
+
+def heterogeneous_scales(n: int, spread: float = 2.0, seed: int = 0) -> tuple:
+    """Per-worker speed multipliers geometrically spread over
+    ``[1/sqrt(spread), sqrt(spread)]`` (geometric mean 1), randomly permuted
+    so worker index carries no information.  ``spread=1`` is homogeneous."""
+    if spread < 1.0:
+        raise ValueError(f"spread must be >= 1, got {spread}")
+    if n == 1 or spread == 1.0:
+        return tuple([1.0] * n)
+    rng = np.random.default_rng(seed)
+    log_s = np.linspace(-0.5, 0.5, n) * np.log(spread)
+    return tuple(np.exp(rng.permutation(log_s)).tolist())
+
+
+def ec2_cluster(n: int, *, spread: float = 2.0, p_slow: float = 0.2,
+                persistence: float = 0.9, slow: float = 5.0,
+                base: DelayModel | None = None,
+                seed: int = 0) -> MarkovRegimeProcess:
+    """A realistic heterogeneous, persistent-straggler cluster: the paper's
+    EC2-calibrated truncated-Gaussian base (``ec2_like``: communication
+    dominates computation, mild per-worker mean spread), an additional
+    machine-speed spread, and a sticky slow/fast regime chain."""
+    if base is None:
+        base = ec2_like(n, seed=seed)
+    return MarkovRegimeProcess(
+        base=base, worker_scale=heterogeneous_scales(n, spread, seed),
+        p_slow=p_slow, persistence=persistence, slow=slow)

@@ -29,8 +29,8 @@ from . import montecarlo
 
 __all__ = [
     "slot_arrival_times", "task_arrival_times", "completion_time",
-    "lower_bound_time", "first_k_distinct_mask", "simulate_completion",
-    "simulate_lower_bound", "mean_completion_time",
+    "lower_bound_time", "first_k_distinct_mask", "winner_mask_gather",
+    "simulate_completion", "simulate_lower_bound", "mean_completion_time",
 ]
 
 Array = jax.Array
@@ -79,6 +79,22 @@ def first_k_distinct_mask(C: Array, s: Array, n: int, k: int
     """
     C = jnp.asarray(C)
     tau = task_arrival_times(C, s, n)                    # (..., n)
+    return _winner_weights(C, s, tau, k)
+
+
+def winner_mask_gather(C: Array, plan: np.ndarray, s: Array, n: int, k: int
+                       ) -> Tuple[Array, Array]:
+    """``first_k_distinct_mask`` with task arrivals computed through the
+    fused engine's static gather layout (``task_gather_plan(C, n)``) instead
+    of a dynamic scatter-min — the TPU-friendly form used by the round API
+    (aggregator / train step hot paths)."""
+    C = jnp.asarray(C)
+    tau = montecarlo.task_arrival_times_gather(plan, s)  # (..., n)
+    return _winner_weights(C, s, tau, k)
+
+
+def _winner_weights(C: Array, s: Array, tau: Array, k: int
+                    ) -> Tuple[Array, Array]:
     t_done = completion_time(tau, k)                     # (...,)
     selected = tau <= t_done[..., None]                  # (..., n) k tasks (a.s.)
     # winner slots: slot arrival equals its task's earliest arrival

@@ -60,6 +60,12 @@ class DelayModel:
     def _sample(self, key, trials, n, r):  # pragma: no cover - abstract
         raise NotImplementedError
 
+    def as_process(self):
+        """This model as a round-stateful ``DelayProcess`` (the
+        zero-correlation special case; see ``repro.core.cluster``)."""
+        from .cluster import IIDProcess
+        return IIDProcess(self)
+
 
 @dataclasses.dataclass(frozen=True)
 class TruncatedGaussianDelays(DelayModel):

@@ -36,11 +36,26 @@ Scheme kinds
                statistic over all slot arrivals (eqs. 56-57).
 * ``"tau"``  — raw (unsorted) per-task arrival times, for estimators that
                need the joint distribution (e.g. Theorem 1's H_S).
+* ``"adaptive"`` — a base TO matrix whose rows are re-assigned to workers
+               every round from observed delay feedback (greedy
+               least-covered-first; ``repro.core.scheduling``).  Only
+               meaningful with a rounds axis: see ``sweep_rounds``.
 
 Specs with smaller loads than the widest scheme in a sweep simply use the
 leading slots of the shared delay tensors (delay statistics are
 order-independent, paper Remark 6) — that is what makes cross-``r``
 comparisons paired as well.
+
+Rounds axis (``sweep_rounds``)
+------------------------------
+Training runs are sequences of rounds, and real stragglers persist across
+them (``repro.core.cluster``).  ``sweep_rounds`` scans a stateful
+``DelayProcess`` over ``R`` rounds *inside* the jitted evaluator, carrying
+per-trial straggler state (and, for adaptive schemes, per-trial feedback
+state), so one call yields full wall-clock trajectories for every scheme
+under common random numbers: per-round mean completion times and
+cumulative wall-clock curves of shape ``(rounds,)``, or raw per-trial
+trajectories ``(trials, rounds)`` via ``trajectory_samples``.
 """
 from __future__ import annotations
 
@@ -53,9 +68,11 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
-    "SchemeSpec", "SweepResult", "to_spec", "lb_spec", "pc_spec", "pcmm_spec",
-    "tau_spec", "task_gather_plan", "task_arrival_times_gather", "sweep",
-    "completion_samples", "task_arrival_samples", "clear_cache",
+    "SchemeSpec", "SweepResult", "RoundsResult", "to_spec", "lb_spec",
+    "pc_spec", "pcmm_spec", "tau_spec", "adaptive_spec", "task_gather_plan",
+    "task_arrival_times_gather", "sweep", "sweep_rounds",
+    "completion_samples", "trajectory_samples", "task_arrival_samples",
+    "clear_cache",
 ]
 
 Array = jax.Array
@@ -69,14 +86,14 @@ class SchemeSpec:
     """One scheme to evaluate in a sweep. Hashable (C stored as nested
     tuples) so compiled evaluators can be cached across calls."""
     name: str
-    kind: str                       # "to" | "lb" | "pc" | "pcmm" | "tau"
-    C: Optional[tuple] = None       # TO matrix for "to"/"tau"
+    kind: str                 # "to" | "lb" | "pc" | "pcmm" | "tau" | "adaptive"
+    C: Optional[tuple] = None       # TO matrix for "to"/"tau"/"adaptive"
     r: Optional[int] = None         # computation load for "lb"/"pc"/"pcmm"
 
     @property
     def load(self) -> int:
         """Number of per-worker slots this scheme touches."""
-        if self.kind in ("to", "tau"):
+        if self.kind in ("to", "tau", "adaptive"):
             return len(self.C[0])
         return int(self.r)
 
@@ -99,6 +116,13 @@ def to_spec(name: str, C) -> SchemeSpec:
 def tau_spec(name: str, C) -> SchemeSpec:
     """Raw task-arrival samples for a TO matrix (no order statistics)."""
     return SchemeSpec(name=name, kind="tau", C=_freeze_matrix(C))
+
+
+def adaptive_spec(name: str, C) -> SchemeSpec:
+    """An adaptive scheme: base TO matrix ``C`` whose rows are re-assigned
+    to workers each round from observed per-worker delay feedback (only
+    valid in ``sweep_rounds``)."""
+    return SchemeSpec(name=name, kind="adaptive", C=_freeze_matrix(C))
 
 
 def lb_spec(r: int, name: str = "lb") -> SchemeSpec:
@@ -191,13 +215,12 @@ def _stat_width(spec: SchemeSpec, n: int, ks: Optional[int]) -> int:
     return n if ks is None else 1
 
 
-def _build_stats_fn(specs: Tuple[SchemeSpec, ...], model, n: int, r_max: int,
-                    ks: Optional[int]):
-    """Per-chunk evaluator: (chunk, 2) per-trial keys -> {name: (chunk, L)}.
-
-    All static structure (gather plans, thresholds, slot windows) is baked
-    in at trace time; the returned function is pure and jit/scan-friendly.
-    """
+def _build_eval(specs: Tuple[SchemeSpec, ...], n: int, r_max: int,
+                ks: Optional[int]):
+    """Static-scheme evaluator: slot arrivals ``s`` (chunk, n, r_max) ->
+    {name: (chunk, L)}.  All static structure (gather plans, thresholds,
+    slot windows) is baked in at trace time; shared by the single-round
+    sampler and the rounds-axis scan body."""
     to_specs = tuple(sp for sp in specs if sp.kind == "to")
     plan_stack = _stack_plans(to_specs, n, r_max) if to_specs else None
 
@@ -213,13 +236,7 @@ def _build_stats_fn(specs: Tuple[SchemeSpec, ...], model, n: int, r_max: int,
             continue
         flat_width[sp.load] = max(flat_width.get(sp.load, 0), need)
 
-    def stats_fn(keys: Array) -> Dict[str, Array]:
-        def one(kk):
-            T1, T2 = model.sample(kk, 1, n, r_max)
-            return T1[0], T2[0]
-
-        T1, T2 = jax.vmap(one)(keys)                 # (chunk, n, r_max)
-        s = jnp.cumsum(T1, axis=-1) + T2             # slot arrivals, eq. (1)
+    def eval_fn(s: Array) -> Dict[str, Array]:
         out: Dict[str, Array] = {}
 
         if to_specs:
@@ -253,6 +270,24 @@ def _build_stats_fn(specs: Tuple[SchemeSpec, ...], model, n: int, r_max: int,
                 out[sp.name] = flat_stats[sp.load][..., th - 1:th]
         return out
 
+    return eval_fn
+
+
+def _build_stats_fn(specs: Tuple[SchemeSpec, ...], model, n: int, r_max: int,
+                    ks: Optional[int]):
+    """Per-chunk evaluator: (chunk, 2) per-trial keys -> {name: (chunk, L)}.
+    Samples one round of delays per trial and scores every static scheme."""
+    eval_fn = _build_eval(specs, n, r_max, ks)
+
+    def stats_fn(keys: Array) -> Dict[str, Array]:
+        def one(kk):
+            T1, T2 = model.sample(kk, 1, n, r_max)
+            return T1[0], T2[0]
+
+        T1, T2 = jax.vmap(one)(keys)                 # (chunk, n, r_max)
+        s = jnp.cumsum(T1, axis=-1) + T2             # slot arrivals, eq. (1)
+        return eval_fn(s)
+
     return stats_fn
 
 
@@ -262,6 +297,7 @@ _EXEC_CACHE: dict = {}
 def clear_cache() -> None:
     """Drop compiled evaluators (mainly for benchmarking cold starts)."""
     _EXEC_CACHE.clear()
+    _ROUNDS_CACHE.clear()
 
 
 def _get_exec(specs: Tuple[SchemeSpec, ...], model, n: int, r_max: int,
@@ -316,7 +352,7 @@ def _check_specs(specs: Sequence[SchemeSpec], n: int) -> Tuple[SchemeSpec, ...]:
     if len(set(names)) != len(names):
         raise ValueError(f"duplicate scheme names: {names}")
     for sp in specs:
-        if sp.kind in ("to", "tau") and len(sp.C) != n:
+        if sp.kind in ("to", "tau", "adaptive") and len(sp.C) != n:
             raise ValueError(f"{sp.name}: TO matrix has {len(sp.C)} rows, "
                              f"expected n={n}")
         if sp.kind in ("lb", "pc", "pcmm") and not 1 <= sp.load:
@@ -332,6 +368,10 @@ def _run(specs: Sequence[SchemeSpec], model, n: int, *, trials: int,
          seed: int, chunk: Optional[int], ks: Optional[int],
          want_samples: bool):
     specs = _check_specs(specs, n)
+    for sp in specs:
+        if sp.kind == "adaptive":
+            raise ValueError(f"{sp.name}: adaptive schemes need a rounds "
+                             f"axis — use sweep_rounds")
     if ks is not None and not 1 <= ks <= n:
         raise ValueError(f"need 1 <= k <= n={n}, got k={ks}")
     r_max = max(sp.load for sp in specs)
@@ -388,6 +428,9 @@ class SweepResult:
         """Mean completion time of ``name`` at target ``k``.  Coded schemes
         (``pc``/``pcmm``) always report their own decode threshold, so ``k``
         is ignored for them."""
+        if name not in self.means:
+            raise ValueError(f"unknown scheme {name!r}; have "
+                             f"{sorted(self.means)}")
         v = self.means[name]
         if name in self.fixed:
             return float(v[0])
@@ -449,3 +492,246 @@ def task_arrival_samples(C, model, *, trials: int = 10000, seed: int = 0,
     spec = tau_spec("tau", C)
     return _run([spec], model, n, trials=trials, seed=seed, chunk=chunk,
                 ks=None, want_samples=True)[spec.name]
+
+
+# ----------------------------- rounds axis -----------------------------------
+
+def _build_rounds_fn(specs: Tuple[SchemeSpec, ...], process, n: int,
+                     r_max: int, ks: int, rounds: int, beta: float,
+                     gamma: float):
+    """Multi-round evaluator: (chunk, 2) per-trial keys ->
+    {name: (rounds, chunk)} per-round completion times.
+
+    One ``lax.scan`` over rounds carries (a) the delay process state — the
+    straggler persistence — and (b) the adaptive schemes' per-trial EMA of
+    observed per-worker compute delays.  Every scheme scores the same delay
+    realization each round (common random numbers), so per-round and
+    cumulative scheme gaps are paired-sample estimates.
+    """
+    from . import scheduling                    # adaptive assignment
+
+    static_specs = tuple(sp for sp in specs if sp.kind != "adaptive")
+    ad_specs = tuple(sp for sp in specs if sp.kind == "adaptive")
+    eval_fn = (_build_eval(static_specs, n, r_max, ks)
+               if static_specs else None)
+    ad_plans = tuple(task_gather_plan(sp.matrix(), n, r_max)
+                     for sp in ad_specs)
+    ad_mats = tuple(sp.matrix() for sp in ad_specs)
+
+    def rounds_fn(keys: Array) -> Dict[str, Array]:
+        chunk = keys.shape[0]
+        # one subkey per (trial, round) + one for the process init, derived
+        # from the per-trial key so everything stays chunk-invariant.
+        allk = jax.vmap(lambda kk: jax.random.split(kk, rounds + 1))(keys)
+        pstate = process.init(allk[:, 0], n)
+        est0 = jnp.ones((chunk, n), jnp.float32)
+
+        def body(carry, kr):
+            pstate, est, t = carry
+            pstate, T1, T2 = process.step(pstate, kr, n, r_max)
+            s = jnp.cumsum(T1, axis=-1) + T2        # eq. (1), per round
+            out = dict(eval_fn(s)) if eval_fn is not None else {}
+            for sp, plan, Cb in zip(ad_specs, ad_plans, ad_mats):
+                # assignment uses feedback from *previous* rounds only.
+                w_of_row = scheduling.greedy_row_assignment_batch(
+                    Cb, est, gamma=gamma)           # (chunk, n)
+                # row p's slots are executed by worker w_of_row[p]: permute
+                # the worker axis, then the static gather plan applies.
+                s2 = jnp.take_along_axis(s, w_of_row[..., None], axis=1)
+                tau = task_arrival_times_gather(plan, s2)
+                out[sp.name] = _smallest(tau, ks)[..., -1:]
+            obs = T1.mean(axis=-1)                  # per-worker compute time
+            est = jnp.where(t == 0, obs, beta * est + (1.0 - beta) * obs)
+            return (pstate, est, t + 1), {nm: v[..., 0] for nm, v in
+                                          out.items()}
+
+        init = (pstate, est0, jnp.zeros((), jnp.int32))
+        _, ys = jax.lax.scan(body, init, jnp.swapaxes(allk[:, 1:], 0, 1))
+        return ys                                   # {name: (rounds, chunk)}
+
+    return rounds_fn
+
+
+_ROUNDS_CACHE: dict = {}
+
+
+def _get_rounds_exec(specs: Tuple[SchemeSpec, ...], process, n: int,
+                     r_max: int, ks: int, rounds: int, beta: float,
+                     gamma: float):
+    cache_key = None
+    try:
+        cache_key = (specs, process, n, r_max, ks, rounds, beta, gamma)
+        hit = _ROUNDS_CACHE.get(cache_key)
+        if hit is not None:
+            return hit
+    except TypeError:               # unhashable custom process: uncached
+        cache_key = None
+
+    rounds_fn = _build_rounds_fn(specs, process, n, r_max, ks, rounds,
+                                 beta, gamma)
+
+    def sums_scan(keys3):           # (nc, chunk, 2) -> per-round moments
+        zeros = {sp.name: jnp.zeros((rounds,), jnp.float32) for sp in specs}
+        init = tuple({k2: v for k2, v in zeros.items()} for _ in range(4))
+
+        def body(carry, kc):
+            ys = rounds_fn(kc)
+            s0, s1, c0, c1 = carry
+            cum = {k2: jnp.cumsum(v, axis=0) for k2, v in ys.items()}
+            s0 = {k2: s0[k2] + ys[k2].sum(axis=1) for k2 in s0}
+            s1 = {k2: s1[k2] + jnp.square(ys[k2]).sum(axis=1) for k2 in s1}
+            c0 = {k2: c0[k2] + cum[k2].sum(axis=1) for k2 in c0}
+            c1 = {k2: c1[k2] + jnp.square(cum[k2]).sum(axis=1) for k2 in c1}
+            return (s0, s1, c0, c1), None
+
+        carry, _ = jax.lax.scan(body, init, keys3)
+        return carry
+
+    def samples_scan(keys3):        # (nc, chunk, 2) -> {name: (nc, R, chunk)}
+        def body(carry, kc):
+            return carry, rounds_fn(kc)
+
+        _, ys = jax.lax.scan(body, None, keys3)
+        return ys
+
+    exec_ = (jax.jit(rounds_fn), jax.jit(sums_scan), jax.jit(samples_scan))
+    if cache_key is not None:
+        _ROUNDS_CACHE[cache_key] = exec_
+    return exec_
+
+
+def _check_rounds_args(specs, n, ks, rounds):
+    specs = _check_specs(specs, n)
+    for sp in specs:
+        if sp.kind == "tau":
+            raise ValueError(f"{sp.name}: tau specs are single-round only")
+    if not 1 <= ks <= n:
+        raise ValueError(f"need 1 <= k <= n={n}, got k={ks}")
+    if rounds < 1:
+        raise ValueError(f"need rounds >= 1, got {rounds}")
+    return specs
+
+
+def _run_rounds(specs, process, n, *, rounds: int, k: int, trials: int,
+                seed: int, chunk: Optional[int], beta: float, gamma: float,
+                want_samples: bool):
+    from .cluster import as_process
+    process = as_process(process)
+    specs = _check_rounds_args(specs, n, k, rounds)
+    r_max = max(sp.load for sp in specs)
+    chunk = trials if chunk is None else max(1, min(int(chunk), trials))
+    jrounds, jsums, jsamples = _get_rounds_exec(
+        specs, process, n, r_max, k, rounds, beta, gamma)
+
+    keys = jax.random.split(jax.random.PRNGKey(seed), trials)
+    nc = trials // chunk
+    main = nc * chunk
+    main_keys = keys[:main].reshape(nc, chunk, 2)
+    tail_keys = keys[main:]
+
+    if want_samples:
+        ys = jsamples(main_keys)
+        parts = {nm: [jnp.moveaxis(v, 1, -1).reshape(main, rounds)]
+                 for nm, v in ys.items()}       # (nc, R, chunk)->(trials, R)
+        if main < trials:
+            for nm, v in jrounds(tail_keys).items():
+                parts[nm].append(v.T)           # (R, tail) -> (tail, R)
+        return {nm: jnp.concatenate(vs, axis=0) if len(vs) > 1 else vs[0]
+                for nm, vs in parts.items()}
+
+    s0, s1, c0, c1 = jsums(main_keys)
+    if main < trials:
+        ys = jrounds(tail_keys)
+        cum = {k2: jnp.cumsum(v, axis=0) for k2, v in ys.items()}
+        s0 = {k2: s0[k2] + ys[k2].sum(axis=1) for k2 in s0}
+        s1 = {k2: s1[k2] + jnp.square(ys[k2]).sum(axis=1) for k2 in s1}
+        c0 = {k2: c0[k2] + cum[k2].sum(axis=1) for k2 in c0}
+        c1 = {k2: c1[k2] + jnp.square(cum[k2]).sum(axis=1) for k2 in c1}
+
+    def moments(sum_, sumsq):
+        mu = np.asarray(sum_) / trials
+        var = np.maximum(np.asarray(sumsq) / trials - mu * mu, 0.0)
+        return mu, np.sqrt(var / trials)
+
+    per_round, stderr, wallclock, wc_stderr = {}, {}, {}, {}
+    for nm in s0:
+        per_round[nm], stderr[nm] = moments(s0[nm], s1[nm])
+        wallclock[nm], wc_stderr[nm] = moments(c0[nm], c1[nm])
+    return per_round, stderr, wallclock, wc_stderr
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundsResult:
+    """Wall-clock trajectories from a multi-round sweep.
+
+    ``per_round[name]``  — (rounds,) mean completion time of each round;
+    ``wallclock[name]``  — (rounds,) mean *cumulative* wall-clock after each
+                           round (the x-axis of a loss-vs-time curve);
+    ``stderr`` / ``wallclock_stderr`` — matching MC standard errors.
+    """
+    per_round: Dict[str, np.ndarray]
+    stderr: Dict[str, np.ndarray]
+    wallclock: Dict[str, np.ndarray]
+    wallclock_stderr: Dict[str, np.ndarray]
+    trials: int
+    rounds: int
+    n: int
+    k: int
+
+    def _get(self, d: Dict[str, np.ndarray], name: str) -> np.ndarray:
+        if name not in d:
+            raise ValueError(f"unknown scheme {name!r}; have "
+                             f"{sorted(d)}")
+        return d[name]
+
+    def mean_round(self, name: str) -> float:
+        """Mean completion time per round, averaged over the run."""
+        return float(self._get(self.per_round, name).mean())
+
+    def total(self, name: str) -> float:
+        """Mean wall-clock of the whole R-round run."""
+        return float(self._get(self.wallclock, name)[-1])
+
+
+def sweep_rounds(specs: Sequence[SchemeSpec], process, n: int, *,
+                 rounds: int, k: int, trials: int = 20000, seed: int = 0,
+                 chunk: Optional[int] = None, feedback_beta: float = 0.7,
+                 coverage_gamma: float = 0.5) -> RoundsResult:
+    """Evaluate every scheme over ``rounds`` consecutive rounds of ONE
+    shared ``DelayProcess`` realization per trial.
+
+    Parameters
+    ----------
+    specs:   schemes to evaluate; ``adaptive_spec`` entries re-assign their
+             base matrix's rows each round from delay feedback.
+    process: a ``DelayProcess`` (or a stateless ``DelayModel``, coerced to
+             the zero-correlation ``IIDProcess``).
+    rounds:  number of consecutive SGD rounds scanned per trial.
+    k:       computation target (single k; the rounds axis replaces the
+             all-k axis of single-round sweeps).
+    trials/seed/chunk: as in ``sweep`` — per-trial subkeys, chunk-invariant
+             streaming with O(chunk * n * r_max) memory.
+    feedback_beta:  EMA weight on past feedback in adaptive schemes.
+    coverage_gamma: per-slot coverage discount of the greedy assignment.
+    """
+    per_round, stderr, wallclock, wc_stderr = _run_rounds(
+        specs, process, n, rounds=rounds, k=k, trials=trials, seed=seed,
+        chunk=chunk, beta=feedback_beta, gamma=coverage_gamma,
+        want_samples=False)
+    return RoundsResult(per_round=per_round, stderr=stderr,
+                        wallclock=wallclock, wallclock_stderr=wc_stderr,
+                        trials=trials, rounds=rounds, n=n, k=k)
+
+
+def trajectory_samples(spec: SchemeSpec, process, n: int, *, rounds: int,
+                       k: int, trials: int = 10000, seed: int = 0,
+                       chunk: Optional[int] = None,
+                       feedback_beta: float = 0.7,
+                       coverage_gamma: float = 0.5) -> Array:
+    """Per-trial completion-time trajectories for one scheme: shape
+    ``(trials, rounds)``; ``jnp.cumsum(..., axis=1)`` gives per-trial
+    wall-clock curves."""
+    return _run_rounds([spec], process, n, rounds=rounds, k=k,
+                       trials=trials, seed=seed, chunk=chunk,
+                       beta=feedback_beta, gamma=coverage_gamma,
+                       want_samples=True)[spec.name]

@@ -11,12 +11,30 @@ Implemented schedules:
   * Random assignment   (RA, [18]):          each row an independent random
     permutation of [n] (requires r == n)
   * round-robin block / custom matrices via validation helpers.
+
+Adaptive row assignment
+-----------------------
+The static schedules fix which worker executes which row forever.  Under
+heterogeneous, *persistent* stragglers (see ``repro.core.cluster``) that
+leaves completion time hostage to the luck of which rows the slow machines
+drew: the tasks whose early copies all sit at stragglers arrive last.
+``greedy_row_assignment`` re-permutes the rows of a base TO matrix each
+round from observed per-worker delay feedback — fastest workers pick first,
+and each picks the row whose leading slots cover the currently
+least-covered tasks (coverage discounted by slot position and weighted by
+the picker's speed).  ``AdaptiveScheduler`` wraps this with an EMA of the
+feedback for use in training loops; the batched JAX variant
+(``greedy_row_assignment_batch``) runs per-trial inside the fused rounds
+engine (``repro.core.montecarlo.sweep_rounds``).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
@@ -28,6 +46,9 @@ __all__ = [
     "to_matrix",
     "SCHEDULES",
     "Schedule",
+    "greedy_row_assignment",
+    "greedy_row_assignment_batch",
+    "AdaptiveScheduler",
 ]
 
 
@@ -135,3 +156,135 @@ def to_matrix(name: str, n: int, r: int, **kw) -> np.ndarray:
     except KeyError:
         raise ValueError(f"unknown schedule {name!r}; have {sorted(SCHEDULES)}")
     return sched(n, r, **kw)
+
+
+# --------------------- adaptive row assignment -------------------------------
+
+def greedy_row_assignment(C: np.ndarray, speed_est=None, *,
+                          gamma: float = 0.5) -> np.ndarray:
+    """Assign workers to the rows of base TO matrix ``C`` from estimated
+    per-worker delays: fastest workers pick first, each taking the row whose
+    leading slots cover the least-covered tasks.
+
+    Parameters
+    ----------
+    C:         base (n, r) TO matrix whose rows get re-assigned.
+    speed_est: length-n estimated per-task delay of each worker (smaller =
+               faster); ``None`` means no feedback yet (uniform speeds —
+               the greedy then just spaces coverage, e.g. rows 0, r, 2r, …
+               of a cyclic matrix go to the first pickers).
+    gamma:     per-slot coverage discount: slot j of a chosen row adds
+               ``gamma**j / speed_est[w]`` coverage to its task — earlier
+               slots (and faster workers) count for more, mirroring eq. (1)'s
+               sequential arrivals.
+
+    Returns ``worker_of_row``, a permutation with ``worker_of_row[p] = w``
+    meaning worker ``w`` executes row ``p``.  The induced effective schedule
+    is ``C_eff[w] = C[row_of_worker[w]]`` with ``row_of_worker`` the inverse
+    permutation (``AdaptiveScheduler.matrix`` builds it).
+
+    This delegates to the batched JAX implementation (one source of truth),
+    so training loops and the fused rounds engine pick identical rows for
+    identical feedback.
+    """
+    C = np.asarray(C)
+    n, r = C.shape
+    est = (np.ones(n, np.float32) if speed_est is None
+           else np.asarray(speed_est, np.float32))
+    if est.shape != (n,):
+        raise ValueError(f"speed_est must have shape ({n},), got {est.shape}")
+    fn = _jitted_greedy(tuple(tuple(int(v) for v in row) for row in C),
+                        float(gamma))
+    return np.asarray(fn(jnp.asarray(est)[None])[0], np.int64)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_greedy(C_tup: tuple, gamma: float):
+    C = np.asarray(C_tup, np.int64)
+    return jax.jit(lambda est: greedy_row_assignment_batch(C, est,
+                                                           gamma=gamma))
+
+
+def greedy_row_assignment_batch(C: np.ndarray, est: jax.Array, *,
+                                gamma: float = 0.5) -> jax.Array:
+    """Batched JAX twin of ``greedy_row_assignment``: ``est`` has shape
+    (..., n); returns ``worker_of_row`` of the same shape (int32).  Pure and
+    jit/scan-friendly (``C`` is baked in at trace time); used per-trial
+    inside the fused rounds engine."""
+    C = np.asarray(C)
+    n, r = C.shape
+    Cj = jnp.asarray(C)
+    disc = jnp.asarray(gamma ** np.arange(r), jnp.float32)
+    big = jnp.float32(np.finfo(np.float32).max)
+
+    def one(e):                                      # e (n,)
+        order = jnp.argsort(e)                       # stable; fastest first
+
+        def pick(carry, w):
+            cov, taken, w_of_row = carry
+            scores = (disc[None, :] * cov[Cj]).sum(-1)
+            scores = jnp.where(taken, big, scores)
+            p = jnp.argmin(scores)                   # ties -> lowest row
+            w_of_row = w_of_row.at[p].set(w.astype(jnp.int32))
+            taken = taken.at[p].set(True)
+            add = disc / jnp.maximum(e[w], 1e-30)
+            cov = cov.at[Cj[p]].add(add)
+            return (cov, taken, w_of_row), None
+
+        init = (jnp.zeros(n, jnp.float32), jnp.zeros(n, bool),
+                jnp.zeros(n, jnp.int32))
+        (_, _, w_of_row), _ = jax.lax.scan(pick, init, order)
+        return w_of_row
+
+    batch = est.shape[:-1]
+    flat = est.reshape((-1, n))
+    out = jax.vmap(one)(flat)
+    return out.reshape(batch + (n,))
+
+
+class AdaptiveScheduler:
+    """Stateful round-to-round re-permutation of a base TO matrix.
+
+    Call ``matrix()`` before each round for the effective schedule,
+    ``observe(t1)`` after it with the round's per-worker compute delays
+    ((n,) means or the raw (n, r) slot delays).  Feedback is an EMA with
+    weight ``beta`` on history, so transient hiccups don't thrash the
+    assignment but persistent stragglers migrate to low-impact rows.
+    """
+
+    def __init__(self, C: np.ndarray, *, beta: float = 0.7,
+                 gamma: float = 0.5):
+        validate_to_matrix(C)
+        self.C = np.asarray(C)
+        self.beta = float(beta)
+        self.gamma = float(gamma)
+        self.est: np.ndarray | None = None
+        self._assignment: np.ndarray | None = None   # valid until observe()
+
+    def worker_of_row(self) -> np.ndarray:
+        if self._assignment is None:
+            self._assignment = greedy_row_assignment(self.C, self.est,
+                                                     gamma=self.gamma)
+        return self._assignment
+
+    def row_of_worker(self) -> np.ndarray:
+        w_of_row = self.worker_of_row()
+        inv = np.empty_like(w_of_row)
+        inv[w_of_row] = np.arange(len(w_of_row))
+        return inv
+
+    def matrix(self) -> np.ndarray:
+        """The effective TO matrix for the coming round: row ``w`` is what
+        worker ``w`` executes."""
+        return self.C[self.row_of_worker()]
+
+    def observe(self, t1) -> None:
+        obs = np.asarray(t1, np.float64)
+        if obs.ndim == 2:
+            obs = obs.mean(-1)
+        if obs.shape != (self.C.shape[0],):
+            raise ValueError(f"feedback must be (n,) or (n, r) for "
+                             f"n={self.C.shape[0]}; got {obs.shape}")
+        self.est = (obs if self.est is None
+                    else self.beta * self.est + (1.0 - self.beta) * obs)
+        self._assignment = None

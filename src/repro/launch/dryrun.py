@@ -164,7 +164,9 @@ def build_train(cfg, shape: str, ctx: MeshCtx, *, r: int, k_frac: float,
     rng_sh = NamedSharding(ctx.mesh, P(None))
 
     def fn(state, toks, labs, rng, extras):
-        return step(state, toks, labs, rng, extras or None)
+        new_state, metrics, _cluster = step(state, toks, labs, rng,
+                                            extras=extras or None)
+        return new_state, metrics
 
     jitted = jax.jit(fn, in_shardings=(state_sh, tok_sh["t"], tok_sh["l"],
                                        rng_sh, extras_sh),

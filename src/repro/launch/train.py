@@ -1,12 +1,14 @@
 """Production training launcher.
 
 Runs straggler-scheduled training of any ``--arch`` (full or ``--smoke``
-reduced config) with the paper's CS/SS/RA schedules. On real hardware the
+reduced config) with the paper's CS/SS/RA schedules, round-aware cluster
+processes, and optional adaptive row re-assignment. On real hardware the
 same entrypoint shards over the production mesh (``--mesh pod|multipod``);
 on this CPU container use ``--smoke --mesh local``.
 
   PYTHONPATH=src python -m repro.launch.train --arch phi4-mini-3.8b \
-      --smoke --steps 20 --n 4 --r 2 --k 3 --schedule ss
+      --smoke --steps 20 --n 4 --r 2 --k 3 --schedule ss \
+      --cluster markov --persistence 0.95 --spread 3 --adaptive
 """
 from __future__ import annotations
 
@@ -15,10 +17,12 @@ import dataclasses
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from ..configs import ARCH_IDS, get_config
-from ..core import (BimodalStragglerDelays, RoundSpec, scenario1)
+from ..core import (AR1Process, AdaptiveScheduler, BimodalStragglerDelays,
+                    RoundSpec, ec2_cluster, heterogeneous_scales, scenario1)
 from ..data import TaskPartition, lm_task_batches
 from ..models import num_params
 from ..optim import adamw, cosine_schedule
@@ -26,6 +30,24 @@ from ..sharding import mesh_context
 from ..train import init_train_state, make_straggler_train_step
 from ..ckpt import save_checkpoint, load_checkpoint, latest_checkpoint
 from .mesh import make_mesh_ctx, make_local_mesh_ctx
+
+
+def build_cluster(args):
+    """The round delay source: an i.i.d. model or a stateful process.
+    ``--straggle`` layers i.i.d. bimodal slowdowns on the base model in
+    every mode (stateful processes add their own regime chain on top)."""
+    base = (BimodalStragglerDelays(p_straggle=0.3, slow=8.0)
+            if args.straggle else scenario1())
+    if args.cluster == "iid":
+        return base
+    if args.cluster == "markov":
+        return ec2_cluster(args.n, spread=args.spread, p_slow=args.p_slow,
+                           persistence=args.persistence, slow=args.slow,
+                           base=base, seed=args.n)
+    return AR1Process(base=base,
+                      worker_scale=heterogeneous_scales(
+                          args.n, args.spread, seed=args.n),
+                      rho=args.persistence, sigma=0.4)
 
 
 def main(argv=None):
@@ -39,10 +61,23 @@ def main(argv=None):
     ap.add_argument("--k", type=int, default=3)
     ap.add_argument("--schedule", default="ss", choices=("cs", "ss", "ra",
                                                          "block"))
+    ap.add_argument("--adaptive", action="store_true",
+                    help="re-assign schedule rows each round from feedback")
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--lr", type=float, default=3e-4)
-    ap.add_argument("--straggle", action="store_true")
+    ap.add_argument("--straggle", action="store_true",
+                    help="layer i.i.d. bimodal slowdowns on the base "
+                         "delays (all cluster modes)")
+    ap.add_argument("--cluster", default="iid",
+                    choices=("iid", "markov", "ar1"),
+                    help="round-aware delay process for the virtual cluster")
+    ap.add_argument("--persistence", type=float, default=0.9,
+                    help="straggler persistence (markov) / AR(1) rho")
+    ap.add_argument("--spread", type=float, default=2.0,
+                    help="worker speed heterogeneity (geometric spread)")
+    ap.add_argument("--p-slow", type=float, default=0.2)
+    ap.add_argument("--slow", type=float, default=5.0)
     ap.add_argument("--mesh", default="local",
                     choices=("local", "pod", "multipod"))
     ap.add_argument("--ckpt-dir", default=None)
@@ -64,8 +99,7 @@ def main(argv=None):
 
     spec = RoundSpec(n=args.n, r=args.n if args.schedule == "ra" else args.r,
                      k=args.k, schedule=args.schedule)
-    delay = (BimodalStragglerDelays(p_straggle=0.3, slow=8.0)
-             if args.straggle else scenario1())
+    delay = build_cluster(args)
     part = TaskPartition(n=args.n, global_batch=args.batch,
                          seq_len=args.seq, vocab=cfg.vocab_size,
                          source="bigram")
@@ -81,15 +115,25 @@ def main(argv=None):
                 start = int(state.step)
                 print(f"resumed from {path} at step {start}")
         print(f"{cfg.name}: {num_params(state.params):,} params | "
-              f"round n={spec.n} r={spec.r} k={spec.k} {args.schedule}")
+              f"round n={spec.n} r={spec.r} k={spec.k} {args.schedule}"
+              f"{'+adaptive' if args.adaptive else ''} | "
+              f"cluster {args.cluster}")
         step_fn = jax.jit(make_straggler_train_step(cfg, opt, spec, delay))
-        C = spec.to_matrix()
+        base_C = spec.to_matrix()
+        sched = AdaptiveScheduler(base_C) if args.adaptive else None
+        cluster = None
         vclock = 0.0
         t0 = time.time()
         for i in range(start, args.steps):
+            C = base_C if sched is None else sched.matrix()
+            row = (None if sched is None
+                   else jnp.asarray(sched.row_of_worker()))
             toks, labs = lm_task_batches(part, C, i)
-            state, m = step_fn(state, toks, labs,
-                               jax.random.PRNGKey(4242 + i))
+            state, m, cluster = step_fn(state, toks, labs,
+                                        jax.random.PRNGKey(4242 + i),
+                                        cluster, row)
+            if sched is not None:
+                sched.observe(np.asarray(m["worker_t1"]))
             vclock += float(m["completion_time"])
             if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
                 print(f"step {i:5d}  loss {float(m['loss']):.4f}  "

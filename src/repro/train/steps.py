@@ -9,6 +9,17 @@ weights the per-(worker, slot) losses so the resulting gradient equals the
 unbiased eq.-(61) estimator. The round's virtual completion time is a step
 metric.
 
+Round-awareness: delays come from a stateful ``DelayProcess``
+(``repro.core.cluster``) whose per-worker straggler state threads through
+the step as an explicit ``cluster`` pytree — pass each step's returned
+cluster state into the next step and consecutive rounds see persistent,
+worker-specific straggling (stateless ``DelayModel``s remain the
+zero-correlation special case with an empty state).  An optional traced
+``row_of_worker`` permutation re-assigns the base TO matrix's rows to
+workers for the round (the adaptive schedule; see
+``repro.core.scheduling.AdaptiveScheduler``) — the caller must build the
+round's data with the matching effective matrix ``C[row_of_worker]``.
+
 The weighted-loss trick avoids materializing per-worker gradient pytrees:
     grad( sum_{i,s} w[i,s] * loss_{i,s} / k ) = (1/k) sum w[i,s] g_{i,s}.
 """
@@ -23,7 +34,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.aggregator import RoundSpec, StragglerAggregator
-from ..core.completion import first_k_distinct_mask, slot_arrival_times
+from ..core.cluster import as_process
+from ..core.completion import slot_arrival_times, winner_mask_gather
+from ..core.montecarlo import task_gather_plan
 from ..models import ModelConfig, forward, init_params
 from ..optim import Optimizer, clip_by_global_norm
 from ..sharding import DATA, shard
@@ -102,16 +115,22 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer, *,
 
 
 def make_straggler_train_step(cfg: ModelConfig, opt: Optimizer,
-                              round_spec: RoundSpec, delay_model, *,
+                              round_spec: RoundSpec, delay, *,
                               clip_norm: float = 1.0,
                               scan_slots: bool = True):
     """The paper's scheduled round as a jittable SGD step.
 
     Inputs per step: ``slot_tokens``/``slot_labels`` (r, n, b, S) from
-    ``repro.data.lm_task_batches``, an rng for the delay realization, and
+    ``repro.data.lm_task_batches``, an rng for the delay realization, the
+    previous round's ``cluster`` state (``None`` starts a fresh cluster;
+    pass the returned state back in for persistent straggling), optionally
+    a traced ``row_of_worker`` permutation (adaptive schedules; data must
+    then come from the effective matrix ``C[row_of_worker]``), and
     optionally ``extras`` (dict of slot-major modality inputs, e.g.
-    ``enc_frames`` (r, n, b, T_enc, D) for whisper). Returns metrics incl.
-    the round's virtual completion time (eq. 6) and the winner count.
+    ``enc_frames`` (r, n, b, T_enc, D) for whisper). Returns
+    ``(state, metrics, cluster)`` with metrics incl. the round's virtual
+    completion time (eq. 6), the winner count, and the per-worker observed
+    compute delays (``worker_t1``) that feed adaptive scheduling.
 
     Layout: the worker axis is FLATTENED into the batch (worker-major), so
     each data shard holds exactly its workers' sequences and the model
@@ -121,15 +140,26 @@ def make_straggler_train_step(cfg: ModelConfig, opt: Optimizer,
     (used by the dry-run for exact HLO cost accounting).
     """
     n, r, k = round_spec.n, round_spec.r, round_spec.k
-    C = jnp.asarray(round_spec.to_matrix())
+    process = as_process(delay)
+    base_C = round_spec.to_matrix()
+    plan = task_gather_plan(base_C, n)
 
-    def step(state: TrainState, slot_tokens, slot_labels, rng, extras=None):
+    def step(state: TrainState, slot_tokens, slot_labels, rng, cluster=None,
+             row_of_worker=None, extras=None):
         extras = extras or {}
         b = slot_tokens.shape[2]
-        # --- delay realization & first-k-distinct winner weights ---------
-        T1, T2 = delay_model.sample(rng, 1, n, r)
-        arr = slot_arrival_times(T1, T2)[0]                  # (n, r)
-        weights, t_done = first_k_distinct_mask(C, arr, n, k)  # (n, r)
+        # --- cluster round: stateful delays + first-k-distinct weights ----
+        if cluster is None:
+            cluster = process.init(jax.random.fold_in(rng, 0x0c10)[None], n)
+        cluster, T1, T2 = process.step(cluster, rng[None], n, r)
+        arr = slot_arrival_times(T1, T2)[0]                  # (n, r), eq. (1)
+        if row_of_worker is None:
+            weights, t_done = winner_mask_gather(base_C, plan, arr, n, k)
+        else:
+            worker_of_row = jnp.argsort(row_of_worker)       # inverse perm
+            w2, t_done = winner_mask_gather(base_C, plan,
+                                            arr[worker_of_row], n, k)
+            weights = w2[row_of_worker]                      # worker-major
 
         def slot_loss(p, s):
             toks = slot_tokens[s].reshape(n * b, -1)         # worker-major
@@ -163,8 +193,9 @@ def make_straggler_train_step(cfg: ModelConfig, opt: Optimizer,
         params = opt.apply(state.params, updates)
         metrics = {"loss": l, "aux": aux, "grad_norm": gnorm,
                    "completion_time": t_done,
-                   "winners": (weights > 0).sum()}
-        return TrainState(params, opt_state, state.step + 1), metrics
+                   "winners": (weights > 0).sum(),
+                   "worker_t1": T1[0].mean(axis=-1)}
+        return TrainState(params, opt_state, state.step + 1), metrics, cluster
 
     return step
 

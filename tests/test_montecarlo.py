@@ -20,9 +20,11 @@ from repro.core import (cyclic_to_matrix, staircase_to_matrix,
                         simulate_completion, simulate_lower_bound,
                         simulate_pc_completion, simulate_pcmm_completion,
                         mean_completion_time, to_spec, lb_spec, pc_spec,
-                        pcmm_spec, sweep, completion_samples,
-                        task_arrival_samples, task_gather_plan,
-                        task_arrival_times_gather)
+                        pcmm_spec, tau_spec, adaptive_spec, sweep,
+                        sweep_rounds, completion_samples,
+                        trajectory_samples, task_arrival_samples,
+                        task_gather_plan, task_arrival_times_gather,
+                        ec2_cluster, IIDProcess)
 
 
 def _random_to_matrix(n, r, seed):
@@ -250,6 +252,109 @@ def test_sweep_rejects_bad_input():
         res.at_k("a", 3)                                  # wrong k for ks=2
     with pytest.raises(ValueError):
         sweep([pcmm_spec(1)], m, 4, trials=8)             # n*r < 2n-1
+
+
+def test_at_k_edge_cases():
+    """SweepResult.at_k: the single-k (lax.top_k) path and the all-k (full
+    sort) path agree at every k on shared draws; unknown names raise."""
+    n, r, trials = 8, 4, 800
+    m = scenario1()
+    specs = [to_spec("cs", cyclic_to_matrix(n, r)), lb_spec(r)]
+    allk = sweep(specs, m, n, trials=trials, seed=4)
+    for k in range(1, n + 1):
+        single = sweep(specs, m, n, trials=trials, seed=4, ks=k)
+        for name in ("cs", "lb"):
+            assert np.isclose(allk.at_k(name, k), single.at_k(name, k),
+                              rtol=1e-6), (name, k)
+    with pytest.raises(ValueError, match="unknown scheme"):
+        allk.at_k("nope", 3)
+    with pytest.raises(ValueError):
+        allk.at_k("cs")                          # all-k needs explicit k
+    with pytest.raises(ValueError):
+        allk.at_k("cs", 0)                       # out of range
+
+
+# ----------------------------- rounds axis -----------------------------------
+
+def test_sweep_rounds_validation():
+    n, r = 6, 3
+    m = scenario1()
+    C = cyclic_to_matrix(n, r)
+    with pytest.raises(ValueError, match="rounds axis"):
+        sweep([adaptive_spec("a", C)], m, n, trials=8)
+    with pytest.raises(ValueError, match="single-round"):
+        sweep_rounds([tau_spec("t", C)], m, n, rounds=2, k=3, trials=8)
+    with pytest.raises(ValueError):
+        sweep_rounds([to_spec("a", C)], m, n, rounds=0, k=3, trials=8)
+    with pytest.raises(ValueError):
+        sweep_rounds([to_spec("a", C)], m, n, rounds=2, k=9, trials=8)
+    res = sweep_rounds([to_spec("a", C)], m, n, rounds=2, k=3, trials=64)
+    with pytest.raises(ValueError, match="unknown scheme"):
+        res.mean_round("nope")
+
+
+def test_rounds_trajectories_chunk_invariant_and_consistent():
+    n, r, k, trials, rounds = 6, 3, 5, 400, 5
+    # scalar-mean base: per-trial draws are bit-identical under any
+    # chunking (vector-mean bases like ec2_like compile to slightly
+    # different fusions per chunk shape — 1-ulp, covered by allclose in
+    # test_ec2_cluster_chunking_close below).
+    from repro.core import MarkovRegimeProcess, heterogeneous_scales
+    proc = MarkovRegimeProcess(base=scenario1(),
+                               worker_scale=heterogeneous_scales(n, 2.0),
+                               persistence=0.9)
+    spec = to_spec("cs", cyclic_to_matrix(n, r))
+    full = np.asarray(trajectory_samples(spec, proc, n, rounds=rounds, k=k,
+                                         trials=trials, seed=0))
+    part = np.asarray(trajectory_samples(spec, proc, n, rounds=rounds, k=k,
+                                         trials=trials, seed=0, chunk=77))
+    assert full.shape == (trials, rounds)
+    assert (full == part).all()
+    # sweep_rounds moments match the raw trajectories
+    res = sweep_rounds([spec], proc, n, rounds=rounds, k=k, trials=trials,
+                       seed=0, chunk=128)
+    np.testing.assert_allclose(res.per_round["cs"], full.mean(0), rtol=1e-5)
+    np.testing.assert_allclose(res.wallclock["cs"],
+                               np.cumsum(full, axis=1).mean(0), rtol=1e-5)
+    np.testing.assert_allclose(res.wallclock["cs"],
+                               np.cumsum(res.per_round["cs"]), rtol=1e-5)
+    assert res.total("cs") > res.mean_round("cs") > 0
+
+
+def test_ec2_cluster_chunking_close():
+    """Vector-mean bases (ec2_like) are chunk-invariant to float32 ulp —
+    XLA fuses the truncnorm math differently per chunk shape."""
+    n, r, k = 6, 3, 5
+    proc = ec2_cluster(n, spread=2.0, persistence=0.9)
+    spec = to_spec("cs", cyclic_to_matrix(n, r))
+    full = np.asarray(trajectory_samples(spec, proc, n, rounds=4, k=k,
+                                         trials=300, seed=0))
+    part = np.asarray(trajectory_samples(spec, proc, n, rounds=4, k=k,
+                                         trials=300, seed=0, chunk=77))
+    np.testing.assert_allclose(part, full, rtol=1e-5)
+
+
+def test_adaptive_beats_static_on_persistent_heterogeneous_cluster():
+    """ISSUE-2 acceptance: with worker-specific persistent straggling, the
+    feedback-driven row re-assignment beats BOTH static schedules' mean
+    wall-clock per round (paired comparison — shared realizations)."""
+    n, r, k = 10, 3, 8
+    proc = ec2_cluster(n, spread=3.0, p_slow=0.25, persistence=0.95,
+                       slow=8.0)
+    cs = cyclic_to_matrix(n, r)
+    res = sweep_rounds([to_spec("cs", cs),
+                        to_spec("ss", staircase_to_matrix(n, r)),
+                        adaptive_spec("adapt", cs), lb_spec(r)],
+                       proc, n, rounds=16, k=k, trials=1200, seed=0)
+    adapt = res.mean_round("adapt")
+    assert adapt < res.mean_round("cs")
+    assert adapt < res.mean_round("ss")
+    assert res.mean_round("lb") < adapt          # oracle still dominates
+    # the adaptive edge needs feedback: round 0 (no history) is not better
+    # than cs beyond noise, later rounds are.
+    gap0 = res.per_round["cs"][0] - res.per_round["adapt"][0]
+    gap_late = (res.per_round["cs"][-4:] - res.per_round["adapt"][-4:]).mean()
+    assert gap_late > gap0
 
 
 def test_pc_keeps_own_threshold_in_single_k_sweeps():

@@ -1,11 +1,14 @@
-"""Unit + property tests for TO-matrix constructions (paper Sec. II, IV)."""
+"""Unit + property tests for TO-matrix constructions (paper Sec. II, IV)
+and the adaptive row-assignment layer."""
+import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (cyclic_to_matrix, staircase_to_matrix,
-                        random_assignment_to_matrix, to_matrix,
-                        validate_to_matrix)
+from repro.core import (AdaptiveScheduler, cyclic_to_matrix,
+                        greedy_row_assignment, greedy_row_assignment_batch,
+                        staircase_to_matrix, random_assignment_to_matrix,
+                        to_matrix, validate_to_matrix)
 
 
 def test_paper_example2_cs():
@@ -95,3 +98,93 @@ def test_property_ss_alternating_direction(n, data):
         d = np.mod(np.diff(C[i].astype(int)), n)
         expect = 1 if i % 2 == 0 else n - 1
         assert (d == expect).all()
+
+
+# ---------------------- adaptive row assignment ------------------------------
+
+class TestGreedyRowAssignment:
+    def test_is_permutation_any_feedback(self):
+        rng = np.random.default_rng(0)
+        for n, r in ((4, 1), (6, 3), (9, 4), (8, 8)):
+            C = cyclic_to_matrix(n, r)
+            for est in (None, rng.random(n) + 0.05):
+                w = greedy_row_assignment(C, est)
+                assert sorted(w.tolist()) == list(range(n))
+
+    def test_uniform_feedback_spaces_coverage(self):
+        """With no feedback the first floor(n/r) pickers take rows with
+        disjoint task sets (coverage spacing of a cyclic matrix)."""
+        n, r = 8, 2
+        C = cyclic_to_matrix(n, r)
+        w_of_row = greedy_row_assignment(C)
+        row_of_worker = np.empty(n, int)
+        row_of_worker[w_of_row] = np.arange(n)
+        first = [set(C[row_of_worker[w]].tolist()) for w in range(n // r)]
+        seen: set = set()
+        for tasks in first:
+            assert not (tasks & seen)
+            seen |= tasks
+
+    def test_fast_workers_pick_first(self):
+        """The slowest worker is assigned last, i.e. gets the row the
+        greedy ranks worst at its turn: remove it and the other
+        assignments are unchanged."""
+        n, r = 6, 2
+        C = cyclic_to_matrix(n, r)
+        est = np.array([1.0, 9.0, 1.1, 1.2, 1.3, 1.4])
+        w = greedy_row_assignment(C, est)
+        slow_row = int(np.where(w == 1)[0][0])
+        # rows are picked in fastest-first order; the slow worker's row is
+        # the one left over after every faster worker chose.
+        order = np.argsort(est)
+        assert order[-1] == 1
+        taken = [int(np.where(w == o)[0][0]) for o in order[:-1]]
+        assert slow_row not in taken and len(set(taken)) == n - 1
+
+    def test_numpy_and_jax_batch_agree(self):
+        rng = np.random.default_rng(1)
+        for n, r in ((5, 2), (8, 3), (7, 7)):
+            C = cyclic_to_matrix(n, r)
+            est = rng.random((4, n)) + 0.05
+            got = np.asarray(greedy_row_assignment_batch(C, jnp.asarray(est)))
+            for b in range(4):
+                ref = greedy_row_assignment(C, est[b])
+                assert (got[b] == ref).all(), (n, r, b)
+
+    def test_feedback_shape_validated(self):
+        C = cyclic_to_matrix(4, 2)
+        with pytest.raises(ValueError):
+            greedy_row_assignment(C, np.ones(5))
+
+
+class TestAdaptiveScheduler:
+    def test_matrix_always_valid_and_ema_updates(self):
+        C = cyclic_to_matrix(6, 3)
+        s = AdaptiveScheduler(C)
+        M0 = s.matrix()
+        validate_to_matrix(M0, 6)
+        s.observe(np.array([1, 1, 1, 9, 1, 1.0]))
+        est1 = s.est.copy()
+        M1 = s.matrix()
+        validate_to_matrix(M1, 6)
+        # rows are a permutation of the base rows
+        assert sorted(map(tuple, M1.tolist())) == sorted(map(tuple,
+                                                             C.tolist()))
+        s.observe(np.ones((6, 3)))          # (n, r) feedback also accepted
+        assert not np.allclose(s.est, est1)
+        with pytest.raises(ValueError):
+            s.observe(np.ones(5))
+
+    def test_persistent_straggler_moves_to_leftover_row(self):
+        """After consistent feedback, the slow worker ends up assigned the
+        final leftover row (it picks last) and fast workers cover
+        disjoint leading tasks."""
+        n, r = 8, 2
+        s = AdaptiveScheduler(cyclic_to_matrix(n, r))
+        for _ in range(5):
+            s.observe(np.array([1, 1, 1, 1, 20, 1, 1, 1.0]))
+        w_of_row = s.worker_of_row()
+        # worker 4 picked last -> its row is whatever remained
+        assert sorted(w_of_row.tolist()) == list(range(n))
+        M = s.matrix()
+        validate_to_matrix(M, n)

@@ -8,7 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import RoundSpec, scenario1, cyclic_to_matrix
+from repro.core import (RoundSpec, scenario1, cyclic_to_matrix, ec2_cluster,
+                        greedy_row_assignment)
 from repro.data import TaskPartition, lm_task_batches, bigram_tokens
 from repro.models import ModelConfig, init_cache
 from repro.optim import (adamw, sgd, momentum, cosine_schedule,
@@ -66,7 +67,7 @@ class TestStragglerStep:
         first = last = None
         for i in range(40):
             toks, labs = lm_task_batches(part, C, i)
-            state, m = step(state, toks, labs, jax.random.PRNGKey(i))
+            state, m, _ = step(state, toks, labs, jax.random.PRNGKey(i))
             if first is None:
                 first = float(m["loss"])
             last = float(m["loss"])
@@ -81,7 +82,7 @@ class TestStragglerStep:
         part = TaskPartition(n=4, global_batch=4, seq_len=8, vocab=64)
         step = jax.jit(make_straggler_train_step(CFG, opt, spec, scenario1()))
         toks, labs = lm_task_batches(part, spec.to_matrix(), 0)
-        state, m = step(state, toks, labs, jax.random.PRNGKey(0))
+        state, m, _ = step(state, toks, labs, jax.random.PRNGKey(0))
         assert int(m["winners"]) == 4
 
     def test_equals_plain_step_when_k_n_r1(self):
@@ -97,7 +98,7 @@ class TestStragglerStep:
         stepA = jax.jit(make_straggler_train_step(CFG, opt, spec,
                                                   scenario1(),
                                                   clip_norm=1e9))
-        s1, mA = stepA(s1, toks, labs, jax.random.PRNGKey(5))
+        s1, mA, _ = stepA(s1, toks, labs, jax.random.PRNGKey(5))
 
         # plain step on the same data: tasks stacked into one batch.
         # C is cyclic with r=1 -> worker i computes task i, slot 0.
@@ -112,6 +113,58 @@ class TestStragglerStep:
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                        rtol=2e-4, atol=2e-6)
 
+    def test_cluster_state_threads_through_steps(self):
+        """Round-aware training: the DelayProcess state returned by one
+        step feeds the next, and with near-frozen stragglers the observed
+        per-worker delays stay correlated across consecutive rounds."""
+        opt = sgd(1e-2)
+        state = init_train_state(jax.random.PRNGKey(0), CFG, opt)
+        spec = RoundSpec(n=4, r=2, k=3, schedule="cs")
+        proc = ec2_cluster(4, spread=2.0, p_slow=0.5, persistence=0.98,
+                           slow=50.0)
+        part = TaskPartition(n=4, global_batch=8, seq_len=16, vocab=64)
+        step = jax.jit(make_straggler_train_step(CFG, opt, spec, proc))
+        C = spec.to_matrix()
+        cluster = None
+        t1s = []
+        for i in range(8):
+            toks, labs = lm_task_batches(part, C, i)
+            state, m, cluster = step(state, toks, labs,
+                                     jax.random.PRNGKey(i), cluster)
+            assert m["worker_t1"].shape == (4,)
+            t1s.append(np.asarray(m["worker_t1"]))
+        assert cluster is not None and np.asarray(cluster).shape == (1, 4)
+        t1s = np.stack(t1s)                     # (rounds, n)
+        # a worker slowed 50x stays slow: per-round worker ranking is
+        # essentially constant under persistence=0.98
+        ranks = np.argsort(np.argsort(t1s, axis=1), axis=1)
+        assert (ranks.std(axis=0).mean()) < 1.0
+
+    def test_row_permutation_matches_identity_when_trivial(self):
+        """Passing row_of_worker=arange must reproduce the static path
+        exactly; a nontrivial permutation with matching data keeps the
+        winner count at k."""
+        opt = sgd(1e-2)
+        spec = RoundSpec(n=4, r=2, k=3, schedule="cs")
+        part = TaskPartition(n=4, global_batch=8, seq_len=16, vocab=64)
+        step = jax.jit(make_straggler_train_step(CFG, opt, spec, scenario1()))
+        C = spec.to_matrix()
+        toks, labs = lm_task_batches(part, C, 0)
+        s0 = init_train_state(jax.random.PRNGKey(0), CFG, opt)
+        _, mA, _ = step(s0, toks, labs, jax.random.PRNGKey(7))
+        _, mB, _ = step(s0, toks, labs, jax.random.PRNGKey(7), None,
+                        jnp.arange(4))
+        assert float(mA["completion_time"]) == float(mB["completion_time"])
+        assert float(mA["loss"]) == float(mB["loss"])
+        # nontrivial permutation: effective schedule rows permuted, data
+        # built from the effective matrix
+        row = np.array([2, 3, 0, 1])
+        toks2, labs2 = lm_task_batches(part, C[row], 0)
+        _, mC, _ = step(s0, toks2, labs2, jax.random.PRNGKey(7), None,
+                        jnp.asarray(row))
+        assert int(mC["winners"]) == 3
+        assert float(mC["completion_time"]) > 0
+
     def test_unbiasedness_scaling(self):
         """eq. (61): with k < n the estimator scales by n/k — the expected
         gradient over delay randomness equals the full-data gradient.
@@ -125,7 +178,7 @@ class TestStragglerStep:
         step = jax.jit(make_straggler_train_step(CFG, opt, spec, scenario1()))
         vals = []
         for i in range(48):
-            _, m = step(state, toks, labs, jax.random.PRNGKey(i))
+            _, m, _c = step(state, toks, labs, jax.random.PRNGKey(i))
             vals.append(float(m["loss"]))
         # full-data mean loss over the 6 distinct tasks
         full = 0.0
