@@ -13,6 +13,7 @@ re-sampled per scheme, so cross-scheme gaps carried independent noise.
 """
 from __future__ import annotations
 
+import re
 import time
 
 import numpy as np
@@ -79,5 +80,49 @@ class Timer:
         self.us = (time.perf_counter() - self.t0) * 1e6
 
 
+# ------------------- machine-readable result collection ----------------------
+# ``emit`` keeps printing the established CSV rows AND records each row in a
+# module-level buffer; ``benchmarks.run`` drains the buffer after each job
+# into a BENCH_<name>.json artifact that the CI regression gate
+# (``benchmarks.regression_gate``) and workflow-artifact uploads consume.
+
+_ROWS: list[dict] = []
+
+_LEADING_NUMBER = re.compile(
+    r"\s*[-+]?\d[\d,]*(?:\.\d+)?(?:[eE][-+]?\d+)?")
+
+
+def _parse_value(v: str):
+    """Best-effort numeric parse of a derived field value: strips thousands
+    separators and trailing unit suffixes (``0.123ms``, ``5.85x``, ``+8.1%``,
+    ``1,234_trials_schemes_per_s``); non-numeric values stay strings."""
+    m = _LEADING_NUMBER.match(v)
+    if m and m.group(0).strip():
+        try:
+            return float(m.group(0).replace(",", ""))
+        except ValueError:
+            pass
+    return v
+
+
+def _parse_derived(derived: str) -> dict:
+    out = {}
+    for part in derived.split(";"):
+        key, sep, val = part.partition("=")
+        if sep:
+            out[key.strip()] = _parse_value(val)
+    return out
+
+
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
+    _ROWS.append({"name": name, "us_per_call": float(us_per_call),
+                  "derived": _parse_derived(derived),
+                  "derived_raw": derived})
+
+
+def drain_rows() -> list[dict]:
+    """Return the rows emitted since the last drain and clear the buffer."""
+    out = list(_ROWS)
+    _ROWS.clear()
+    return out

@@ -7,7 +7,6 @@ Paper claims validated here:
   * at r = n, SS cuts RA's average delay by ~19.45% (scen 1) / ~16.32%
     (scen 2).
 """
-import numpy as np
 
 from repro.core import scenario1, scenario2
 from .common import Timer, emit, scheme_means

@@ -11,7 +11,6 @@ calibration-dependent — our truncated-Gaussian stand-in yields ~9-19%
 depending on scenario, with every ordering claim preserved — see
 EXPERIMENTS.md); SS-LB gap small and shrinking with r.
 """
-import numpy as np
 
 from repro.core import ec2_like
 from .common import Timer, emit, scheme_means

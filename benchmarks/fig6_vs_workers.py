@@ -8,7 +8,6 @@ constant (a d-vector either way) — that scaling is what makes the uncoded
 schemes improve with n in the paper."""
 import dataclasses
 
-import numpy as np
 
 from repro.core import ec2_like
 from .common import Timer, emit, scheme_means

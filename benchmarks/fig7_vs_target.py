@@ -2,7 +2,6 @@
 Claims: completion time increases with k; scheme gaps widen with k; SS
 coincides with the lower bound for small/medium k (k in [2:6]) and stays
 close for large k. Coded schemes excluded (they require k = n)."""
-import numpy as np
 
 from repro.core import ec2_like
 from .common import Timer, emit, scheme_mean_table

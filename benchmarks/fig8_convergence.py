@@ -24,7 +24,6 @@ the rounds-axis regression guard.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import (MarkovRegimeProcess, adaptive_spec,
                         cyclic_to_matrix, ec2_cluster, lb_spec, scenario1,

@@ -1,0 +1,56 @@
+"""Fig. 9 (paper Sec. V-C): intra-round message budget sweep.
+
+The paper's uncoded schemes send every result the moment it is computed
+(eq. 1) — the full multi-message regime — while the coded PC baseline sends
+one message per round.  This benchmark sweeps the per-round message budget
+m in {1, 2, r} for CS / SS (uncoded) and PCMM (coded) at equal computation
+load on the EC2-calibrated delay model, all from ONE fused sweep call: every
+(scheme, m) cell scores the same delay draws (the per-message communication
+delay is the draw at the message's closing slot), so per-budget gaps are
+paired common-random-number estimates.
+
+Rows:  fig9/<scheme>  with per-m completion times and the multi-message
+reduction vs one-shot.  The guard row exits non-zero if full multi-message
+(m = r) fails to beat single-message (m = 1) for any scheme — the paper's
+Sec. V-C ordering, and the reason eq. (1) models per-slot sends at all.
+"""
+from __future__ import annotations
+
+from repro.core import (cyclic_to_matrix, ec2_like, pcmm_spec,
+                        staircase_to_matrix, sweep, to_spec)
+from .common import emit
+
+N, R, K = 12, 4, 10
+BUDGETS = (1, 2, R)
+
+
+def run(trials: int = 20000):
+    model = ec2_like(N, seed=0)
+    cs, ss = cyclic_to_matrix(N, R), staircase_to_matrix(N, R)
+    specs = []
+    for m in BUDGETS:
+        specs += [to_spec(f"cs_m{m}", cs, messages=m),
+                  to_spec(f"ss_m{m}", ss, messages=m),
+                  pcmm_spec(R, name=f"pcmm_m{m}", messages=m)]
+    res = sweep(specs, model, N, trials=trials, seed=0, ks=K)
+
+    out, ok = {}, True
+    for scheme in ("cs", "ss", "pcmm"):
+        t = {m: res.at_k(f"{scheme}_m{m}", K) for m in BUDGETS}
+        reduction = 100.0 * (t[1] - t[R]) / t[1]
+        ok &= t[R] <= t[1]
+        emit(f"fig9/{scheme}", t[R] * 1e6,
+             ";".join([f"trials={trials}", f"n={N}", f"r={R}", f"k={K}"]
+                      + [f"m{m}={t[m] * 1e3:.4f}ms" for m in BUDGETS]
+                      + [f"mm_vs_single={reduction:+.1f}%"]))
+        out[scheme] = t
+    emit("fig9/mm_beats_single", 0.0,
+         f"all_schemes={'PASS' if ok else 'FAIL'}")
+    if not ok:
+        raise SystemExit("fig9: multi-message completion time exceeded "
+                         "single-message at equal load (Sec. V-C ordering)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -21,7 +21,6 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import (cyclic_to_matrix, staircase_to_matrix,
                         random_assignment_to_matrix, pc_threshold,

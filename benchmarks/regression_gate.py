@@ -1,0 +1,115 @@
+"""CI benchmark-regression gate.
+
+Compares the machine-readable ``BENCH_*.json`` results written by
+``benchmarks.run --out`` against the checked-in baseline
+(``benchmarks/baselines/bench_quick_baseline.json``):
+
+* ``mc_engine`` — the fused engine's throughput (``mc_engine/fused``) must
+  stay above ``--throughput-tol`` x the baseline.  The baseline is a
+  deliberately conservative low-water mark: CI machines vary, so the gate
+  exists to catch structural regressions (losing evaluator caching, a
+  retrace per call, an accidental un-fusing) — order-of-magnitude events,
+  not 10% jitter.
+* ``fig8`` — the adaptive-vs-static margin on the persistent heterogeneous
+  cell must stay positive and within ``--margin-drop`` percentage points of
+  the baseline.  This is a *quality* gate on the scheduler, not a timing
+  one, so it is machine-independent.
+
+Exit codes: 0 all checks pass, 1 regression detected, 2 missing inputs.
+
+Usage (CI)::
+
+    python -m benchmarks.run --quick --only mc_engine,fig8 --out bench_out
+    python -m benchmarks.regression_gate --results bench_out
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
+                                "bench_quick_baseline.json")
+
+
+def _load_bench(results_dir: str, bench: str) -> dict:
+    path = os.path.join(results_dir, f"BENCH_{bench}.json")
+    if not os.path.exists(path):
+        print(f"regression_gate: missing {path} (run benchmarks.run "
+              f"--only {bench} --out {results_dir} first)")
+        sys.exit(2)
+    with open(path) as f:
+        return json.load(f)
+
+
+def _row(payload: dict, name: str) -> dict:
+    for row in payload.get("rows", []):
+        if row.get("name") == name:
+            return row
+    print(f"regression_gate: BENCH_{payload.get('bench')}.json has no row "
+          f"{name!r}")
+    sys.exit(2)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="bench_out",
+                    help="directory holding BENCH_<name>.json files")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="checked-in baseline JSON")
+    ap.add_argument("--throughput-tol", type=float, default=0.25,
+                    help="fail if fused throughput < tol * baseline")
+    ap.add_argument("--margin-drop", type=float, default=6.0,
+                    help="max allowed drop (percentage points) of the fig8 "
+                         "adaptive-vs-static margin vs baseline")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.baseline):
+        print(f"regression_gate: missing baseline {args.baseline}")
+        sys.exit(2)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    failures = []
+
+    # --- mc_engine throughput ------------------------------------------------
+    mc = _load_bench(args.results, "mc_engine")
+    thr = _row(mc, "mc_engine/fused")["derived"].get("throughput")
+    if not isinstance(thr, (int, float)):
+        print("regression_gate: mc_engine/fused row lacks a numeric "
+              "'throughput' derived field")
+        sys.exit(2)
+    floor = base["mc_engine_fused_throughput"] * args.throughput_tol
+    ok = thr >= floor
+    print(f"{'PASS' if ok else 'FAIL'} mc_engine fused throughput: "
+          f"{thr:,.0f} trials*schemes/s (floor {floor:,.0f} = "
+          f"{args.throughput_tol} x baseline "
+          f"{base['mc_engine_fused_throughput']:,.0f})")
+    if not ok:
+        failures.append("mc_engine throughput")
+
+    # --- fig8 adaptive-vs-static margin -------------------------------------
+    fig8 = _load_bench(args.results, "fig8")
+    cell = base.get("fig8_cell", "fig8/p0.98_s3")
+    margin = _row(fig8, cell)["derived"].get("adapt_vs_static")
+    if not isinstance(margin, (int, float)):
+        print(f"regression_gate: {cell} row lacks a numeric "
+              f"'adapt_vs_static' derived field")
+        sys.exit(2)
+    floor = max(base["fig8_adapt_vs_static"] - args.margin_drop, 0.0)
+    ok = margin >= floor
+    print(f"{'PASS' if ok else 'FAIL'} fig8 adaptive-vs-static margin "
+          f"({cell}): {margin:+.1f}% (floor {floor:+.1f}% = baseline "
+          f"{base['fig8_adapt_vs_static']:+.1f}% - {args.margin_drop})")
+    if not ok:
+        failures.append("fig8 adaptive margin")
+
+    if failures:
+        print(f"regression_gate: FAILED checks: {failures}")
+        sys.exit(1)
+    print("regression_gate: all checks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,13 +8,23 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig7   avg completion vs k (n=10, r=n)
   fig8   rounds-axis wall-clock: persistence x heterogeneity grid, static
          CS/SS vs feedback-adaptive row assignment vs oracle LB
+  fig9   intra-round message budget m in {1, 2, r} for CS/SS/PCMM
+         (paper Sec. V-C; exits non-zero if multi-message stops beating
+         single-message)
   mc_engine  fused sweep-engine throughput vs the seed per-scheme path
   table1 end-to-end DGD iteration per scheme incl. real PC/PCMM decode
   roofline  per-(mesh, arch, shape) terms from saved dry-run artifacts
 
+Each job also writes a machine-readable ``BENCH_<name>.json`` (the CSV rows
+with parsed derived metrics) into ``--out`` for CI artifact upload and the
+``benchmarks.regression_gate`` check.
+
 Use --quick for CI-speed runs (fewer MC trials).
 """
 import argparse
+import json
+import os
+import time
 
 
 def main(argv=None) -> None:
@@ -23,15 +33,17 @@ def main(argv=None) -> None:
                     help="fewer Monte-Carlo trials")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset, e.g. fig4,fig7")
+    ap.add_argument("--out", default="bench_out",
+                    help="directory for BENCH_<name>.json artifacts "
+                         "(created if needed; '' disables JSON output)")
     args = ap.parse_args(argv)
     trials = 4000 if args.quick else 20000
     only = set(args.only.split(",")) if args.only else None
 
-    from . import (fig3_delays, fig4_vs_load, fig5_ec2, fig6_vs_workers,
-                   fig7_vs_target, fig8_convergence, mc_engine, table1_e2e,
-                   roofline_report)
+    from . import (common, fig3_delays, fig4_vs_load, fig5_ec2,
+                   fig6_vs_workers, fig7_vs_target, fig8_convergence,
+                   fig9_multimessage, mc_engine, table1_e2e, roofline_report)
 
-    print("name,us_per_call,derived")
     jobs = {
         "fig3": lambda: fig3_delays.run(trials),
         "fig4": lambda: fig4_vs_load.run(trials),
@@ -39,14 +51,37 @@ def main(argv=None) -> None:
         "fig6": lambda: fig6_vs_workers.run(trials),
         "fig7": lambda: fig7_vs_target.run(trials),
         "fig8": lambda: fig8_convergence.run(trials),
+        "fig9": lambda: fig9_multimessage.run(trials),
         "mc_engine": lambda: mc_engine.run(trials),
         "table1": table1_e2e.run,
         "roofline": roofline_report.run,
     }
+    if only:
+        unknown = sorted(only - set(jobs))
+        if unknown:
+            raise SystemExit(
+                f"benchmarks.run: unknown --only name(s) {unknown}; "
+                f"valid names: {sorted(jobs)}")
+
+    print("name,us_per_call,derived")
     for name, job in jobs.items():
         if only and name not in only:
             continue
-        job()
+        common.drain_rows()            # drop strays from earlier jobs
+        try:
+            job()
+        finally:
+            # write the artifact even when a guard fails (fig8/fig9 exit
+            # non-zero): the per-scheme rows are the diagnosis.
+            rows = common.drain_rows()
+            if args.out:
+                os.makedirs(args.out, exist_ok=True)
+                path = os.path.join(args.out, f"BENCH_{name}.json")
+                with open(path, "w") as f:
+                    json.dump({"bench": name, "quick": bool(args.quick),
+                               "trials": trials, "unix_time": time.time(),
+                               "rows": rows}, f, indent=2)
+                    f.write("\n")
 
 
 if __name__ == "__main__":

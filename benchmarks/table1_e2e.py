@@ -9,9 +9,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (cyclic_to_matrix, pc_decode, pc_encode,
-                        pc_threshold, pc_worker_compute, pcmm_decode,
-                        pcmm_encode, pcmm_threshold, pcmm_worker_compute)
+from repro.core import (pc_decode, pc_encode, pc_threshold,
+                        pc_worker_compute, pcmm_decode, pcmm_encode,
+                        pcmm_threshold, pcmm_worker_compute)
 from repro.data import regression_dataset, regression_tasks
 from repro.kernels.ops import batched_gram_matvec
 from .common import Timer, emit

@@ -11,7 +11,7 @@ import numpy as np
 
 from repro.core import (RoundSpec, cyclic_to_matrix, staircase_to_matrix,
                         random_assignment_to_matrix, mean_completion_time,
-                        simulate_lower_bound, scenario1)
+                        simulate_lower_bound, scenario1, sweep, to_spec)
 from repro.data import TaskPartition, lm_task_batches
 from repro.models import ModelConfig
 from repro.optim import adamw
@@ -33,6 +33,14 @@ def main():
     lb = float(np.mean(np.asarray(simulate_lower_bound(model, n, r, k,
                                                        trials=8000))))
     print(f"  LB: {lb * 1e3:.4f} ms  (oracle, eq. 46)")
+
+    print(f"\n== message budget (paper Sec. V-C, SS, n={n}, r={r}, k={k}) ==")
+    ss = staircase_to_matrix(n, r)
+    res = sweep([to_spec(f"ss_m{m}", ss, messages=m) for m in (1, 2, r)],
+                model, n, trials=8000, ks=k)     # one fused call, paired draws
+    for m in (1, 2, r):
+        label = {1: "one-shot", r: "per-slot (default)"}.get(m, "grouped")
+        print(f"  m={m}: {res.at_k(f'ss_m{m}', k) * 1e3:.4f} ms  ({label})")
 
     print("\n== one straggler-scheduled SGD round (tiny LM) ==")
     cfg = ModelConfig(name="tiny", arch_type="dense", n_layers=2, d_model=64,

@@ -4,26 +4,29 @@ from .scheduling import (cyclic_to_matrix, staircase_to_matrix,
                          random_assignment_to_matrix, to_matrix,
                          validate_to_matrix, SCHEDULES,
                          greedy_row_assignment, greedy_row_assignment_batch,
-                         AdaptiveScheduler)
+                         censored_feedback_update, AdaptiveScheduler)
 from .delays import (DelayModel, TruncatedGaussianDelays,
                      ShiftedExponentialDelays, BimodalStragglerDelays,
                      EmpiricalDelays, scenario1, scenario2, ec2_like)
 from .cluster import (DelayProcess, IIDProcess, MarkovRegimeProcess,
                       AR1Process, as_process, heterogeneous_scales,
-                      ec2_cluster)
+                      ec2_cluster, message_comm_delays)
 from .montecarlo import (SchemeSpec, SweepResult, RoundsResult, to_spec,
                          lb_spec, pc_spec, pcmm_spec, tau_spec,
                          adaptive_spec, task_gather_plan,
-                         task_arrival_times_gather, sweep, sweep_rounds,
-                         completion_samples, trajectory_samples,
-                         task_arrival_samples)
-from .completion import (slot_arrival_times, task_arrival_times,
-                         completion_time, lower_bound_time,
-                         first_k_distinct_mask, winner_mask_gather,
-                         simulate_completion, simulate_lower_bound,
-                         mean_completion_time)
+                         task_arrival_times_gather, message_boundaries,
+                         message_slot_map, message_group_sizes, sweep,
+                         sweep_rounds, completion_samples,
+                         trajectory_samples, task_arrival_samples)
+from .completion import (slot_arrival_times, message_arrival_times,
+                         task_arrival_times, completion_time,
+                         lower_bound_time, first_k_distinct_mask,
+                         winner_mask_gather, simulate_completion,
+                         simulate_lower_bound, mean_completion_time)
 from .theory import (theorem1_tail_from_H, theorem1_tail_mc, theorem1_mean_mc,
-                     theorem1_tail_r1_independent, sum_survival_grid)
+                     theorem1_tail_r1_independent, sum_survival_grid,
+                     multimessage_marginal_cdfs, multimessage_coded_tail,
+                     multimessage_coded_mean)
 from .coded import (pc_threshold, pcmm_threshold, pc_encode, pc_decode,
                     pc_worker_compute, pcmm_encode, pcmm_decode,
                     pcmm_worker_compute, simulate_pc_completion,

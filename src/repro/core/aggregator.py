@@ -24,6 +24,10 @@ every round from observed per-worker delay feedback (greedy
 least-covered-first, ``repro.core.scheduling.AdaptiveScheduler``): fetch the
 effective schedule for the coming round with ``current_matrix()`` *before*
 calling ``round_mask`` (it decides which task's data each worker loads).
+``censored_feedback=True`` restricts that feedback to messages that reached
+the master before the round completed (what a real master observes), and
+``RoundSpec.messages`` sets the per-round message budget (paper Sec. V-C):
+results become available in per-message lumps instead of per slot.
 
 The selection mask is a deterministic function of the arrival times and is
 computed identically on every shard (cheap: n*r scalars), keeping the whole
@@ -44,8 +48,7 @@ import numpy as np
 
 from . import montecarlo, scheduling
 from .cluster import IIDProcess, as_process
-from .completion import slot_arrival_times, winner_mask_gather
-from .delays import DelayModel
+from .completion import message_arrival_times, winner_mask_gather
 
 __all__ = ["RoundSpec", "StragglerAggregator"]
 
@@ -61,12 +64,21 @@ class RoundSpec:
     k: int            # computation target (distinct results needed)
     schedule: str = "ss"   # cs | ss | ra | block
     seed: int = 0          # for RA matrices
+    messages: int | None = None  # per-round messages per worker
+                                 # (None = one per slot, eq. 1)
 
     def __post_init__(self):
         if not (1 <= self.k <= self.n):
             raise ValueError(f"need 1 <= k <= n; got k={self.k}, n={self.n}")
         if not (1 <= self.r <= self.n):
             raise ValueError(f"need 1 <= r <= n; got r={self.r}, n={self.n}")
+        if self.messages is not None and not 1 <= self.messages <= self.r:
+            raise ValueError(f"need 1 <= messages <= r={self.r}; got "
+                             f"messages={self.messages}")
+
+    @property
+    def n_messages(self) -> int:
+        return self.r if self.messages is None else int(self.messages)
 
     def to_matrix(self) -> np.ndarray:
         return scheduling.to_matrix(self.schedule, self.n, self.r,
@@ -112,7 +124,11 @@ class StragglerAggregator:
 
     def __init__(self, spec: RoundSpec, delay, *, adaptive: bool = False,
                  init_key: Array | None = None, feedback_beta: float = 0.7,
-                 coverage_gamma: float = 0.5):
+                 coverage_gamma: float = 0.5,
+                 censored_feedback: bool = False):
+        if censored_feedback and not adaptive:
+            raise ValueError("censored_feedback requires adaptive=True — "
+                             "static schedules take no feedback to censor")
         self.spec = spec
         self.process = as_process(delay)
         self.base_C = spec.to_matrix()
@@ -120,6 +136,7 @@ class StragglerAggregator:
         self.scheduler = (scheduling.AdaptiveScheduler(
             self.base_C, beta=feedback_beta, gamma=coverage_gamma)
             if adaptive else None)
+        self.censored = bool(censored_feedback)
         if init_key is None:
             init_key = jax.random.PRNGKey(spec.seed)
         self._state = self.process.init(init_key[None], spec.n)
@@ -129,12 +146,14 @@ class StragglerAggregator:
     def _round_fn(self, state, keys, row_of_worker):
         n, r, k = self.spec.n, self.spec.r, self.spec.k
         state, T1, T2 = self.process.step(state, keys, n, r)
-        s = slot_arrival_times(T1, T2)[0]                # (n, r), eq. (1)
+        # (n, r) per-message result availability — eq. (1) generalized to
+        # the round's message budget (identity for the per-slot default).
+        s = message_arrival_times(T1, T2, self.spec.n_messages)[0]
         worker_of_row = jnp.argsort(row_of_worker)       # inverse permutation
         s2 = s[worker_of_row]                            # row-major arrivals
         w2, t_done = winner_mask_gather(self.base_C, self._plan, s2, n, k)
         weights = w2[row_of_worker]                      # back to worker-major
-        return state, T1[0], weights, t_done
+        return state, T1[0], s, weights, t_done
 
     def current_matrix(self) -> np.ndarray:
         """The effective TO matrix for the coming round (row ``w`` = tasks
@@ -150,20 +169,31 @@ class StragglerAggregator:
         slots and matches ``current_matrix()``'s worker/slot layout."""
         row_of_worker = (np.arange(self.spec.n) if self.scheduler is None
                          else self.scheduler.row_of_worker())
-        self._state, t1, weights, t_done = self._round(
+        self._state, t1, arrivals, weights, t_done = self._round(
             self._state, key[None], jnp.asarray(row_of_worker))
         if self.scheduler is not None:
-            self.scheduler.observe(np.asarray(t1))
+            if self.censored:
+                # a real master only sees messages that beat the deadline
+                self.scheduler.observe(np.asarray(t1),
+                                       arrivals=np.asarray(arrivals),
+                                       t_done=float(t_done))
+            else:
+                self.scheduler.observe(np.asarray(t1))
         return weights, t_done
 
     def combine(self, slot_grads: PyTree, weights: Array) -> PyTree:
         """eq. (61): grad = (n/k) * mean over selected tasks of task grads
         == (1/k) * sum selected (if task grads are already per-task means,
-        the global-batch-equivalent estimate is sum * n/k / n = sum/k)."""
-        k = self.spec.k
+        the global-batch-equivalent estimate is sum * n/k / n = sum/k).
+
+        Normalized by the *realized* selected-task count (``weights.sum()``):
+        with per-slot sends that is k almost surely (eq. 61 exactly), but a
+        reduced message budget makes arrival ties structural — a message can
+        deliver more distinct tasks than the target still missing — and the
+        unbiased scaling then divides by however many arrived."""
         def _one(g):
             w = weights.reshape(weights.shape + (1,) * (g.ndim - 2))
-            return (g * w).sum(axis=(0, 1)) / k
+            return (g * w).sum(axis=(0, 1)) / weights.sum()
         return jax.tree_util.tree_map(_one, slot_grads)
 
     def expected_completion(self, key: Array | int = 0, trials: int = 4096,
@@ -175,13 +205,15 @@ class StragglerAggregator:
         PRNG key (compat)."""
         if rounds is None:
             rounds = 1 if isinstance(self.process, IIDProcess) else 8
-        spec = (montecarlo.adaptive_spec("s", self.base_C)
+        m = self.spec.messages
+        spec = (montecarlo.adaptive_spec("s", self.base_C, messages=m)
                 if self.scheduler is not None
-                else montecarlo.to_spec("s", self.base_C))
+                else montecarlo.to_spec("s", self.base_C, messages=m))
         kw = {}
         if self.scheduler is not None:   # estimate the policy actually run
             kw = dict(feedback_beta=self.scheduler.beta,
-                      coverage_gamma=self.scheduler.gamma)
+                      coverage_gamma=self.scheduler.gamma,
+                      censored_feedback=self.censored)
         res = montecarlo.sweep_rounds(
             [spec], self.process, self.spec.n, rounds=rounds, k=self.spec.k,
             trials=trials, seed=_seed_of(key), **kw)

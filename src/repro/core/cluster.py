@@ -41,6 +41,17 @@ Processes
 ``heterogeneous_scales`` builds geometrically spread per-worker speed
 multipliers; ``ec2_cluster`` bundles the calibrated truncated-Gaussian base
 with heterogeneity + persistence into one realistic cluster.
+
+Per-message communication draws
+-------------------------------
+The process layer draws one ``T2`` per slot.  A round with an intra-round
+message budget (paper Sec. V-C; ``SchemeSpec.messages``) sends the slots in
+consecutive groups, and each *message* consumes exactly one of those draws —
+the draw at its closing slot (``message_comm_delays``).  That convention
+makes the message axis free at the sampling layer: ``messages = r``
+reproduces per-slot sends and ``messages = 1`` the one-shot send bit-exactly,
+and completion times stay paired across budgets under common random numbers
+(the same draws back every ``m``).
 """
 from __future__ import annotations
 
@@ -56,6 +67,7 @@ from .delays import DelayModel, TruncatedGaussianDelays, ec2_like
 __all__ = [
     "DelayProcess", "IIDProcess", "MarkovRegimeProcess", "AR1Process",
     "as_process", "heterogeneous_scales", "ec2_cluster",
+    "message_comm_delays",
 ]
 
 Array = jax.Array
@@ -215,6 +227,18 @@ class AR1Process(DelayProcess):
         f = jnp.exp(x - 0.5 * self.sigma ** 2)[..., None]
         f = f * _scale_column(self.worker_scale, n)
         return x, T1 * f, T2 * f
+
+
+def message_comm_delays(T2: Array, messages: int) -> Array:
+    """Per-message communication delay draws for a round sending ``messages``
+    messages per worker: the draw at each message's closing slot.  ``T2`` has
+    shape (..., n, r); returns (..., n, messages).  ``messages = r`` returns
+    the per-slot draws unchanged."""
+    from .montecarlo import message_boundaries
+    r = T2.shape[-1]
+    if int(messages) == r:
+        return T2
+    return T2[..., jnp.asarray(message_boundaries(r, messages))]
 
 
 def as_process(delay) -> DelayProcess:

@@ -16,6 +16,13 @@ Derived:
 * task arrival   ``tau[t,p] = min over slots with C[i,j]==p``      (eq. 2)
 * completion     ``t_C(r,k) = k-th smallest of tau``                (eq. 6)
 * oracle LB      ``k-th smallest of all n*r slot arrivals``         (eq. 46)
+
+``message_arrival_times`` generalizes eq. (1) to an intra-round message
+budget (paper Sec. V-C): with ``messages`` messages per worker per round, a
+slot's result becomes available when its *message* is sent — at the closing
+slot of its group — plus that message's communication delay draw.
+``messages = r`` is eq. (1) bit-exactly (per-slot sends); ``messages = 1``
+is the one-shot send the coded PC baseline uses (eqs. 51-52).
 """
 from __future__ import annotations
 
@@ -28,9 +35,10 @@ import numpy as np
 from . import montecarlo
 
 __all__ = [
-    "slot_arrival_times", "task_arrival_times", "completion_time",
-    "lower_bound_time", "first_k_distinct_mask", "winner_mask_gather",
-    "simulate_completion", "simulate_lower_bound", "mean_completion_time",
+    "slot_arrival_times", "message_arrival_times", "task_arrival_times",
+    "completion_time", "lower_bound_time", "first_k_distinct_mask",
+    "winner_mask_gather", "simulate_completion", "simulate_lower_bound",
+    "mean_completion_time",
 ]
 
 Array = jax.Array
@@ -40,6 +48,20 @@ INF = jnp.inf
 def slot_arrival_times(T1: Array, T2: Array) -> Array:
     """eq. (1): s[..., i, j] = cumsum_j(T1)[..., i, j] + T2[..., i, j]."""
     return jnp.cumsum(T1, axis=-1) + T2
+
+
+def message_arrival_times(T1: Array, T2: Array, messages: int) -> Array:
+    """Generalized eq. (1) for an intra-round message budget: slot ``j``'s
+    result arrives when its message closes — cumulative compute through the
+    group's closing slot ``b(j)`` plus that message's communication draw
+    (``T2[..., b(j)]``, see ``cluster.message_comm_delays``).  Returns the
+    same (..., n, r) layout as ``slot_arrival_times``; ``messages == r``
+    reproduces it bit-exactly."""
+    r = T1.shape[-1]
+    s = slot_arrival_times(T1, T2)
+    if int(messages) == r:
+        return s
+    return s[..., jnp.asarray(montecarlo.message_slot_map(r, messages))]
 
 
 def task_arrival_times(C: Array, s: Array, n: int) -> Array:
@@ -76,6 +98,12 @@ def first_k_distinct_mask(C: Array, s: Array, n: int, k: int
     winners of selected tasks share weight 1 per task — ties averaged), and
     ``t_done`` (…,) is the completion time. Everything is differentiable-free
     masking, usable inside a jitted train step.
+
+    With per-slot sends exactly k tasks are selected almost surely.  Under a
+    reduced message budget (``message_arrival_times``) arrival ties are
+    structural — the closing message can deliver more distinct tasks than
+    were still missing — so ``weights`` may sum to more than ``k``; consumers
+    normalize by the realized sum (see ``StragglerAggregator.combine``).
     """
     C = jnp.asarray(C)
     tau = task_arrival_times(C, s, n)                    # (..., n)

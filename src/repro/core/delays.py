@@ -21,7 +21,6 @@ The paper's EC2 calibration (Fig. 3): truncated Gaussians,
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Tuple
 
 import jax

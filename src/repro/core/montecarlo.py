@@ -46,6 +46,32 @@ leading slots of the shared delay tensors (delay statistics are
 order-independent, paper Remark 6) — that is what makes cross-``r``
 comparisons paired as well.
 
+Intra-round message axis (paper Sec. V-C)
+-----------------------------------------
+Every spec carries a ``messages`` knob: how many messages each worker sends
+per round.  The worker's ``r`` sequential slots are partitioned into
+``messages`` consecutive groups; a group's results all become available when
+its *closing* slot's computation finishes plus one per-message communication
+delay — the ``T2`` draw at the closing slot (``cluster.message_comm_delays``),
+so draws stay paired across ``messages`` values under common random numbers.
+
+* ``messages = load`` (the default for ``to``/``tau``/``adaptive``/``lb``/
+  ``pcmm``) — full multi-message: each slot is its own message, reproducing
+  eq. (1)'s per-slot arrivals ``cumsum(T1) + T2`` bit-exactly (the engine's
+  established semantics).
+* ``messages = 1`` (the default — and only legal value — for ``pc``) — the
+  one-shot semantics: every result of worker ``i`` arrives at
+  ``sum_j T1[i, :] + T2[i, r-1]``, exactly the per-worker time PC has always
+  used (eqs. 51-52).
+* intermediate ``m`` interpolates the communication/computation latency
+  trade-off of Ozfatura et al. (arXiv:2004.04948) for the uncoded schemes;
+  for ``pcmm`` the master decodes once 2n-1 *partials* arrived, messages
+  delivering their group's partials in a lump (eqs. 56-57 generalized).
+
+The remap is static (``message_slot_map``) and folds into the task gather
+plans, so the hot path gains zero runtime ops and ``m = load`` compiles to
+the identical program as before the axis existed.
+
 Rounds axis (``sweep_rounds``)
 ------------------------------
 Training runs are sequences of rounds, and real stragglers persist across
@@ -70,7 +96,8 @@ import numpy as np
 __all__ = [
     "SchemeSpec", "SweepResult", "RoundsResult", "to_spec", "lb_spec",
     "pc_spec", "pcmm_spec", "tau_spec", "adaptive_spec", "task_gather_plan",
-    "task_arrival_times_gather", "sweep", "sweep_rounds",
+    "task_arrival_times_gather", "message_boundaries", "message_slot_map",
+    "message_group_sizes", "sweep", "sweep_rounds",
     "completion_samples", "trajectory_samples", "task_arrival_samples",
     "clear_cache",
 ]
@@ -89,6 +116,8 @@ class SchemeSpec:
     kind: str                 # "to" | "lb" | "pc" | "pcmm" | "tau" | "adaptive"
     C: Optional[tuple] = None       # TO matrix for "to"/"tau"/"adaptive"
     r: Optional[int] = None         # computation load for "lb"/"pc"/"pcmm"
+    messages: Optional[int] = None  # per-round messages per worker
+                                    # (None = the kind's default semantics)
 
     @property
     def load(self) -> int:
@@ -96,6 +125,15 @@ class SchemeSpec:
         if self.kind in ("to", "tau", "adaptive"):
             return len(self.C[0])
         return int(self.r)
+
+    @property
+    def n_messages(self) -> int:
+        """Messages each worker sends per round.  ``None`` resolves to the
+        kind's established semantics: full multi-message (one message per
+        slot, eq. 1) for uncoded schemes / lb / pcmm, one-shot for pc."""
+        if self.messages is not None:
+            return int(self.messages)
+        return 1 if self.kind == "pc" else self.load
 
     def matrix(self) -> np.ndarray:
         return np.asarray(self.C, dtype=np.int64)
@@ -108,36 +146,48 @@ def _freeze_matrix(C) -> tuple:
     return tuple(tuple(int(v) for v in row) for row in C)
 
 
-def to_spec(name: str, C) -> SchemeSpec:
-    """A TO-matrix scheme (CS / SS / RA / custom)."""
-    return SchemeSpec(name=name, kind="to", C=_freeze_matrix(C))
+def to_spec(name: str, C, messages: Optional[int] = None) -> SchemeSpec:
+    """A TO-matrix scheme (CS / SS / RA / custom).  ``messages`` is the
+    per-round message budget (default: one message per slot, eq. 1)."""
+    return SchemeSpec(name=name, kind="to", C=_freeze_matrix(C),
+                      messages=messages)
 
 
-def tau_spec(name: str, C) -> SchemeSpec:
+def tau_spec(name: str, C, messages: Optional[int] = None) -> SchemeSpec:
     """Raw task-arrival samples for a TO matrix (no order statistics)."""
-    return SchemeSpec(name=name, kind="tau", C=_freeze_matrix(C))
+    return SchemeSpec(name=name, kind="tau", C=_freeze_matrix(C),
+                      messages=messages)
 
 
-def adaptive_spec(name: str, C) -> SchemeSpec:
+def adaptive_spec(name: str, C, messages: Optional[int] = None) -> SchemeSpec:
     """An adaptive scheme: base TO matrix ``C`` whose rows are re-assigned
     to workers each round from observed per-worker delay feedback (only
     valid in ``sweep_rounds``)."""
-    return SchemeSpec(name=name, kind="adaptive", C=_freeze_matrix(C))
+    return SchemeSpec(name=name, kind="adaptive", C=_freeze_matrix(C),
+                      messages=messages)
 
 
-def lb_spec(r: int, name: str = "lb") -> SchemeSpec:
-    """Oracle lower bound (eq. 46) at computation load ``r``."""
-    return SchemeSpec(name=name, kind="lb", r=int(r))
+def lb_spec(r: int, name: str = "lb",
+            messages: Optional[int] = None) -> SchemeSpec:
+    """Oracle lower bound (eq. 46) at computation load ``r`` (at a reduced
+    ``messages`` budget: the oracle bound among schemes sending that many
+    messages per round)."""
+    return SchemeSpec(name=name, kind="lb", r=int(r), messages=messages)
 
 
 def pc_spec(r: int, name: str = "pc") -> SchemeSpec:
-    """Polynomially-coded single-message scheme at load ``r``."""
+    """Polynomially-coded scheme at load ``r`` — one-shot by construction
+    (the PC decoder needs a worker's full sum, eqs. 51-52); use ``pcmm_spec``
+    for coded rounds with an intra-round message budget."""
     return SchemeSpec(name=name, kind="pc", r=int(r))
 
 
-def pcmm_spec(r: int, name: str = "pcmm") -> SchemeSpec:
-    """Polynomially-coded multi-message scheme at load ``r``."""
-    return SchemeSpec(name=name, kind="pcmm", r=int(r))
+def pcmm_spec(r: int, name: str = "pcmm",
+              messages: Optional[int] = None) -> SchemeSpec:
+    """Polynomially-coded multi-message scheme at load ``r``; ``messages``
+    bundles its per-slot partials into fewer messages (eqs. 56-57 keep
+    counting partials, they just arrive in lumps)."""
+    return SchemeSpec(name=name, kind="pcmm", r=int(r), messages=messages)
 
 
 def _pc_threshold(n: int, r: int) -> int:
@@ -148,9 +198,45 @@ def _pcmm_threshold(n: int) -> int:
     return 2 * n - 1
 
 
+# ----------------------- intra-round message layout --------------------------
+
+def message_boundaries(r: int, messages: int) -> np.ndarray:
+    """Closing slot index of each message when ``r`` sequential slots are
+    sent in ``messages`` as-even-as-possible consecutive groups (earlier
+    messages carry the extra slot when ``messages`` does not divide ``r``).
+    The last message always closes at slot ``r - 1``."""
+    if not 1 <= int(messages) <= r:
+        raise ValueError(f"need 1 <= messages <= r={r}, got {messages}")
+    sizes = [len(g) for g in np.array_split(np.arange(r), int(messages))]
+    return np.cumsum(sizes, dtype=np.int64) - 1
+
+
+def message_group_sizes(r: int, messages: int) -> np.ndarray:
+    """Number of slots (results / coded partials) each message carries."""
+    b = message_boundaries(r, messages)
+    return np.diff(np.concatenate([[-1], b])).astype(np.int64)
+
+
+def message_slot_map(r: int, messages: int) -> np.ndarray:
+    """Slot ``j`` -> the closing slot of ``j``'s message: the slot whose
+    arrival time (eq. 1 at the closing slot) carries ``j``'s result.
+    Identity for ``messages == r`` (every slot is its own message)."""
+    b = message_boundaries(r, messages)
+    return b[np.searchsorted(b, np.arange(r))]
+
+
+def _slot_map_of(spec: SchemeSpec) -> Optional[np.ndarray]:
+    """The spec's message remap, or None when it is the identity (full
+    multi-message) — callers skip the gather entirely in that case, keeping
+    the default path bit-identical to the pre-message-axis engine."""
+    m = spec.n_messages
+    return None if m == spec.load else message_slot_map(spec.load, m)
+
+
 # ------------------- static gather layout for task arrivals ------------------
 
-def task_gather_plan(C, n: int, r_max: Optional[int] = None) -> np.ndarray:
+def task_gather_plan(C, n: int, r_max: Optional[int] = None,
+                     slot_map: Optional[np.ndarray] = None) -> np.ndarray:
     """Precompute, at trace time, where every task's copies live.
 
     Returns an ``(n, m)`` int32 array of *flat* slot indices into the
@@ -158,17 +244,29 @@ def task_gather_plan(C, n: int, r_max: Optional[int] = None) -> np.ndarray:
     multiplicity.  Rows are padded with the sentinel ``n_w * r_max``, which
     callers map to +inf, so ``min`` over the gathered values reproduces the
     scatter-min of eq. (2) with a static gather — the TPU-friendly form.
+
+    ``slot_map`` (length-``r``, values in ``[0, r)``) redirects slot ``j``'s
+    read to ``slot_map[j]`` — the multi-message layout folds its
+    closing-slot remap (``message_slot_map``) into the plan, so per-message
+    arrivals cost no extra runtime ops.
     """
     C = np.asarray(C)
     n_w, r = C.shape
     r_max = r if r_max is None else int(r_max)
     if r > r_max:
         raise ValueError(f"TO matrix load r={r} exceeds slot grid r_max={r_max}")
+    if slot_map is None:
+        slot_map = np.arange(r)
+    else:
+        slot_map = np.asarray(slot_map)
+        if slot_map.shape != (r,) or slot_map.min() < 0 or slot_map.max() >= r:
+            raise ValueError(f"slot_map must be ({r},) with values in "
+                             f"[0, {r}); got shape {slot_map.shape}")
     sentinel = n_w * r_max
     positions: list[list[int]] = [[] for _ in range(n)]
     for i in range(n_w):
         for j in range(r):
-            positions[int(C[i, j])].append(i * r_max + j)
+            positions[int(C[i, j])].append(i * r_max + int(slot_map[j]))
     m = max((len(p) for p in positions), default=0) or 1
     plan = np.full((n, m), sentinel, dtype=np.int32)
     for p, lst in enumerate(positions):
@@ -190,7 +288,8 @@ def task_arrival_times_gather(plan: np.ndarray, s: Array) -> Array:
 
 
 def _stack_plans(specs: Sequence[SchemeSpec], n: int, r_max: int) -> np.ndarray:
-    plans = [task_gather_plan(sp.matrix(), n, r_max) for sp in specs]
+    plans = [task_gather_plan(sp.matrix(), n, r_max,
+                              slot_map=_slot_map_of(sp)) for sp in specs]
     m = max(p.shape[1] for p in plans)
     sentinel = n * r_max
     out = np.full((len(plans), n, m), sentinel, dtype=np.int32)
@@ -224,9 +323,12 @@ def _build_eval(specs: Tuple[SchemeSpec, ...], n: int, r_max: int,
     to_specs = tuple(sp for sp in specs if sp.kind == "to")
     plan_stack = _stack_plans(to_specs, n, r_max) if to_specs else None
 
-    # lb/pcmm both rank the same flattened slot-arrival window; group them
-    # by load so each distinct window is partially selected exactly once.
-    flat_width: Dict[int, int] = {}
+    # lb/pcmm both rank the same flattened per-message-arrival window; group
+    # them by (load, messages) so each distinct window is selected exactly
+    # once.  Full multi-message windows slice the shared slot grid directly
+    # (the pre-message-axis code path, bit-identical); reduced budgets gather
+    # through the closing-slot remap.
+    flat_width: Dict[Tuple[int, int], int] = {}
     for sp in specs:
         if sp.kind == "lb":
             need = n if ks is None else ks
@@ -234,7 +336,8 @@ def _build_eval(specs: Tuple[SchemeSpec, ...], n: int, r_max: int,
             need = _pcmm_threshold(n)
         else:
             continue
-        flat_width[sp.load] = max(flat_width.get(sp.load, 0), need)
+        key = (sp.load, sp.n_messages)
+        flat_width[key] = max(flat_width.get(key, 0), need)
 
     def eval_fn(s: Array) -> Dict[str, Array]:
         out: Dict[str, Array] = {}
@@ -248,16 +351,22 @@ def _build_eval(specs: Tuple[SchemeSpec, ...], n: int, r_max: int,
             for i, sp in enumerate(to_specs):
                 out[sp.name] = stat[:, i]
 
-        flat_stats = {
-            r: _smallest(s[..., :, :r].reshape(s.shape[0], -1), w)
-            for r, w in flat_width.items()}          # (chunk, w) ascending
+        flat_stats = {}
+        for (r, m), w in flat_width.items():
+            if m == r:
+                win = s[..., :, :r]
+            else:
+                win = s[..., :, jnp.asarray(message_slot_map(r, m))]
+            flat_stats[(r, m)] = _smallest(
+                win.reshape(s.shape[0], -1), w)      # (chunk, w) ascending
 
         for sp in specs:
             if sp.kind == "tau":
-                plan = task_gather_plan(sp.matrix(), n, r_max)
+                plan = task_gather_plan(sp.matrix(), n, r_max,
+                                        slot_map=_slot_map_of(sp))
                 out[sp.name] = task_arrival_times_gather(plan, s)
             elif sp.kind == "lb":
-                fs = flat_stats[sp.load]
+                fs = flat_stats[(sp.load, sp.n_messages)]
                 out[sp.name] = fs[..., :n] if ks is None else fs[..., ks - 1:ks]
             elif sp.kind == "pc":
                 r = sp.load
@@ -267,7 +376,8 @@ def _build_eval(specs: Tuple[SchemeSpec, ...], n: int, r_max: int,
                 # applies to coded schemes (same rule as pcmm below)
             elif sp.kind == "pcmm":
                 th = _pcmm_threshold(n)
-                out[sp.name] = flat_stats[sp.load][..., th - 1:th]
+                out[sp.name] = flat_stats[(sp.load, sp.n_messages)][
+                    ..., th - 1:th]
         return out
 
     return eval_fn
@@ -361,6 +471,16 @@ def _check_specs(specs: Sequence[SchemeSpec], n: int) -> Tuple[SchemeSpec, ...]:
             raise ValueError(
                 f"{sp.name}: PCMM infeasible: n*r={n * sp.load} < "
                 f"2n-1={_pcmm_threshold(n)}")
+        if sp.messages is not None:
+            if sp.kind == "pc" and sp.messages != 1:
+                raise ValueError(
+                    f"{sp.name}: pc is one-shot by construction (the decoder "
+                    f"needs each worker's full sum); use pcmm for "
+                    f"multi-message coded rounds")
+            if not 1 <= sp.messages <= sp.load:
+                raise ValueError(
+                    f"{sp.name}: need 1 <= messages <= load={sp.load}, got "
+                    f"messages={sp.messages}")
     return specs
 
 
@@ -485,11 +605,13 @@ def completion_samples(spec: SchemeSpec, model, n: int, *, trials: int = 10000,
 
 
 def task_arrival_samples(C, model, *, trials: int = 10000, seed: int = 0,
-                         chunk: Optional[int] = None) -> Array:
+                         chunk: Optional[int] = None,
+                         messages: Optional[int] = None) -> Array:
     """Raw per-task arrival-time samples ``tau`` of shape (trials, n) for a
-    TO matrix — shared-draw backing for joint-survival estimators."""
+    TO matrix — shared-draw backing for joint-survival estimators.
+    ``messages`` is the per-round message budget (default: per-slot sends)."""
     n = np.asarray(C).shape[0]
-    spec = tau_spec("tau", C)
+    spec = tau_spec("tau", C, messages=messages)
     return _run([spec], model, n, trials=trials, seed=seed, chunk=chunk,
                 ks=None, want_samples=True)[spec.name]
 
@@ -498,7 +620,7 @@ def task_arrival_samples(C, model, *, trials: int = 10000, seed: int = 0,
 
 def _build_rounds_fn(specs: Tuple[SchemeSpec, ...], process, n: int,
                      r_max: int, ks: int, rounds: int, beta: float,
-                     gamma: float):
+                     gamma: float, censored: bool):
     """Multi-round evaluator: (chunk, 2) per-trial keys ->
     {name: (rounds, chunk)} per-round completion times.
 
@@ -507,6 +629,14 @@ def _build_rounds_fn(specs: Tuple[SchemeSpec, ...], process, n: int,
     observed per-worker compute delays.  Every scheme scores the same delay
     realization each round (common random numbers), so per-round and
     cumulative scheme gaps are paired-sample estimates.
+
+    With ``censored`` the adaptive feedback is restricted to what a real
+    master sees: only messages that arrived before *that scheme's own* round
+    completion are observed, each scheme carries its own estimate state, and
+    a worker that delivered nothing keeps its previous estimate (new workers
+    start at +inf, i.e. sorted slowest until they first deliver).  The
+    uncensored path keeps the original idealized full-delay feedback,
+    bit-identical to the pre-censoring engine.
     """
     from . import scheduling                    # adaptive assignment
 
@@ -514,9 +644,23 @@ def _build_rounds_fn(specs: Tuple[SchemeSpec, ...], process, n: int,
     ad_specs = tuple(sp for sp in specs if sp.kind == "adaptive")
     eval_fn = (_build_eval(static_specs, n, r_max, ks)
                if static_specs else None)
-    ad_plans = tuple(task_gather_plan(sp.matrix(), n, r_max)
+    ad_plans = tuple(task_gather_plan(sp.matrix(), n, r_max,
+                                      slot_map=_slot_map_of(sp))
                      for sp in ad_specs)
     ad_mats = tuple(sp.matrix() for sp in ad_specs)
+    ad_mmaps = tuple(_slot_map_of(sp) for sp in ad_specs)
+
+    def _assign_and_score(sp, plan, Cb, est, s):
+        """Greedy row re-assignment from ``est`` feedback, then this
+        scheme's completion time on the permuted slot grid."""
+        # assignment uses feedback from *previous* rounds only.
+        w_of_row = scheduling.greedy_row_assignment_batch(
+            Cb, est, gamma=gamma)               # (chunk, n)
+        # row p's slots are executed by worker w_of_row[p]: permute the
+        # worker axis, then the static gather plan applies.
+        s2 = jnp.take_along_axis(s, w_of_row[..., None], axis=1)
+        tau = task_arrival_times_gather(plan, s2)
+        return w_of_row, s2, _smallest(tau, ks)[..., -1:]
 
     def rounds_fn(keys: Array) -> Dict[str, Array]:
         chunk = keys.shape[0]
@@ -524,28 +668,52 @@ def _build_rounds_fn(specs: Tuple[SchemeSpec, ...], process, n: int,
         # from the per-trial key so everything stays chunk-invariant.
         allk = jax.vmap(lambda kk: jax.random.split(kk, rounds + 1))(keys)
         pstate = process.init(allk[:, 0], n)
-        est0 = jnp.ones((chunk, n), jnp.float32)
 
-        def body(carry, kr):
-            pstate, est, t = carry
-            pstate, T1, T2 = process.step(pstate, kr, n, r_max)
-            s = jnp.cumsum(T1, axis=-1) + T2        # eq. (1), per round
-            out = dict(eval_fn(s)) if eval_fn is not None else {}
-            for sp, plan, Cb in zip(ad_specs, ad_plans, ad_mats):
-                # assignment uses feedback from *previous* rounds only.
-                w_of_row = scheduling.greedy_row_assignment_batch(
-                    Cb, est, gamma=gamma)           # (chunk, n)
-                # row p's slots are executed by worker w_of_row[p]: permute
-                # the worker axis, then the static gather plan applies.
-                s2 = jnp.take_along_axis(s, w_of_row[..., None], axis=1)
-                tau = task_arrival_times_gather(plan, s2)
-                out[sp.name] = _smallest(tau, ks)[..., -1:]
-            obs = T1.mean(axis=-1)                  # per-worker compute time
-            est = jnp.where(t == 0, obs, beta * est + (1.0 - beta) * obs)
-            return (pstate, est, t + 1), {nm: v[..., 0] for nm, v in
-                                          out.items()}
+        if censored:
+            def body(carry, kr):
+                pstate, ests = carry
+                pstate, T1, T2 = process.step(pstate, kr, n, r_max)
+                s = jnp.cumsum(T1, axis=-1) + T2    # eq. (1), per round
+                out = dict(eval_fn(s)) if eval_fn is not None else {}
+                new_e = []
+                for sp, plan, Cb, mmap, est in zip(
+                        ad_specs, ad_plans, ad_mats, ad_mmaps, ests):
+                    _, _, val = _assign_and_score(sp, plan, Cb, est, s)
+                    out[sp.name] = val
+                    r_sp = Cb.shape[1]
+                    # worker w's message arrivals are its own slots of ``s``
+                    # whatever row it executes (the row permutation and its
+                    # inverse cancel), so the worker-major arrivals slice
+                    # ``s`` directly; shared censored update: only messages
+                    # that beat this scheme's own round completion are
+                    # observed.
+                    arr_w = (s[..., :, :r_sp] if mmap is None
+                             else s[..., :, jnp.asarray(mmap)])
+                    new_e.append(scheduling.censored_feedback_update(
+                        est, T1[..., :r_sp], arr_w, val[..., 0], beta=beta))
+                return (pstate, tuple(new_e)), {
+                    nm: v[..., 0] for nm, v in out.items()}
 
-        init = (pstate, est0, jnp.zeros((), jnp.int32))
+            init = (pstate,
+                    tuple(jnp.full((chunk, n), INF, jnp.float32)
+                          for _ in ad_specs))
+        else:
+            def body(carry, kr):
+                pstate, est, t = carry
+                pstate, T1, T2 = process.step(pstate, kr, n, r_max)
+                s = jnp.cumsum(T1, axis=-1) + T2    # eq. (1), per round
+                out = dict(eval_fn(s)) if eval_fn is not None else {}
+                for sp, plan, Cb in zip(ad_specs, ad_plans, ad_mats):
+                    _, _, out[sp.name] = _assign_and_score(sp, plan, Cb,
+                                                           est, s)
+                obs = T1.mean(axis=-1)              # per-worker compute time
+                est = jnp.where(t == 0, obs, beta * est + (1.0 - beta) * obs)
+                return (pstate, est, t + 1), {nm: v[..., 0] for nm, v in
+                                              out.items()}
+
+            init = (pstate, jnp.ones((chunk, n), jnp.float32),
+                    jnp.zeros((), jnp.int32))
+
         _, ys = jax.lax.scan(body, init, jnp.swapaxes(allk[:, 1:], 0, 1))
         return ys                                   # {name: (rounds, chunk)}
 
@@ -557,10 +725,11 @@ _ROUNDS_CACHE: dict = {}
 
 def _get_rounds_exec(specs: Tuple[SchemeSpec, ...], process, n: int,
                      r_max: int, ks: int, rounds: int, beta: float,
-                     gamma: float):
+                     gamma: float, censored: bool):
     cache_key = None
     try:
-        cache_key = (specs, process, n, r_max, ks, rounds, beta, gamma)
+        cache_key = (specs, process, n, r_max, ks, rounds, beta, gamma,
+                     censored)
         hit = _ROUNDS_CACHE.get(cache_key)
         if hit is not None:
             return hit
@@ -568,7 +737,7 @@ def _get_rounds_exec(specs: Tuple[SchemeSpec, ...], process, n: int,
         cache_key = None
 
     rounds_fn = _build_rounds_fn(specs, process, n, r_max, ks, rounds,
-                                 beta, gamma)
+                                 beta, gamma, censored)
 
     def sums_scan(keys3):           # (nc, chunk, 2) -> per-round moments
         zeros = {sp.name: jnp.zeros((rounds,), jnp.float32) for sp in specs}
@@ -614,14 +783,14 @@ def _check_rounds_args(specs, n, ks, rounds):
 
 def _run_rounds(specs, process, n, *, rounds: int, k: int, trials: int,
                 seed: int, chunk: Optional[int], beta: float, gamma: float,
-                want_samples: bool):
+                censored: bool, want_samples: bool):
     from .cluster import as_process
     process = as_process(process)
     specs = _check_rounds_args(specs, n, k, rounds)
     r_max = max(sp.load for sp in specs)
     chunk = trials if chunk is None else max(1, min(int(chunk), trials))
     jrounds, jsums, jsamples = _get_rounds_exec(
-        specs, process, n, r_max, k, rounds, beta, gamma)
+        specs, process, n, r_max, k, rounds, beta, gamma, censored)
 
     keys = jax.random.split(jax.random.PRNGKey(seed), trials)
     nc = trials // chunk
@@ -696,7 +865,8 @@ class RoundsResult:
 def sweep_rounds(specs: Sequence[SchemeSpec], process, n: int, *,
                  rounds: int, k: int, trials: int = 20000, seed: int = 0,
                  chunk: Optional[int] = None, feedback_beta: float = 0.7,
-                 coverage_gamma: float = 0.5) -> RoundsResult:
+                 coverage_gamma: float = 0.5,
+                 censored_feedback: bool = False) -> RoundsResult:
     """Evaluate every scheme over ``rounds`` consecutive rounds of ONE
     shared ``DelayProcess`` realization per trial.
 
@@ -713,11 +883,14 @@ def sweep_rounds(specs: Sequence[SchemeSpec], process, n: int, *,
              streaming with O(chunk * n * r_max) memory.
     feedback_beta:  EMA weight on past feedback in adaptive schemes.
     coverage_gamma: per-slot coverage discount of the greedy assignment.
+    censored_feedback: restrict adaptive feedback to messages that arrived
+             before the scheme's own round completion (what a real master
+             observes) instead of the idealized full-delay feedback.
     """
     per_round, stderr, wallclock, wc_stderr = _run_rounds(
         specs, process, n, rounds=rounds, k=k, trials=trials, seed=seed,
         chunk=chunk, beta=feedback_beta, gamma=coverage_gamma,
-        want_samples=False)
+        censored=censored_feedback, want_samples=False)
     return RoundsResult(per_round=per_round, stderr=stderr,
                         wallclock=wallclock, wallclock_stderr=wc_stderr,
                         trials=trials, rounds=rounds, n=n, k=k)
@@ -727,11 +900,13 @@ def trajectory_samples(spec: SchemeSpec, process, n: int, *, rounds: int,
                        k: int, trials: int = 10000, seed: int = 0,
                        chunk: Optional[int] = None,
                        feedback_beta: float = 0.7,
-                       coverage_gamma: float = 0.5) -> Array:
+                       coverage_gamma: float = 0.5,
+                       censored_feedback: bool = False) -> Array:
     """Per-trial completion-time trajectories for one scheme: shape
     ``(trials, rounds)``; ``jnp.cumsum(..., axis=1)`` gives per-trial
     wall-clock curves."""
     return _run_rounds([spec], process, n, rounds=rounds, k=k,
                        trials=trials, seed=seed, chunk=chunk,
                        beta=feedback_beta, gamma=coverage_gamma,
+                       censored=censored_feedback,
                        want_samples=True)[spec.name]

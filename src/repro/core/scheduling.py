@@ -48,6 +48,7 @@ __all__ = [
     "Schedule",
     "greedy_row_assignment",
     "greedy_row_assignment_batch",
+    "censored_feedback_update",
     "AdaptiveScheduler",
 ]
 
@@ -242,6 +243,36 @@ def greedy_row_assignment_batch(C: np.ndarray, est: jax.Array, *,
     return out.reshape(batch + (n,))
 
 
+def censored_feedback_update(est: jax.Array, t1: jax.Array,
+                             arrivals: jax.Array, t_done, *,
+                             beta: float = 0.7) -> jax.Array:
+    """One censored-feedback step — the single source of truth shared by
+    ``AdaptiveScheduler.observe`` and the fused rounds engine
+    (``montecarlo.sweep_rounds(..., censored_feedback=True)``), so training
+    loops and MC estimates apply identical update rules to identical
+    observations.
+
+    ``est`` (..., n) is the per-worker delay estimate with +inf marking
+    workers never yet observed; ``t1``/``arrivals`` (..., n, r) are the
+    round's per-slot compute delays and per-message arrival times, both
+    worker-major; ``t_done`` (scalar or (...,)) the round's completion time.
+    Only slots whose message arrived by ``t_done`` are observed: observed
+    workers get their masked-mean compute delay (replace on first
+    observation, EMA with weight ``beta`` on history after), silent workers
+    keep their previous estimate.  Returns the new ``est``.
+    """
+    td = jnp.asarray(t_done)[..., None, None]
+    mobs = jnp.asarray(arrivals) <= td
+    cnt = mobs.sum(axis=-1)
+    obs = jnp.where(cnt > 0,
+                    (jnp.asarray(t1) * mobs).sum(axis=-1)
+                    / jnp.maximum(cnt, 1), 0.0)
+    est = jnp.asarray(est)
+    seen = jnp.isfinite(est)
+    upd = jnp.where(seen, beta * est + (1.0 - beta) * obs, obs)
+    return jnp.where(cnt > 0, upd, est)
+
+
 class AdaptiveScheduler:
     """Stateful round-to-round re-permutation of a base TO matrix.
 
@@ -250,6 +281,13 @@ class AdaptiveScheduler:
     ((n,) means or the raw (n, r) slot delays).  Feedback is an EMA with
     weight ``beta`` on history, so transient hiccups don't thrash the
     assignment but persistent stragglers migrate to low-impact rows.
+
+    Passing ``arrivals``/``t_done`` to ``observe`` censors the feedback to
+    what a real master sees: only slots whose message reached the master
+    before the round completed are observed.  Workers that delivered
+    nothing keep their previous estimate; a worker never yet observed sits
+    at +inf, i.e. is ranked slowest until it first delivers (principled: a
+    worker that never beat the round deadline *is* effectively slowest).
     """
 
     def __init__(self, C: np.ndarray, *, beta: float = 0.7,
@@ -278,13 +316,41 @@ class AdaptiveScheduler:
         worker ``w`` executes."""
         return self.C[self.row_of_worker()]
 
-    def observe(self, t1) -> None:
+    def observe(self, t1, *, arrivals=None, t_done=None) -> None:
+        n = self.C.shape[0]
         obs = np.asarray(t1, np.float64)
+        if (arrivals is None) != (t_done is None):
+            raise ValueError("censored feedback needs BOTH arrivals and "
+                             "t_done (or neither)")
+        if arrivals is not None:
+            # censored: only slots whose message arrived by t_done count.
+            # Delegates to the shared update rule (one source of truth
+            # with the fused rounds engine).
+            arr = np.asarray(arrivals, np.float64)
+            if obs.ndim != 2 or obs.shape[0] != n or arr.shape != obs.shape:
+                raise ValueError(
+                    f"censored feedback needs per-slot (n={n}, r) compute "
+                    f"delays and matching arrivals; got {obs.shape} and "
+                    f"{arr.shape}")
+            est = (np.full(n, np.inf) if self.est is None else self.est)
+            self.est = np.asarray(censored_feedback_update(
+                jnp.asarray(est, jnp.float32), obs, arr, float(t_done),
+                beta=self.beta), np.float64)
+            self._assignment = None
+            return
         if obs.ndim == 2:
             obs = obs.mean(-1)
-        if obs.shape != (self.C.shape[0],):
+        if obs.shape != (n,):
             raise ValueError(f"feedback must be (n,) or (n, r) for "
-                             f"n={self.C.shape[0]}; got {obs.shape}")
-        self.est = (obs if self.est is None
-                    else self.beta * self.est + (1.0 - self.beta) * obs)
+                             f"n={n}; got {obs.shape}")
+        if self.est is None:
+            self.est = obs
+        else:
+            # replace-on-first for workers still at the +inf never-observed
+            # sentinel (left there by earlier censored rounds) — EMAing the
+            # sentinel would pin them at +inf forever.
+            seen = np.isfinite(self.est)
+            self.est = np.where(seen,
+                                self.beta * self.est + (1.0 - self.beta) * obs,
+                                obs)
         self._assignment = None

@@ -17,6 +17,31 @@ high-dimensional integrals (40); the paper evaluates them numerically. Here:
 * ``theorem1_tail_r1_independent`` — fully analytic special case r=1 with
   independent per-worker delays: t_j = T1_j + T2_j are independent, so
   H_S(t) = prod_{j in S} S_j(t); survival of the sum via 1-D convolution.
+
+Multi-message coded expectations (paper eqs. 51-52 / 56-57 generalized)
+-----------------------------------------------------------------------
+With an intra-round message budget ``m`` (Sec. V-C; ``SchemeSpec.messages``)
+a coded worker's r partial computations arrive in ``m`` lumps; the master
+decodes once ``threshold`` partials are in.  For i.i.d. workers the
+completion tail is exact given the per-message arrival CDFs — the
+delivered-units pmf of one worker convolved n times:
+
+* ``multimessage_marginal_cdfs`` — per-message arrival CDFs on a grid
+  (message l = sum of its closing slot's cumulative compute delays + one
+  communication draw), via 1-D density convolutions.
+* ``multimessage_coded_tail``   — Pr{completion > t} from those CDFs,
+  under in-order (FIFO) message delivery within each worker.
+* ``multimessage_coded_mean``   — the average completion time (tail
+  integral).  ``m=1`` with ``threshold=(2*ceil(n/r)-1-1)*r+1`` is exactly
+  PC's eqs. 51-52 (a single message cannot reorder); intermediate and
+  ``m=r`` budgets assume FIFO channels, which the MC engine's independent
+  per-message draws can violate — agreement with the engine is tight when
+  communication dispersion is small against compute spacing (<1% for the
+  paper's calibrated models, tested) but degrades as comm noise dominates.
+
+The uncoded schemes' multi-message expectations come from the same
+Theorem-1 machinery: ``joint_survival_mc``/``theorem1_tail_mc`` accept a
+``messages`` budget and estimate H_S from the engine's remapped arrivals.
 """
 from __future__ import annotations
 
@@ -31,6 +56,8 @@ from . import montecarlo
 __all__ = [
     "theorem1_tail_from_H", "joint_survival_mc", "theorem1_tail_mc",
     "theorem1_mean_mc", "sum_survival_grid", "theorem1_tail_r1_independent",
+    "multimessage_marginal_cdfs", "multimessage_coded_tail",
+    "multimessage_coded_mean",
 ]
 
 
@@ -57,12 +84,15 @@ def theorem1_tail_from_H(H: Callable[[tuple], np.ndarray], n: int, k: int
 
 def joint_survival_mc(C: np.ndarray, model, tgrid: np.ndarray, *,
                       trials: int = 20000, seed: int = 0,
-                      chunk: int | None = None):
+                      chunk: int | None = None,
+                      messages: int | None = None):
     """Return ``H(S)`` closure backed by shared MC samples of task arrivals
     (drawn through the fused sweep engine, so they are the same common
-    random numbers the direct order-statistic simulation sees)."""
+    random numbers the direct order-statistic simulation sees).
+    ``messages`` sets the per-round message budget (Sec. V-C)."""
     tau = np.asarray(montecarlo.task_arrival_samples(
-        C, model, trials=trials, seed=seed, chunk=chunk))   # (trials, n)
+        C, model, trials=trials, seed=seed, chunk=chunk,
+        messages=messages))                                 # (trials, n)
     tg = np.asarray(tgrid)
 
     def H(S: tuple) -> np.ndarray:
@@ -73,7 +103,8 @@ def joint_survival_mc(C: np.ndarray, model, tgrid: np.ndarray, *,
     return H
 
 
-def theorem1_tail_mc(C, model, tgrid, *, trials=20000, seed=0, k):
+def theorem1_tail_mc(C, model, tgrid, *, trials=20000, seed=0, k,
+                     messages=None):
     """Pr{t_C(r, k) > t} over ``tgrid`` via Theorem 1 with MC-estimated
     joint survivals. ``k`` is a required keyword (the computation target)."""
     n = np.asarray(C).shape[0]
@@ -81,15 +112,18 @@ def theorem1_tail_mc(C, model, tgrid, *, trials=20000, seed=0, k):
         raise ValueError(
             f"k must be an integer computation target in [1, n={n}]; got "
             f"k={k!r}")
-    H = joint_survival_mc(C, model, tgrid, trials=trials, seed=seed)
+    H = joint_survival_mc(C, model, tgrid, trials=trials, seed=seed,
+                          messages=messages)
     return theorem1_tail_from_H(H, n, int(k))
 
 
 def theorem1_mean_mc(C, model, k: int, *, tmax: float, npts: int = 512,
-                     trials: int = 20000, seed: int = 0) -> float:
+                     trials: int = 20000, seed: int = 0,
+                     messages: int | None = None) -> float:
     """Average completion time via eq. (8): integral of the tail."""
     tgrid = np.linspace(0.0, tmax, npts)
-    tail = theorem1_tail_mc(C, model, tgrid, trials=trials, seed=seed, k=k)
+    tail = theorem1_tail_mc(C, model, tgrid, trials=trials, seed=seed, k=k,
+                            messages=messages)
     return float(np.trapezoid(np.clip(tail, 0.0, 1.0), tgrid))
 
 
@@ -125,3 +159,114 @@ def theorem1_tail_r1_independent(survivals: Sequence[np.ndarray], k: int
         return out
 
     return theorem1_tail_from_H(H, n, k)
+
+
+# -------- multi-message coded completion (eqs. 51-52 / 56-57 generalized) ----
+
+def _convolve_density(f: np.ndarray, g: np.ndarray, dt: float) -> np.ndarray:
+    """Density of the sum of two independent variables on the same uniform
+    grid (discrete convolution, truncated to the grid)."""
+    return np.convolve(f, g)[:len(f)] * dt
+
+
+def multimessage_marginal_cdfs(pdf1: Callable[[np.ndarray], np.ndarray],
+                               pdf2: Callable[[np.ndarray], np.ndarray],
+                               r: int, messages: int, tmax: float,
+                               npts: int = 2048
+                               ) -> tuple[np.ndarray, np.ndarray]:
+    """Per-message arrival CDFs of ONE worker on a uniform grid.
+
+    Message ``l`` closes at slot ``b_l`` (``montecarlo.message_boundaries``):
+    its arrival is the sum of ``b_l + 1`` i.i.d. per-slot compute delays
+    (density ``pdf1``) plus one per-message communication draw (``pdf2``) —
+    the sequential-computation model of eq. (1) at the closing slot.
+    Returns ``(tgrid, F)`` with ``F`` of shape ``(messages, npts)``.
+    """
+    t = np.linspace(0.0, tmax, npts)
+    dt = t[1] - t[0]
+    f1 = pdf1(t)
+    f2 = pdf2(t)
+    bounds = montecarlo.message_boundaries(r, messages)
+    F = np.zeros((messages, npts))
+    comp = None                       # density of the cumulative compute sum
+    nxt = 0
+    for j in range(r):
+        comp = f1 if comp is None else _convolve_density(comp, f1, dt)
+        if nxt < messages and bounds[nxt] == j:
+            dens = _convolve_density(comp, f2, dt)
+            F[nxt] = np.clip(np.cumsum(dens) * dt, 0.0, 1.0)
+            nxt += 1
+    return t, F
+
+
+def multimessage_coded_tail(F: np.ndarray, group_sizes: Sequence[int],
+                            n: int, threshold: int) -> np.ndarray:
+    """Pr{completion > t} of the multi-message coded scheme under FIFO
+    (in-order) message delivery within each worker.
+
+    ``n`` i.i.d. workers; worker's message ``l`` delivers ``group_sizes[l]``
+    coded partials in one lump, with arrival CDF ``F[l]`` (a row per message,
+    columns = time grid); the master decodes once ``threshold`` partials
+    arrived.  Assuming a worker's messages arrive in send order (a FIFO
+    channel — physically natural, exact by construction for one message),
+    the worker's delivered-unit count at time t has pmf {P(N=0)=1-F[0],
+    P(N=c_l)=F[l]-F[l+1], P(N=c_m)=F[m-1]} over the cumulative counts c_l;
+    the total across workers is that pmf convolved n times (counts >=
+    threshold are absorbed — they cannot return below it), and the tail is
+    Pr{total < threshold}.  Generalizes the order-statistic assemblies of
+    eqs. 51-52 (one message) and 56-57 (per-slot messages).
+
+    The MC engine draws each message's communication delay independently,
+    so a later message can overtake an earlier one there; this closed form
+    is then an approximation whose error grows with the communication
+    dispersion relative to the compute spacing between closing slots (<1%
+    on the paper's calibrated models, see tests/test_multimessage.py).
+    """
+    F = np.asarray(F, np.float64)
+    m, T = F.shape
+    gs = [int(g) for g in group_sizes]
+    if len(gs) != m or min(gs) < 1:
+        raise ValueError(f"need {m} positive group sizes, got {gs}")
+    cum = np.cumsum(gs)
+    th = int(threshold)
+    if not 1 <= th <= n * int(cum[-1]):
+        raise ValueError(f"need 1 <= threshold <= n*r={n * int(cum[-1])}, "
+                         f"got {th}")
+    probs = np.empty((m + 1, T))
+    probs[0] = 1.0 - F[0]
+    for l in range(m - 1):
+        probs[l + 1] = F[l] - F[l + 1]
+    probs[m] = F[m - 1]
+    probs = np.clip(probs, 0.0, 1.0)
+    counts = [0] + [int(c) for c in cum]
+    poly = np.zeros((th, T))          # poly[u] = Pr{units so far == u}
+    poly[0] = 1.0
+    for _ in range(n):
+        new = np.zeros_like(poly)
+        for c, p in zip(counts, probs):
+            if c < th:                # counts past th are absorbed (done)
+                new[c:] += p * poly[:th - c]
+        poly = new
+    return poly.sum(axis=0)           # Pr{units < threshold}
+
+
+def multimessage_coded_mean(n: int, r: int, messages: int,
+                            pdf1: Callable[[np.ndarray], np.ndarray],
+                            pdf2: Callable[[np.ndarray], np.ndarray], *,
+                            tmax: float, npts: int = 2048,
+                            threshold: int | None = None) -> float:
+    """Average completion time of the multi-message coded scheme with
+    ``messages`` messages per worker under i.i.d. per-slot compute delays
+    (``pdf1``), per-message communication delays (``pdf2``), and FIFO
+    delivery within each worker (see ``multimessage_coded_tail``).
+
+    ``threshold=None`` uses PCMM's ``2n - 1`` partials (eqs. 56-57);
+    PC's one-shot expectation (eqs. 51-52) is ``messages=1`` with
+    ``threshold=(2*ceil(n/r) - 2) * r + 1`` — i.e. ``2*ceil(n/r) - 1`` full
+    workers, since units then arrive in lumps of ``r``.
+    """
+    t, F = multimessage_marginal_cdfs(pdf1, pdf2, r, messages, tmax, npts)
+    gs = montecarlo.message_group_sizes(r, messages)
+    th = 2 * n - 1 if threshold is None else int(threshold)
+    tail = multimessage_coded_tail(F, gs, n, th)
+    return float(np.trapezoid(np.clip(tail, 0.0, 1.0), t))

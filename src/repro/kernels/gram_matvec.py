@@ -13,7 +13,6 @@ Vectors are carried as (n, 1) 2-D refs (TPU layout requirement).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

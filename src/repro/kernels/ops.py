@@ -10,11 +10,9 @@ from __future__ import annotations
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from .gram_matvec import gram_matvec_pallas
 from .swa_attention import swa_attention_pallas
-from . import ref
 
 __all__ = ["gram_matvec", "swa_attention", "batched_gram_matvec"]
 

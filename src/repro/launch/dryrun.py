@@ -32,18 +32,15 @@ import re
 import subprocess
 import sys
 import time
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import (ARCH_IDS, SHAPES, get_config, input_specs, resolve,
                        shape_supported)
 from ..core import RoundSpec, scenario1
-from ..models import (active_params, forward, init_cache, init_params,
-                      num_params)
+from ..models import active_params, forward, init_cache, init_params
 from ..optim import adamw
 from ..sharding import MeshCtx, mesh_context
 from ..train import TrainState, init_train_state, make_serve_step, \

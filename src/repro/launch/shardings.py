@@ -16,7 +16,6 @@ from __future__ import annotations
 from typing import Any, List, Optional, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..sharding import MeshCtx
@@ -60,7 +59,6 @@ def param_spec(path: str, shape: Tuple[int, ...], ctx: MeshCtx,
             fallbacks.append((path, shape, "row"))
         return P(*([None] * nd))
 
-    last = path.rsplit("/", 2)[-2:]
     leaf = path.rsplit("/", 1)[-1]
 
     if path.endswith("embed") or leaf == "pos_embed":

@@ -29,7 +29,7 @@ from ..optim import adamw, cosine_schedule
 from ..sharding import mesh_context
 from ..train import init_train_state, make_straggler_train_step
 from ..ckpt import save_checkpoint, load_checkpoint, latest_checkpoint
-from .mesh import make_mesh_ctx, make_local_mesh_ctx
+from .mesh import make_mesh_ctx
 
 
 def build_cluster(args):

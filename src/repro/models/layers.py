@@ -12,15 +12,14 @@ dispatch tensor; see DESIGN.md §4).
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from ..sharding import BOTH, DATA, MODEL, current_mesh_ctx, shard, axis_size
+from ..sharding import BOTH, DATA, MODEL, current_mesh_ctx, shard
 from .config import ModelConfig
 
 # jax < 0.5 compat: shard_map lived under jax.experimental and pvary did not
@@ -269,10 +268,7 @@ def seq_sharded_decode_attention(cfg: ModelConfig, q: Array, kx: Array,
     K = kx.shape[1]
     G = H // K
     pos = cache["pos"]
-    S = cache["k"].shape[2]
     maxes = ctx.model_axis
-    msize = ctx.model_size
-    S_loc = S // msize
     dspec = ctx.resolve(DATA) if B % ctx.data_size == 0 else None
     scale = 1.0 / math.sqrt(dh)
 

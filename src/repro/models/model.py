@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 from typing import Any, List, Optional, Tuple
 
 import jax

@@ -13,7 +13,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import threading
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -26,16 +26,14 @@ The weighted-loss trick avoids materializing per-worker gradient pytrees:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from ..core.aggregator import RoundSpec, StragglerAggregator
+from ..core.aggregator import RoundSpec
 from ..core.cluster import as_process
-from ..core.completion import slot_arrival_times, winner_mask_gather
+from ..core.completion import message_arrival_times, winner_mask_gather
 from ..core.montecarlo import task_gather_plan
 from ..models import ModelConfig, forward, init_params
 from ..optim import Optimizer, clip_by_global_norm
@@ -152,7 +150,9 @@ def make_straggler_train_step(cfg: ModelConfig, opt: Optimizer,
         if cluster is None:
             cluster = process.init(jax.random.fold_in(rng, 0x0c10)[None], n)
         cluster, T1, T2 = process.step(cluster, rng[None], n, r)
-        arr = slot_arrival_times(T1, T2)[0]                  # (n, r), eq. (1)
+        # (n, r) per-message result availability (eq. 1 generalized to the
+        # round's message budget; identity for the per-slot default)
+        arr = message_arrival_times(T1, T2, round_spec.n_messages)[0]
         if row_of_worker is None:
             weights, t_done = winner_mask_gather(base_C, plan, arr, n, k)
         else:
@@ -161,6 +161,10 @@ def make_straggler_train_step(cfg: ModelConfig, opt: Optimizer,
                                             arr[worker_of_row], n, k)
             weights = w2[row_of_worker]                      # worker-major
 
+        # realized selected-task count: == k a.s. with per-slot sends, may
+        # exceed k when a reduced message budget delivers tasks in lumps
+        wsum = weights.sum()
+
         def slot_loss(p, s):
             toks = slot_tokens[s].reshape(n * b, -1)         # worker-major
             labs = slot_labels[s].reshape(n * b, -1)
@@ -168,8 +172,8 @@ def make_straggler_train_step(cfg: ModelConfig, opt: Optimizer,
             kw = {key: v[s].reshape((n * b,) + v.shape[3:])
                   for key, v in extras.items()}
             losses, aux = lm_loss_per_seq(p, cfg, toks, labs, **kw)
-            w_seq = jnp.repeat(weights[:, s], b) / (k * b)   # eq. (61)
-            return (w_seq * losses).sum(), aux * (weights[:, s].sum() / k)
+            w_seq = jnp.repeat(weights[:, s], b) / (wsum * b)  # eq. (61)
+            return (w_seq * losses).sum(), aux * (weights[:, s].sum() / wsum)
 
         def total(p):
             if scan_slots:

@@ -188,3 +188,77 @@ class TestAdaptiveScheduler:
         assert sorted(w_of_row.tolist()) == list(range(n))
         M = s.matrix()
         validate_to_matrix(M, n)
+
+
+class TestCensoredFeedback:
+    def _fixture(self, n=6, r=2):
+        t1 = np.full((n, r), 2.0)
+        t1[3] = 9.0                       # worker 3 is slow
+        # worker i's messages arrive at 10*i and 10*i + 5
+        arrivals = 10.0 * np.arange(n)[:, None] + np.array([0.0, 5.0])
+        return t1, arrivals
+
+    def test_only_delivered_workers_update(self):
+        n, r = 6, 2
+        t1, arrivals = self._fixture(n, r)
+        s = AdaptiveScheduler(cyclic_to_matrix(n, r))
+        s.observe(t1, arrivals=arrivals, t_done=25.0)   # workers 0-2 fully in
+        assert np.isfinite(s.est[:3]).all()
+        assert np.isinf(s.est[3:]).all()                # silent => +inf
+        np.testing.assert_allclose(s.est[:3], 2.0)
+        # silent workers sort last in the greedy pick order
+        w_of_row = s.worker_of_row()
+        assert sorted(w_of_row.tolist()) == list(range(n))
+
+    def test_observed_set_monotone_in_deadline(self):
+        """Raising the deadline only ever adds observations: workers
+        observed at the smaller t_done keep identical estimates, and the
+        observed set grows."""
+        n, r = 6, 2
+        t1, arrivals = self._fixture(n, r)
+        small = AdaptiveScheduler(cyclic_to_matrix(n, r))
+        big = AdaptiveScheduler(cyclic_to_matrix(n, r))
+        small.observe(t1, arrivals=arrivals, t_done=25.0)
+        big.observe(t1, arrivals=arrivals, t_done=45.0)
+        seen_small = np.isfinite(small.est)
+        seen_big = np.isfinite(big.est)
+        assert (seen_small <= seen_big).all()
+        assert seen_big.sum() > seen_small.sum()
+        np.testing.assert_allclose(big.est[seen_small],
+                                   small.est[seen_small])
+
+    def test_partial_delivery_uses_only_arrived_slots(self):
+        n, r = 6, 2
+        t1, arrivals = self._fixture(n, r)
+        t1[0] = [2.0, 100.0]              # slot 1's compute was huge...
+        s = AdaptiveScheduler(cyclic_to_matrix(n, r))
+        s.observe(t1, arrivals=arrivals, t_done=2.0)    # ...and not observed
+        np.testing.assert_allclose(s.est[0], 2.0)       # slot-0 mean only
+        assert np.isinf(s.est[1:]).all()
+        # EMA on subsequent censored rounds, replace-on-first for newcomers
+        s.observe(np.full((n, r), 4.0), arrivals=arrivals, t_done=2.0)
+        np.testing.assert_allclose(s.est[0], 0.7 * 2.0 + 0.3 * 4.0)
+
+    def test_uncensored_observe_revives_silent_workers(self):
+        """A worker left at the +inf never-observed sentinel by censored
+        rounds must be replaced (not EMA'd, which would pin it at +inf)
+        once full feedback resumes."""
+        n, r = 6, 2
+        t1, arrivals = self._fixture(n, r)
+        s = AdaptiveScheduler(cyclic_to_matrix(n, r))
+        s.observe(t1, arrivals=arrivals, t_done=25.0)   # workers 3+ at +inf
+        assert np.isinf(s.est[3:]).all()
+        s.observe(np.full(n, 4.0))                      # idealized feedback
+        assert np.isfinite(s.est).all()
+        np.testing.assert_allclose(s.est[3:], 4.0)      # replaced, not EMA'd
+        np.testing.assert_allclose(s.est[0], 0.7 * 2.0 + 0.3 * 4.0,
+                                   rtol=1e-6)
+
+    def test_censored_observe_validation(self):
+        s = AdaptiveScheduler(cyclic_to_matrix(4, 2))
+        with pytest.raises(ValueError, match="BOTH"):
+            s.observe(np.ones((4, 2)), arrivals=np.ones((4, 2)))
+        with pytest.raises(ValueError, match="per-slot"):
+            s.observe(np.ones(4), arrivals=np.ones((4, 2)), t_done=1.0)
+        with pytest.raises(ValueError, match="per-slot"):
+            s.observe(np.ones((4, 2)), arrivals=np.ones((4, 3)), t_done=1.0)
