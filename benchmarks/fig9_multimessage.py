@@ -13,15 +13,31 @@ Rows:  fig9/<scheme>  with per-m completion times and the multi-message
 reduction vs one-shot.  The guard row exits non-zero if full multi-message
 (m = r) fails to beat single-message (m = 1) for any scheme — the paper's
 Sec. V-C ordering, and the reason eq. (1) models per-slot sends at all.
+
+Optimal message budget under per-message overhead
+-------------------------------------------------
+With latency alone, m = r always wins, so "how often should a worker talk
+to the master" has a trivial answer.  The second panel adds the
+Ozfatura et al. (arXiv:2004.04948) communication/computation trade-off: a
+serialized per-message protocol overhead ``comm_eps`` (a worker's l-th
+message lands (l+1)*eps late) on a straggling cluster at a high target
+k = n-1, and reports the OPTIMAL budget m*(eps) per overhead level — the
+first non-trivial operating point: m* walks from r down to 1 as eps grows.
+The ``fig9/opt_m`` guard exits non-zero unless m* is r at eps=0 and drops
+below r at some tested eps.
 """
 from __future__ import annotations
 
-from repro.core import (cyclic_to_matrix, ec2_like, pcmm_spec,
-                        staircase_to_matrix, sweep, to_spec)
+from repro.core import (BimodalStragglerDelays, cyclic_to_matrix, ec2_like,
+                        pcmm_spec, staircase_to_matrix, sweep, to_spec)
 from .common import emit
 
 N, R, K = 12, 4, 10
 BUDGETS = (1, 2, R)
+# overhead panel: straggling makes late-slot copies matter, so the
+# per-message overhead actually binds (k close to n)
+K_EPS = N - 1
+EPS_GRID = (0.0, 1e-4, 3e-4, 1e-3)
 
 
 def run(trials: int = 20000):
@@ -49,6 +65,29 @@ def run(trials: int = 20000):
     if not ok:
         raise SystemExit("fig9: multi-message completion time exceeded "
                          "single-message at equal load (Sec. V-C ordering)")
+
+    # ---- optimal m under per-message overhead (one fused sweep: every
+    # (eps, m) cell scores the same straggling draws) -----------------------
+    smodel = BimodalStragglerDelays(p_straggle=0.25, slow=8.0)
+    especs = [to_spec(f"cs_e{ei}_m{m}", cs, messages=m, comm_eps=eps)
+              for ei, eps in enumerate(EPS_GRID)
+              for m in range(1, R + 1)]
+    eres = sweep(especs, smodel, N, trials=trials, seed=0, ks=K_EPS)
+    opt = {}
+    for ei, eps in enumerate(EPS_GRID):
+        t = [eres.at_k(f"cs_e{ei}_m{m}", K_EPS) for m in range(1, R + 1)]
+        opt[eps] = 1 + min(range(R), key=t.__getitem__)
+    nontrivial = (opt[0.0] == R
+                  and any(opt[e] < R for e in EPS_GRID if e > 0))
+    emit("fig9/opt_m", 0.0,
+         ";".join([f"trials={trials}", f"n={N}", f"r={R}", f"k={K_EPS}"]
+                  + [f"eps{eps:g}_opt_m={opt[eps]}" for eps in EPS_GRID]
+                  + [f"nontrivial={'PASS' if nontrivial else 'FAIL'}"]))
+    if not nontrivial:
+        raise SystemExit("fig9: per-message overhead failed to produce a "
+                         "non-trivial optimal message budget (expected "
+                         "m*=r at eps=0 and m*<r at some eps>0)")
+    out["opt_m"] = opt
     return out
 
 

@@ -14,12 +14,15 @@ Compares the machine-readable ``BENCH_*.json`` results written by
   cell must stay positive and within ``--margin-drop`` percentage points of
   the baseline.  This is a *quality* gate on the scheduler, not a timing
   one, so it is machine-independent.
+* ``fig10`` — the load-rebalancing-vs-permutation-only margin must stay
+  within ``--rebal-drop`` percentage points of the baseline (same kind of
+  machine-independent scheduler-quality gate, for the ragged-load layer).
 
 Exit codes: 0 all checks pass, 1 regression detected, 2 missing inputs.
 
 Usage (CI)::
 
-    python -m benchmarks.run --quick --only mc_engine,fig8 --out bench_out
+    python -m benchmarks.run --quick --only mc_engine,fig8,fig10 --out bench_out
     python -m benchmarks.regression_gate --results bench_out
 """
 from __future__ import annotations
@@ -63,6 +66,9 @@ def main(argv=None) -> None:
     ap.add_argument("--margin-drop", type=float, default=6.0,
                     help="max allowed drop (percentage points) of the fig8 "
                          "adaptive-vs-static margin vs baseline")
+    ap.add_argument("--rebal-drop", type=float, default=2.0,
+                    help="max allowed drop (percentage points) of the fig10 "
+                         "rebalance-vs-permutation margin vs baseline")
     args = ap.parse_args(argv)
 
     if not os.path.exists(args.baseline):
@@ -104,6 +110,21 @@ def main(argv=None) -> None:
           f"{base['fig8_adapt_vs_static']:+.1f}% - {args.margin_drop})")
     if not ok:
         failures.append("fig8 adaptive margin")
+
+    # --- fig10 rebalance-vs-permutation margin ------------------------------
+    fig10 = _load_bench(args.results, "fig10")
+    margin = _row(fig10, "fig10/rebalance")["derived"].get("rebal_vs_perm")
+    if not isinstance(margin, (int, float)):
+        print("regression_gate: fig10/rebalance row lacks a numeric "
+              "'rebal_vs_perm' derived field")
+        sys.exit(2)
+    floor = max(base["fig10_rebal_vs_perm"] - args.rebal_drop, 0.0)
+    ok = margin >= floor
+    print(f"{'PASS' if ok else 'FAIL'} fig10 rebalance-vs-permutation "
+          f"margin: {margin:+.1f}% (floor {floor:+.1f}% = baseline "
+          f"{base['fig10_rebal_vs_perm']:+.1f}% - {args.rebal_drop})")
+    if not ok:
+        failures.append("fig10 rebalance margin")
 
     if failures:
         print(f"regression_gate: FAILED checks: {failures}")

@@ -10,7 +10,12 @@ Prints ``name,us_per_call,derived`` CSV rows:
          CS/SS vs feedback-adaptive row assignment vs oracle LB
   fig9   intra-round message budget m in {1, 2, r} for CS/SS/PCMM
          (paper Sec. V-C; exits non-zero if multi-message stops beating
-         single-message)
+         single-message), plus the Ozfatura-style per-message overhead
+         sweep reporting the optimal budget m*(eps)
+  fig10  adaptive load re-balancing (ragged per-worker loads, Egger-style)
+         vs static CS/SS and permutation-only adaptation on the
+         heterogeneous persistent cluster (exits non-zero unless
+         re-balancing beats all three)
   mc_engine  fused sweep-engine throughput vs the seed per-scheme path
   table1 end-to-end DGD iteration per scheme incl. real PC/PCMM decode
   roofline  per-(mesh, arch, shape) terms from saved dry-run artifacts
@@ -42,7 +47,8 @@ def main(argv=None) -> None:
 
     from . import (common, fig3_delays, fig4_vs_load, fig5_ec2,
                    fig6_vs_workers, fig7_vs_target, fig8_convergence,
-                   fig9_multimessage, mc_engine, table1_e2e, roofline_report)
+                   fig9_multimessage, fig10_load_rebalance, mc_engine,
+                   table1_e2e, roofline_report)
 
     jobs = {
         "fig3": lambda: fig3_delays.run(trials),
@@ -52,6 +58,7 @@ def main(argv=None) -> None:
         "fig7": lambda: fig7_vs_target.run(trials),
         "fig8": lambda: fig8_convergence.run(trials),
         "fig9": lambda: fig9_multimessage.run(trials),
+        "fig10": lambda: fig10_load_rebalance.run(trials),
         "mc_engine": lambda: mc_engine.run(trials),
         "table1": table1_e2e.run,
         "roofline": roofline_report.run,

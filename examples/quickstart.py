@@ -9,9 +9,11 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import numpy as np
 
-from repro.core import (RoundSpec, cyclic_to_matrix, staircase_to_matrix,
-                        random_assignment_to_matrix, mean_completion_time,
-                        simulate_lower_bound, scenario1, sweep, to_spec)
+from repro.core import (RoundSpec, adaptive_spec, cyclic_to_matrix,
+                        ec2_cluster, lb_spec, mean_completion_time,
+                        random_assignment_to_matrix, scenario1,
+                        simulate_lower_bound, staircase_to_matrix, sweep,
+                        sweep_rounds, to_spec)
 from repro.data import TaskPartition, lm_task_batches
 from repro.models import ModelConfig
 from repro.optim import adamw
@@ -41,6 +43,28 @@ def main():
     for m in (1, 2, r):
         label = {1: "one-shot", r: "per-slot (default)"}.get(m, "grouped")
         print(f"  m={m}: {res.at_k(f'ss_m{m}', k) * 1e3:.4f} ms  ({label})")
+
+    print(f"\n== ragged per-worker loads (n={n}, budget {r}/worker) ==")
+    # slow workers carry fewer tasks, fast ones more — same total budget
+    loads = (5, 1, 3, 5, 1, 3, 5, 1)
+    ragged = staircase_to_matrix(n, loads=loads)    # trailing slots MASKED
+    res = sweep([to_spec("ss_ragged", ragged), lb_spec(loads=loads)],
+                model, n, trials=8000, ks=k)
+    print(f"  static ragged SS:  {res.at_k('ss_ragged', k) * 1e3:.4f} ms  "
+          f"(loads {loads})")
+    print(f"  ragged oracle LB:  {res.at_k('lb', k) * 1e3:.4f} ms")
+    # adaptive re-balancing learns that allocation from censored feedback:
+    # dense CS grid of width 5 = load cap, 3 slots/worker initial budget
+    proc = ec2_cluster(n, spread=3.0, persistence=0.95, slow=8.0)
+    rres = sweep_rounds(
+        [adaptive_spec("perm", cyclic_to_matrix(n, r)),
+         adaptive_spec("rebal", cyclic_to_matrix(n, 5), loads=(r,) * n,
+                       rebalance=True)],
+        proc, n, rounds=12, k=k, trials=2000, censored_feedback=True)
+    print(f"  heterogeneous cluster, permutation-only adaptation: "
+          f"{rres.mean_round('perm') * 1e3:.4f} ms/round")
+    print(f"  ... + load re-balancing (same budget):              "
+          f"{rres.mean_round('rebal') * 1e3:.4f} ms/round")
 
     print("\n== one straggler-scheduled SGD round (tiny LM) ==")
     cfg = ModelConfig(name="tiny", arch_type="dense", n_layers=2, d_model=64,

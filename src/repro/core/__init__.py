@@ -1,9 +1,11 @@
 """repro.core — the paper's contribution: straggler-tolerant computation
 scheduling for distributed SGD (Amiri & Gündüz, IEEE TSP 2019)."""
-from .scheduling import (cyclic_to_matrix, staircase_to_matrix,
+from .scheduling import (MASKED, cyclic_to_matrix, staircase_to_matrix,
                          random_assignment_to_matrix, to_matrix,
-                         validate_to_matrix, SCHEDULES,
+                         validate_to_matrix, loads_of_matrix,
+                         mask_matrix_loads, SCHEDULES,
                          greedy_row_assignment, greedy_row_assignment_batch,
+                         greedy_load_rebalance, greedy_load_rebalance_batch,
                          censored_feedback_update, AdaptiveScheduler)
 from .delays import (DelayModel, TruncatedGaussianDelays,
                      ShiftedExponentialDelays, BimodalStragglerDelays,
@@ -17,13 +19,16 @@ from .montecarlo import (SchemeSpec, SweepResult, RoundsResult, to_spec,
                          task_arrival_times_gather, message_boundaries,
                          message_slot_map, message_group_sizes, sweep,
                          sweep_rounds, completion_samples,
-                         trajectory_samples, task_arrival_samples)
+                         trajectory_samples, task_arrival_samples,
+                         clear_cache)
 from .completion import (slot_arrival_times, message_arrival_times,
-                         task_arrival_times, completion_time,
-                         lower_bound_time, first_k_distinct_mask,
-                         winner_mask_gather, simulate_completion,
-                         simulate_lower_bound, mean_completion_time)
+                         message_slot_layout, task_arrival_times,
+                         completion_time, lower_bound_time,
+                         first_k_distinct_mask, winner_mask_gather,
+                         simulate_completion, simulate_lower_bound,
+                         mean_completion_time)
 from .theory import (theorem1_tail_from_H, theorem1_tail_mc, theorem1_mean_mc,
+                     lower_bound_tail_mc, lower_bound_mean_mc,
                      theorem1_tail_r1_independent, sum_survival_grid,
                      multimessage_marginal_cdfs, multimessage_coded_tail,
                      multimessage_coded_mean)

@@ -29,6 +29,16 @@ the master before the round completed (what a real master observes), and
 ``RoundSpec.messages`` sets the per-round message budget (paper Sec. V-C):
 results become available in per-message lumps instead of per slot.
 
+Ragged rounds: ``RoundSpec.loads`` gives each TO-matrix row its own load
+(trailing slots ``MASKED``; winner weights there are identically zero and
+eq. (61) normalizes by the realized selected count), and
+``rebalance=True`` (with ``adaptive=True``) additionally re-allocates
+whole slots between workers each round from the same feedback
+(``greedy_load_rebalance`` under the fixed total budget ``sum(loads)``,
+per-worker cap ``r``) — fetch ``current_loads()``/``current_matrix()``
+before each round.  ``RoundSpec.comm_eps`` adds the serialized per-message
+protocol overhead (Ozfatura et al.'s communication/computation trade-off).
+
 The selection mask is a deterministic function of the arrival times and is
 computed identically on every shard (cheap: n*r scalars), keeping the whole
 round a single SPMD step.  Task arrivals go through the fused MC engine's
@@ -48,7 +58,9 @@ import numpy as np
 
 from . import montecarlo, scheduling
 from .cluster import IIDProcess, as_process
-from .completion import message_arrival_times, winner_mask_gather
+from .completion import (apply_row_layout, message_arrival_times,
+                         message_slot_layout, row_layout_is_identity,
+                         winner_mask_gather)
 
 __all__ = ["RoundSpec", "StragglerAggregator"]
 
@@ -58,14 +70,24 @@ PyTree = Any
 
 @dataclasses.dataclass(frozen=True)
 class RoundSpec:
-    """Static description of one scheduling round."""
+    """Static description of one scheduling round.
+
+    ``r`` is the slot-grid width (the uniform load, or — with ``loads`` —
+    the per-worker load cap).  ``loads`` makes the round ragged: row ``i``
+    of the TO matrix keeps only its first ``loads[i]`` slots (for adaptive
+    load re-balancing, ``loads`` is the *initial budget* under the cap
+    ``r``).  ``comm_eps`` is the serialized per-message protocol overhead
+    (Ozfatura et al.'s communication/computation trade-off).
+    """
     n: int            # number of logical tasks == number of workers
-    r: int            # computation load (tasks per worker)
+    r: int            # computation load (tasks per worker) / grid width
     k: int            # computation target (distinct results needed)
     schedule: str = "ss"   # cs | ss | ra | block
     seed: int = 0          # for RA matrices
     messages: int | None = None  # per-round messages per worker
                                  # (None = one per slot, eq. 1)
+    loads: tuple | None = None   # per-row loads (ragged rounds)
+    comm_eps: float = 0.0        # per-message protocol overhead
 
     def __post_init__(self):
         if not (1 <= self.k <= self.n):
@@ -75,15 +97,42 @@ class RoundSpec:
         if self.messages is not None and not 1 <= self.messages <= self.r:
             raise ValueError(f"need 1 <= messages <= r={self.r}; got "
                              f"messages={self.messages}")
+        if self.comm_eps < 0:
+            raise ValueError(f"comm_eps must be >= 0, got {self.comm_eps}")
+        if self.loads is not None:
+            object.__setattr__(self, "loads",
+                               tuple(int(v) for v in self.loads))
+            lv = np.asarray(self.loads, np.int64)
+            if lv.shape != (self.n,) or lv.min() < 1 or lv.max() > self.r:
+                raise ValueError(f"loads must be ({self.n},) with 1 <= load "
+                                 f"<= r={self.r}; got {self.loads}")
+            if self.schedule not in ("cs", "ss", "ra"):
+                raise ValueError(
+                    f"ragged loads need a slot-0-diagonal schedule (cs / ss "
+                    f"/ ra) so every task stays covered; got "
+                    f"{self.schedule!r}")
 
     @property
     def n_messages(self) -> int:
         return self.r if self.messages is None else int(self.messages)
 
-    def to_matrix(self) -> np.ndarray:
+    @property
+    def load_vector(self) -> np.ndarray:
+        return (np.full(self.n, self.r, np.int64) if self.loads is None
+                else np.asarray(self.loads, np.int64))
+
+    def base_matrix(self) -> np.ndarray:
+        """The dense (un-masked) schedule at the grid width ``r`` — the
+        load-rebalancing cap grid."""
         return scheduling.to_matrix(self.schedule, self.n, self.r,
                                     **({"seed": self.seed}
                                        if self.schedule == "ra" else {}))
+
+    def to_matrix(self) -> np.ndarray:
+        kw = {"seed": self.seed} if self.schedule == "ra" else {}
+        if self.loads is not None:
+            kw["loads"] = self.loads
+        return scheduling.to_matrix(self.schedule, self.n, self.r, **kw)
 
 
 def _seed_of(key) -> int:
@@ -125,52 +174,113 @@ class StragglerAggregator:
     def __init__(self, spec: RoundSpec, delay, *, adaptive: bool = False,
                  init_key: Array | None = None, feedback_beta: float = 0.7,
                  coverage_gamma: float = 0.5,
-                 censored_feedback: bool = False):
+                 censored_feedback: bool = False,
+                 rebalance: bool = False):
         if censored_feedback and not adaptive:
             raise ValueError("censored_feedback requires adaptive=True — "
                              "static schedules take no feedback to censor")
+        if rebalance and not adaptive:
+            raise ValueError("rebalance requires adaptive=True — load "
+                             "re-allocation is feedback-driven")
+        if rebalance and spec.loads is None:
+            raise ValueError("rebalance needs RoundSpec.loads as the "
+                             "initial budget below the cap r")
+        if rebalance and spec.messages is not None:
+            raise ValueError("rebalance supports per-slot messages only")
+        if rebalance and spec.comm_eps:
+            raise ValueError("rebalance does not support comm_eps yet")
+        if adaptive and spec.comm_eps:
+            raise ValueError("comm_eps with adaptive scheduling is not "
+                             "supported yet (expected_completion could not "
+                             "estimate the policy actually run)")
         self.spec = spec
         self.process = as_process(delay)
-        self.base_C = spec.to_matrix()
+        self.rebalance = bool(rebalance)
+        # rebalance masks slots dynamically, so its base is the dense cap
+        # grid; otherwise the (possibly ragged) schedule bakes its masks in.
+        self.base_C = spec.base_matrix() if rebalance else spec.to_matrix()
+        if rebalance and sorted(self.base_C[:, 0].tolist()) != list(
+                range(spec.n)):
+            # e.g. a dense RA base: without a slot-0 diagonal a shed load
+            # can leave tasks with no active copy (t_done = +inf)
+            raise ValueError("rebalance needs a slot-0-diagonal base "
+                             "schedule (cs / ss) so every task stays "
+                             "covered under any load vector")
         self._plan = montecarlo.task_gather_plan(self.base_C, spec.n)
-        self.scheduler = (scheduling.AdaptiveScheduler(
-            self.base_C, beta=feedback_beta, gamma=coverage_gamma)
-            if adaptive else None)
+        if adaptive:
+            kw = dict(beta=feedback_beta, gamma=coverage_gamma)
+            if rebalance:
+                self.scheduler = scheduling.AdaptiveScheduler(
+                    self.base_C, loads=spec.loads, rebalance=True, **kw)
+            else:
+                self.scheduler = scheduling.AdaptiveScheduler(self.base_C,
+                                                              **kw)
+        else:
+            self.scheduler = None
         self.censored = bool(censored_feedback)
+        # static per-row message layout (closing-slot remap + overhead
+        # offsets + ragged masks); None when it is the identity
+        layout = message_slot_layout(
+            scheduling.loads_of_matrix(self.base_C), spec.r,
+            spec.n_messages, spec.comm_eps)
+        self._row_layout = None if row_layout_is_identity(layout) else layout
         if init_key is None:
             init_key = jax.random.PRNGKey(spec.seed)
         self._state = self.process.init(init_key[None], spec.n)
         self._round = jax.jit(self._round_fn)
 
     # --- one round, jitted: delays + winner weights in base-row space ------
-    def _round_fn(self, state, keys, row_of_worker):
+    def _round_fn(self, state, keys, row_of_worker, loads_w):
         n, r, k = self.spec.n, self.spec.r, self.spec.k
         state, T1, T2 = self.process.step(state, keys, n, r)
-        # (n, r) per-message result availability — eq. (1) generalized to
-        # the round's message budget (identity for the per-slot default).
-        s = message_arrival_times(T1, T2, self.spec.n_messages)[0]
+        # raw per-slot availability (eq. 1), permuted to base-row space;
+        # the message grouping is applied per ROW (a worker's grouping
+        # follows the row it executes), so remap after the permutation —
+        # for uniform loads the remap is row-invariant and this is
+        # bit-identical to remapping before it.
+        s = message_arrival_times(T1, T2, r)[0]          # identity: eq. (1)
         worker_of_row = jnp.argsort(row_of_worker)       # inverse permutation
         s2 = s[worker_of_row]                            # row-major arrivals
+        if self._row_layout is not None:
+            s2 = apply_row_layout(s2, self._row_layout)
+        if self.rebalance:
+            # row p inherits its executor's re-balanced load this round
+            l_row = loads_w[worker_of_row]
+            s2 = jnp.where(jnp.arange(r)[None, :] < l_row[:, None], s2,
+                           jnp.inf)
         w2, t_done = winner_mask_gather(self.base_C, self._plan, s2, n, k)
         weights = w2[row_of_worker]                      # back to worker-major
-        return state, T1[0], s, weights, t_done
+        arr_w = s2[row_of_worker]                        # worker-major arrivals
+        return state, T1[0], arr_w, weights, t_done
 
     def current_matrix(self) -> np.ndarray:
         """The effective TO matrix for the coming round (row ``w`` = tasks
-        worker ``w`` executes).  Static schedules return the base matrix;
-        adaptive ones the feedback-driven row re-assignment."""
+        worker ``w`` executes; ``MASKED`` beyond worker ``w``'s load).
+        Static schedules return the base matrix; adaptive ones the
+        feedback-driven row re-assignment (and load re-balance)."""
         if self.scheduler is None:
             return self.base_C
         return self.scheduler.matrix()
 
+    def current_loads(self) -> np.ndarray:
+        """Per-worker loads for the coming round (matches
+        ``current_matrix()``'s active slots)."""
+        if self.scheduler is None:
+            return self.spec.load_vector
+        return self.scheduler.loads()
+
     def round_mask(self, key: Array) -> Tuple[Array, Array]:
         """Advance the cluster one round, returning (weights (n, r),
         completion time scalar). weights[i, j] in [0, 1]; sums to k over all
-        slots and matches ``current_matrix()``'s worker/slot layout."""
+        slots (its active subset) and matches ``current_matrix()``'s
+        worker/slot layout."""
         row_of_worker = (np.arange(self.spec.n) if self.scheduler is None
                          else self.scheduler.row_of_worker())
+        loads_w = (self.scheduler.loads() if self.rebalance
+                   else self.spec.load_vector)
         self._state, t1, arrivals, weights, t_done = self._round(
-            self._state, key[None], jnp.asarray(row_of_worker))
+            self._state, key[None], jnp.asarray(row_of_worker),
+            jnp.asarray(loads_w))
         if self.scheduler is not None:
             if self.censored:
                 # a real master only sees messages that beat the deadline
@@ -206,9 +316,15 @@ class StragglerAggregator:
         if rounds is None:
             rounds = 1 if isinstance(self.process, IIDProcess) else 8
         m = self.spec.messages
-        spec = (montecarlo.adaptive_spec("s", self.base_C, messages=m)
-                if self.scheduler is not None
-                else montecarlo.to_spec("s", self.base_C, messages=m))
+        if self.rebalance:
+            spec = montecarlo.adaptive_spec("s", self.base_C,
+                                            loads=self.spec.loads,
+                                            rebalance=True)
+        elif self.scheduler is not None:
+            spec = montecarlo.adaptive_spec("s", self.base_C, messages=m)
+        else:
+            spec = montecarlo.to_spec("s", self.base_C, messages=m,
+                                      comm_eps=self.spec.comm_eps)
         kw = {}
         if self.scheduler is not None:   # estimate the policy actually run
             kw = dict(feedback_beta=self.scheduler.beta,

@@ -229,16 +229,29 @@ class AR1Process(DelayProcess):
         return x, T1 * f, T2 * f
 
 
-def message_comm_delays(T2: Array, messages: int) -> Array:
+def message_comm_delays(T2: Array, messages: int,
+                        eps: float = 0.0) -> Array:
     """Per-message communication delay draws for a round sending ``messages``
     messages per worker: the draw at each message's closing slot.  ``T2`` has
     shape (..., n, r); returns (..., n, messages).  ``messages = r`` returns
-    the per-slot draws unchanged."""
+    the per-slot draws unchanged (when ``eps`` is 0).
+
+    ``eps`` is the per-message protocol overhead of Ozfatura et al.
+    (arXiv:2004.04948)'s communication/computation trade-off: each message
+    costs a fixed ``eps`` of serialized uplink time, so a worker's l-th
+    message (0-indexed) carries ``(l + 1) * eps`` of accumulated overhead.
+    More messages deliver early results sooner but push the *late* messages
+    further out — which is why an optimal budget ``1 <= m* <= r`` exists
+    instead of ``m = r`` always winning (see ``benchmarks.fig9``)."""
     from .montecarlo import message_boundaries
     r = T2.shape[-1]
-    if int(messages) == r:
+    if int(messages) == r and not eps:
         return T2
-    return T2[..., jnp.asarray(message_boundaries(r, messages))]
+    d = (T2 if int(messages) == r
+         else T2[..., jnp.asarray(message_boundaries(r, messages))])
+    if eps:
+        d = d + eps * jnp.arange(1, int(messages) + 1, dtype=T2.dtype)
+    return d
 
 
 def as_process(delay) -> DelayProcess:

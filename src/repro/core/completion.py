@@ -35,7 +35,8 @@ import numpy as np
 from . import montecarlo
 
 __all__ = [
-    "slot_arrival_times", "message_arrival_times", "task_arrival_times",
+    "slot_arrival_times", "message_arrival_times", "message_slot_layout",
+    "row_layout_is_identity", "apply_row_layout", "task_arrival_times",
     "completion_time", "lower_bound_time", "first_k_distinct_mask",
     "winner_mask_gather", "simulate_completion", "simulate_lower_bound",
     "mean_completion_time",
@@ -50,24 +51,102 @@ def slot_arrival_times(T1: Array, T2: Array) -> Array:
     return jnp.cumsum(T1, axis=-1) + T2
 
 
-def message_arrival_times(T1: Array, T2: Array, messages: int) -> Array:
+def message_slot_layout(loads, r: int, messages: int,
+                        comm_eps: float = 0.0):
+    """Static per-row message layout for a (possibly ragged) slot grid:
+    returns ``(smap, offsets, active)`` — the (n, r) closing-slot remap,
+    per-slot overhead offsets (None when ``comm_eps`` is 0) and active-slot
+    mask (None when dense) — shared by ``message_arrival_times`` and the
+    aggregator's row-major arrival path."""
+    lv = np.asarray(loads, np.int64)
+    n = lv.shape[0]
+    smap = np.broadcast_to(np.arange(r), (n, r)).copy()
+    off = np.zeros((n, r), np.float32)
+    active = np.zeros((n, r), bool)
+    for i, l in enumerate(lv):
+        mi = min(int(messages), int(l))
+        smap[i, :l] = montecarlo.message_slot_map(int(l), mi)
+        b = montecarlo.message_boundaries(int(l), mi)
+        off[i, :l] = comm_eps * (np.searchsorted(b, np.arange(int(l))) + 1)
+        active[i, :l] = True
+    return (smap, off if comm_eps else None,
+            None if active.all() else active)
+
+
+def row_layout_is_identity(layout) -> bool:
+    """True when a ``message_slot_layout`` result is a no-op (dense,
+    per-slot sends, no overhead) — callers then skip ``apply_row_layout``
+    entirely, keeping the established fast path bit-identical."""
+    smap, off, act = layout
+    n, r = smap.shape
+    return (off is None and act is None
+            and np.array_equal(smap, np.broadcast_to(np.arange(r), (n, r))))
+
+
+def apply_row_layout(s: Array, layout) -> Array:
+    """Apply a static per-row message layout (``message_slot_layout``) to
+    per-slot arrivals ``s`` (..., n, r): closing-slot remap, overhead
+    offsets, +inf beyond each row's load.  The single implementation
+    shared by ``message_arrival_times``, the aggregator, and the train
+    step."""
+    smap, off, act = layout
+    out = jnp.take_along_axis(
+        s, jnp.broadcast_to(jnp.asarray(smap), s.shape), axis=-1)
+    if off is not None:
+        out = out + jnp.asarray(off)
+    if act is not None:
+        out = jnp.where(jnp.asarray(act), out, INF)
+    return out
+
+
+def message_arrival_times(T1: Array, T2: Array, messages: int, *,
+                          loads=None, comm_eps: float = 0.0) -> Array:
     """Generalized eq. (1) for an intra-round message budget: slot ``j``'s
     result arrives when its message closes — cumulative compute through the
     group's closing slot ``b(j)`` plus that message's communication draw
     (``T2[..., b(j)]``, see ``cluster.message_comm_delays``).  Returns the
     same (..., n, r) layout as ``slot_arrival_times``; ``messages == r``
-    reproduces it bit-exactly."""
+    reproduces it bit-exactly.
+
+    ``loads`` makes the grouping per-worker (worker ``w`` groups its
+    ``loads[w]`` active slots into ``min(messages, loads[w])`` messages;
+    its masked trailing slots come out +inf — never available).
+    ``comm_eps`` adds the serialized per-message protocol overhead: a
+    worker's l-th message lands ``(l + 1) * comm_eps`` late."""
     r = T1.shape[-1]
+    n = T1.shape[-2]
     s = slot_arrival_times(T1, T2)
-    if int(messages) == r:
-        return s
-    return s[..., jnp.asarray(montecarlo.message_slot_map(r, messages))]
+    if loads is None and not comm_eps:
+        if int(messages) == r:
+            return s
+        return s[..., jnp.asarray(montecarlo.message_slot_map(r, messages))]
+    lv = (np.full(n, r, np.int64) if loads is None
+          else np.asarray(loads, np.int64))
+    return apply_row_layout(s, message_slot_layout(lv, r, messages,
+                                                   comm_eps))
+
+
+def _static_active(C) -> np.ndarray | None:
+    """Static active-slot mask of a (possibly ragged) TO matrix, or None
+    when ``C`` is all-active — or a traced array, which the round APIs only
+    produce for dense schedules (ragged C is always static)."""
+    try:
+        active = np.asarray(C) >= 0
+    except Exception:                      # traced C: dense by contract
+        return None
+    return None if active.all() else active
 
 
 def task_arrival_times(C: Array, s: Array, n: int) -> Array:
     """eq. (2): per-task earliest arrival across all (worker, slot) holding
     the task. Tasks never assigned get +inf. Shapes: C (n_w, r), s
-    (..., n_w, r) -> (..., n)."""
+    (..., n_w, r) -> (..., n).  ``C`` may be ragged: ``MASKED`` (-1) slots
+    are statically excluded (their arrivals read as +inf)."""
+    active = _static_active(C)
+    if active is not None:
+        # masked slots never deliver: +inf before the scatter-min (the -1
+        # index would otherwise wrap onto task n-1)
+        s = jnp.where(jnp.asarray(active), s, INF)
     Cf = jnp.asarray(C).reshape(-1)                  # (n_w * r,)
     sf = s.reshape(s.shape[:-2] + (-1,))             # (..., n_w * r)
     init = jnp.full(s.shape[:-2] + (n,), INF, s.dtype)
@@ -105,9 +184,9 @@ def first_k_distinct_mask(C: Array, s: Array, n: int, k: int
     were still missing — so ``weights`` may sum to more than ``k``; consumers
     normalize by the realized sum (see ``StragglerAggregator.combine``).
     """
-    C = jnp.asarray(C)
+    active = _static_active(C)             # static, before any jnp tracing
     tau = task_arrival_times(C, s, n)                    # (..., n)
-    return _winner_weights(C, s, tau, k)
+    return _winner_weights(jnp.asarray(C), s, tau, k, active)
 
 
 def winner_mask_gather(C: Array, plan: np.ndarray, s: Array, n: int, k: int
@@ -116,19 +195,23 @@ def winner_mask_gather(C: Array, plan: np.ndarray, s: Array, n: int, k: int
     fused engine's static gather layout (``task_gather_plan(C, n)``) instead
     of a dynamic scatter-min — the TPU-friendly form used by the round API
     (aggregator / train step hot paths)."""
-    C = jnp.asarray(C)
+    active = _static_active(C)             # static, before any jnp tracing
     tau = montecarlo.task_arrival_times_gather(plan, s)  # (..., n)
-    return _winner_weights(C, s, tau, k)
+    return _winner_weights(jnp.asarray(C), s, tau, k, active)
 
 
-def _winner_weights(C: Array, s: Array, tau: Array, k: int
-                    ) -> Tuple[Array, Array]:
+def _winner_weights(C: Array, s: Array, tau: Array, k: int,
+                    active: np.ndarray | None) -> Tuple[Array, Array]:
     t_done = completion_time(tau, k)                     # (...,)
     selected = tau <= t_done[..., None]                  # (..., n) k tasks (a.s.)
     # winner slots: slot arrival equals its task's earliest arrival
     tau_at_slot = tau[..., C]                            # (..., n_w, r)
     sel_at_slot = selected[..., C]                       # (..., n_w, r)
     is_winner = (s <= tau_at_slot) & sel_at_slot
+    if active is not None:
+        # ragged rows: a MASKED slot's -1 index aliases task n-1 above, so
+        # statically bar masked slots from winning (their weight is 0)
+        is_winner = is_winner & jnp.asarray(active)
     # normalize per task so duplicated winners (measure-zero ties) average
     ones = jnp.where(is_winner, 1.0, 0.0)
     per_task_count = jnp.zeros_like(tau).at[..., C.reshape(-1)].add(
@@ -146,19 +229,24 @@ def _winner_weights(C: Array, s: Array, tau: Array, k: int
 def simulate_completion(C: np.ndarray, model, k: int, *, trials: int = 10000,
                         seed: int = 0, chunk: int | None = None) -> Array:
     """Sample ``trials`` rounds of the schedule ``C`` under ``model`` and
-    return the completion-time samples, shape (trials,)."""
+    return the completion-time samples, shape (trials,).  ``C`` may be
+    ragged (trailing ``MASKED`` sentinels)."""
     n = np.asarray(C).shape[0]
     return montecarlo.completion_samples(
         montecarlo.to_spec("to", C), model, n, trials=trials, seed=seed,
         chunk=chunk, k=k)
 
 
-def simulate_lower_bound(model, n: int, r: int, k: int, *, trials: int = 10000,
-                         seed: int = 0, chunk: int | None = None) -> Array:
-    """Monte-Carlo eq. (44): samples of the oracle k-th order statistic."""
+def simulate_lower_bound(model, n: int, r: int | None = None,
+                         k: int = 1, *, trials: int = 10000,
+                         seed: int = 0, chunk: int | None = None,
+                         loads=None) -> Array:
+    """Monte-Carlo eq. (44): samples of the oracle k-th order statistic.
+    ``loads`` generalizes the bound to ragged per-worker loads (the k-th
+    order statistic over all ``sum(loads)`` active slot arrivals)."""
     return montecarlo.completion_samples(
-        montecarlo.lb_spec(r), model, n, trials=trials, seed=seed,
-        chunk=chunk, k=k)
+        montecarlo.lb_spec(r, loads=loads), model, n, trials=trials,
+        seed=seed, chunk=chunk, k=k)
 
 
 def mean_completion_time(C: np.ndarray, model, k: int, *, trials: int = 10000,

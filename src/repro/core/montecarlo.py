@@ -70,7 +70,33 @@ so draws stay paired across ``messages`` values under common random numbers.
 
 The remap is static (``message_slot_map``) and folds into the task gather
 plans, so the hot path gains zero runtime ops and ``m = load`` compiles to
-the identical program as before the axis existed.
+the identical program as before the axis existed.  A per-message protocol
+overhead ``comm_eps`` (Ozfatura et al.'s communication/computation
+trade-off: a worker's l-th message arrives ``(l+1) * comm_eps`` late, a
+serialized-uplink model) likewise folds into the plans as static offsets,
+so an *optimal* message budget exists instead of ``m = load`` always
+winning.
+
+Ragged per-worker loads
+-----------------------
+Every uncoded spec (``to``/``tau``/``adaptive``/``lb``) accepts a
+per-worker load vector ``loads`` (``loads[w] <= r_max``): the slot grid
+stays rectangular ``(n, r_max)`` — masked trailing slots still consume
+delay draws, keeping draws paired under common random numbers across load
+vectors — but masked slots are *statically* dropped from the task gather
+plans (they read the +inf sentinel), so the hot path gains zero runtime
+ops and a uniform ``loads`` is bit-exact with the dense path.  TO matrices
+may equivalently carry the raggedness themselves via trailing
+``scheduling.MASKED`` (-1) sentinels; message budgets become per-worker
+(worker ``w`` sends ``min(messages, loads[w])`` messages).
+
+``adaptive_spec(..., rebalance=True)`` additionally re-allocates whole
+slots between workers each round inside the rounds scan
+(``greedy_load_rebalance_batch``, Egger et al. arXiv:2304.08589): the
+dense base matrix's width is the per-worker cap, ``loads`` the initial
+budget, and each round's per-worker loads are recomputed from the same
+(optionally censored) delay estimates that drive the row re-assignment —
+slow workers shed slots to fast ones under the fixed total budget.
 
 Rounds axis (``sweep_rounds``)
 ------------------------------
@@ -118,10 +144,18 @@ class SchemeSpec:
     r: Optional[int] = None         # computation load for "lb"/"pc"/"pcmm"
     messages: Optional[int] = None  # per-round messages per worker
                                     # (None = the kind's default semantics)
+    loads: Optional[tuple] = None   # per-worker loads (None = uniform/dense;
+                                    # for rebalance: the initial budget)
+    rebalance: bool = False         # adaptive only: re-allocate whole slots
+                                    # between workers each round
+    comm_eps: float = 0.0           # per-message protocol overhead: a
+                                    # worker's l-th message lands (l+1)*eps
+                                    # late (serialized uplink)
 
     @property
     def load(self) -> int:
-        """Number of per-worker slots this scheme touches."""
+        """Width of this scheme's slot grid (the maximum per-worker load;
+        for rebalance specs, the per-worker load cap)."""
         if self.kind in ("to", "tau", "adaptive"):
             return len(self.C[0])
         return int(self.r)
@@ -130,10 +164,22 @@ class SchemeSpec:
     def n_messages(self) -> int:
         """Messages each worker sends per round.  ``None`` resolves to the
         kind's established semantics: full multi-message (one message per
-        slot, eq. 1) for uncoded schemes / lb / pcmm, one-shot for pc."""
+        slot, eq. 1) for uncoded schemes / lb / pcmm, one-shot for pc.
+        Workers with ragged load below the budget send one message per
+        active slot."""
         if self.messages is not None:
             return int(self.messages)
         return 1 if self.kind == "pc" else self.load
+
+    def load_vector(self, n: Optional[int] = None) -> np.ndarray:
+        """Per-worker loads as an array (uniform when ``loads`` is None).
+        ``n`` is required for matrix-less kinds (lb/pc/pcmm)."""
+        if self.loads is not None:
+            return np.asarray(self.loads, np.int64)
+        n_w = len(self.C) if self.C is not None else n
+        if n_w is None:
+            raise ValueError(f"{self.name}: need n for a matrix-less spec")
+        return np.full(n_w, self.load, np.int64)
 
     def matrix(self) -> np.ndarray:
         return np.asarray(self.C, dtype=np.int64)
@@ -146,33 +192,88 @@ def _freeze_matrix(C) -> tuple:
     return tuple(tuple(int(v) for v in row) for row in C)
 
 
-def to_spec(name: str, C, messages: Optional[int] = None) -> SchemeSpec:
+def _freeze_ragged(C, loads) -> Tuple[tuple, Optional[tuple]]:
+    """Canonicalize a (possibly ragged) TO matrix + load vector: masked
+    slots hold ``scheduling.MASKED`` in the frozen C, and a uniform
+    full-width ``loads`` canonicalizes to ``None`` — the dense
+    representation — so uniform-load specs hash/compare/evaluate
+    identically to the established dense path."""
+    from . import scheduling
+    C = np.asarray(C)
+    if C.ndim != 2:
+        raise ValueError(f"TO matrix must be 2-D, got shape {C.shape}")
+    if loads is not None:
+        C = scheduling.mask_matrix_loads(C, loads)
+    lv = scheduling.loads_of_matrix(C)             # validates trailing masks
+    if (lv == C.shape[1]).all():
+        return _freeze_matrix(C), None
+    return _freeze_matrix(C), tuple(int(v) for v in lv)
+
+
+def to_spec(name: str, C, messages: Optional[int] = None, *,
+            loads=None, comm_eps: float = 0.0) -> SchemeSpec:
     """A TO-matrix scheme (CS / SS / RA / custom).  ``messages`` is the
-    per-round message budget (default: one message per slot, eq. 1)."""
-    return SchemeSpec(name=name, kind="to", C=_freeze_matrix(C),
-                      messages=messages)
+    per-round message budget (default: one message per slot, eq. 1);
+    ``loads`` masks each row's trailing slots (ragged per-worker loads,
+    equivalently encoded as trailing -1 sentinels in ``C``); ``comm_eps``
+    is the per-message protocol overhead."""
+    Cf, lt = _freeze_ragged(C, loads)
+    return SchemeSpec(name=name, kind="to", C=Cf, messages=messages,
+                      loads=lt, comm_eps=float(comm_eps))
 
 
-def tau_spec(name: str, C, messages: Optional[int] = None) -> SchemeSpec:
+def tau_spec(name: str, C, messages: Optional[int] = None, *,
+             loads=None, comm_eps: float = 0.0) -> SchemeSpec:
     """Raw task-arrival samples for a TO matrix (no order statistics)."""
-    return SchemeSpec(name=name, kind="tau", C=_freeze_matrix(C),
-                      messages=messages)
+    Cf, lt = _freeze_ragged(C, loads)
+    return SchemeSpec(name=name, kind="tau", C=Cf, messages=messages,
+                      loads=lt, comm_eps=float(comm_eps))
 
 
-def adaptive_spec(name: str, C, messages: Optional[int] = None) -> SchemeSpec:
+def adaptive_spec(name: str, C, messages: Optional[int] = None, *,
+                  loads=None, rebalance: bool = False) -> SchemeSpec:
     """An adaptive scheme: base TO matrix ``C`` whose rows are re-assigned
     to workers each round from observed per-worker delay feedback (only
-    valid in ``sweep_rounds``)."""
-    return SchemeSpec(name=name, kind="adaptive", C=_freeze_matrix(C),
-                      messages=messages)
+    valid in ``sweep_rounds``).  ``loads`` makes the base ragged (rows
+    carry their loads through the re-permutation); with ``rebalance=True``
+    the base must be dense — its width is the per-worker load *cap*,
+    ``loads`` the initial budget — and per-worker loads are additionally
+    re-balanced each round from the same feedback (slow workers shed whole
+    slots to fast ones under the fixed total budget)."""
+    if rebalance:
+        # the budget stays a budget — do NOT fold it into row masks
+        lt = (None if loads is None
+              else tuple(int(v) for v in np.asarray(loads, np.int64)))
+        return SchemeSpec(name=name, kind="adaptive", C=_freeze_matrix(C),
+                          messages=messages, loads=lt, rebalance=True)
+    Cf, lt = _freeze_ragged(C, loads)
+    return SchemeSpec(name=name, kind="adaptive", C=Cf, messages=messages,
+                      loads=lt)
 
 
-def lb_spec(r: int, name: str = "lb",
-            messages: Optional[int] = None) -> SchemeSpec:
+def lb_spec(r: Optional[int] = None, name: str = "lb",
+            messages: Optional[int] = None, *,
+            loads=None, comm_eps: float = 0.0) -> SchemeSpec:
     """Oracle lower bound (eq. 46) at computation load ``r`` (at a reduced
     ``messages`` budget: the oracle bound among schemes sending that many
-    messages per round)."""
-    return SchemeSpec(name=name, kind="lb", r=int(r), messages=messages)
+    messages per round).  ``loads`` generalizes the bound to a per-worker
+    load vector: the k-th order statistic over the ``sum(loads)`` active
+    slot arrivals."""
+    lt = None
+    if loads is not None:
+        lv = np.asarray(loads, np.int64)
+        if lv.ndim != 1 or lv.min() < 1:
+            raise ValueError(f"loads must be a vector of positive per-worker "
+                             f"loads, got {loads}")
+        r = int(lv.max()) if r is None else int(r)
+        if lv.max() > r:
+            raise ValueError(f"max load {lv.max()} exceeds r={r}")
+        if not (lv == r).all():                    # uniform -> canonical dense
+            lt = tuple(int(v) for v in lv)
+    elif r is None:
+        raise ValueError("need a load r (or a loads vector)")
+    return SchemeSpec(name=name, kind="lb", r=int(r), messages=messages,
+                      loads=lt, comm_eps=float(comm_eps))
 
 
 def pc_spec(r: int, name: str = "pc") -> SchemeSpec:
@@ -205,8 +306,11 @@ def message_boundaries(r: int, messages: int) -> np.ndarray:
     sent in ``messages`` as-even-as-possible consecutive groups (earlier
     messages carry the extra slot when ``messages`` does not divide ``r``).
     The last message always closes at slot ``r - 1``."""
+    if int(messages) != messages:
+        raise ValueError(f"messages must be an integer, got {messages!r}")
     if not 1 <= int(messages) <= r:
-        raise ValueError(f"need 1 <= messages <= r={r}, got {messages}")
+        raise ValueError(f"message budget out of range: need 1 <= messages "
+                         f"<= r={r}, got messages={messages}")
     sizes = [len(g) for g in np.array_split(np.arange(r), int(messages))]
     return np.cumsum(sizes, dtype=np.int64) - 1
 
@@ -228,9 +332,73 @@ def message_slot_map(r: int, messages: int) -> np.ndarray:
 def _slot_map_of(spec: SchemeSpec) -> Optional[np.ndarray]:
     """The spec's message remap, or None when it is the identity (full
     multi-message) — callers skip the gather entirely in that case, keeping
-    the default path bit-identical to the pre-message-axis engine."""
+    the default path bit-identical to the pre-message-axis engine.
+
+    Dense specs get the shared length-``r`` map; ragged specs a per-worker
+    ``(n, r)`` map (worker ``w`` groups its ``loads[w]`` active slots into
+    ``min(messages, loads[w])`` messages; masked slots keep the identity —
+    they are statically dropped from every plan anyway)."""
     m = spec.n_messages
-    return None if m == spec.load else message_slot_map(spec.load, m)
+    r = spec.load
+    if spec.loads is None:
+        return None if m == r else message_slot_map(r, m)
+    rows, nontrivial = [], False
+    for l in spec.loads:
+        mi = min(m, int(l))
+        row = np.arange(r, dtype=np.int64)
+        row[:l] = message_slot_map(int(l), mi)
+        nontrivial |= mi != l
+        rows.append(row)
+    return np.stack(rows) if nontrivial else None
+
+
+def _apply_slot_map(s: Array, mmap: np.ndarray) -> Array:
+    """Gather per-message arrivals: ``s`` (..., n, r); ``mmap`` a shared
+    length-``r`` map or a per-worker ``(n, r)`` map."""
+    mm = jnp.asarray(mmap)
+    if mm.ndim == 1:
+        return s[..., mm]
+    return jnp.take_along_axis(
+        s, jnp.broadcast_to(mm, s.shape[:-2] + mm.shape), axis=-1)
+
+
+def _message_index_grid(spec: SchemeSpec, n: int) -> np.ndarray:
+    """(n_w, r) message index (0-based) of each slot's message under the
+    spec's budget and load vector (masked slots get index 0 — they are
+    never read)."""
+    r = spec.load
+    m = spec.n_messages
+    lv = spec.load_vector(n)
+    grid = np.zeros((len(lv), r), np.int64)
+    for i, l in enumerate(lv):
+        b = message_boundaries(int(l), min(m, int(l)))
+        grid[i, :l] = np.searchsorted(b, np.arange(int(l)))
+    return grid
+
+
+def _offsets_flat_of(spec: SchemeSpec, n: int, r_max: int
+                     ) -> Optional[np.ndarray]:
+    """Static per-slot arrival offsets from the per-message protocol
+    overhead ``comm_eps`` (message ``l`` lands ``(l+1) * eps`` late), laid
+    out flat over the row-major ``(n_w, r_max)`` slot grid plus the +inf
+    sentinel position (offset 0).  ``None`` when ``eps == 0`` so the
+    established zero-overhead path stays bit-identical."""
+    if not spec.comm_eps:
+        return None
+    grid = _message_index_grid(spec, n)                   # (n_w, r)
+    n_w, r = grid.shape
+    smap = _slot_map_of(spec)
+    if smap is None:
+        smap = np.broadcast_to(np.arange(r), (n_w, r))
+    elif smap.ndim == 1:
+        smap = np.broadcast_to(smap, (n_w, r))
+    off = np.zeros(n_w * r_max + 1, np.float32)
+    # write each message's offset at its *closing* slot (the position the
+    # plans gather); all slots of a message share one closing slot + index.
+    for i in range(n_w):
+        for j in range(r):
+            off[i * r_max + int(smap[i, j])] = spec.comm_eps * (grid[i, j] + 1)
+    return off
 
 
 # ------------------- static gather layout for task arrivals ------------------
@@ -245,10 +413,15 @@ def task_gather_plan(C, n: int, r_max: Optional[int] = None,
     callers map to +inf, so ``min`` over the gathered values reproduces the
     scatter-min of eq. (2) with a static gather — the TPU-friendly form.
 
-    ``slot_map`` (length-``r``, values in ``[0, r)``) redirects slot ``j``'s
-    read to ``slot_map[j]`` — the multi-message layout folds its
-    closing-slot remap (``message_slot_map``) into the plan, so per-message
-    arrivals cost no extra runtime ops.
+    ``C`` may be ragged: slots holding the ``scheduling.MASKED`` (-1)
+    sentinel are statically dropped from the plan (their grid positions
+    read as +inf through the pad), so ragged loads cost zero extra runtime
+    ops in the hot path.
+
+    ``slot_map`` (length-``r`` shared, or per-worker ``(n_w, r)``, values
+    in ``[0, r)``) redirects slot ``j``'s read to ``slot_map[j]`` — the
+    multi-message layout folds its closing-slot remap (``message_slot_map``)
+    into the plan, so per-message arrivals cost no extra runtime ops.
     """
     C = np.asarray(C)
     n_w, r = C.shape
@@ -256,17 +429,22 @@ def task_gather_plan(C, n: int, r_max: Optional[int] = None,
     if r > r_max:
         raise ValueError(f"TO matrix load r={r} exceeds slot grid r_max={r_max}")
     if slot_map is None:
-        slot_map = np.arange(r)
+        slot_map = np.broadcast_to(np.arange(r), (n_w, r))
     else:
         slot_map = np.asarray(slot_map)
-        if slot_map.shape != (r,) or slot_map.min() < 0 or slot_map.max() >= r:
-            raise ValueError(f"slot_map must be ({r},) with values in "
-                             f"[0, {r}); got shape {slot_map.shape}")
+        if slot_map.ndim == 1:
+            slot_map = np.broadcast_to(slot_map, (n_w, r))
+        if (slot_map.shape != (n_w, r) or slot_map.min() < 0
+                or slot_map.max() >= r):
+            raise ValueError(f"slot_map must be ({r},) or ({n_w}, {r}) with "
+                             f"values in [0, {r}); got shape {slot_map.shape}")
     sentinel = n_w * r_max
     positions: list[list[int]] = [[] for _ in range(n)]
     for i in range(n_w):
         for j in range(r):
-            positions[int(C[i, j])].append(i * r_max + int(slot_map[j]))
+            if C[i, j] < 0:            # MASKED slot: statically dropped
+                continue
+            positions[int(C[i, j])].append(i * r_max + int(slot_map[i, j]))
     m = max((len(p) for p in positions), default=0) or 1
     plan = np.full((n, m), sentinel, dtype=np.int32)
     for p, lst in enumerate(positions):
@@ -274,28 +452,56 @@ def task_gather_plan(C, n: int, r_max: Optional[int] = None,
     return plan
 
 
-def task_arrival_times_gather(plan: np.ndarray, s: Array) -> Array:
+def task_arrival_times_gather(plan: np.ndarray, s: Array,
+                              offsets: Optional[np.ndarray] = None) -> Array:
     """eq. (2) via the static gather plan.
 
     ``s`` has shape (..., n_w, r_max); ``plan`` may be ``(n, m)`` for one
     scheme or ``(S, n, m)`` for a stack, giving (..., n) or (..., S, n).
     Tasks never assigned come out +inf, matching the scatter-min version.
+    ``offsets`` (same shape as ``plan``) adds static per-copy arrival
+    offsets (the ``comm_eps`` per-message overhead) before the min.
     """
     sf = s.reshape(s.shape[:-2] + (-1,))
     pad = jnp.full(sf.shape[:-1] + (1,), INF, s.dtype)
     sp = jnp.concatenate([sf, pad], axis=-1)
-    return jnp.min(sp[..., jnp.asarray(plan)], axis=-1)
+    g = sp[..., jnp.asarray(plan)]
+    if offsets is not None:
+        g = g + jnp.asarray(offsets)
+    return jnp.min(g, axis=-1)
 
 
-def _stack_plans(specs: Sequence[SchemeSpec], n: int, r_max: int) -> np.ndarray:
-    plans = [task_gather_plan(sp.matrix(), n, r_max,
-                              slot_map=_slot_map_of(sp)) for sp in specs]
+def _plan_of(spec: SchemeSpec, n: int, r_max: int) -> np.ndarray:
+    return task_gather_plan(spec.matrix(), n, r_max,
+                            slot_map=_slot_map_of(spec))
+
+
+def _plan_offsets_of(spec: SchemeSpec, plan: np.ndarray, n: int,
+                     r_max: int) -> Optional[np.ndarray]:
+    """Per-copy offsets aligned with ``plan`` (``comm_eps`` folded into the
+    static layout), or None when the spec has no overhead."""
+    off_flat = _offsets_flat_of(spec, n, r_max)
+    if off_flat is None:
+        return None
+    return off_flat[plan]
+
+
+def _stack_plans(specs: Sequence[SchemeSpec], n: int, r_max: int
+                 ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+    plans = [_plan_of(sp, n, r_max) for sp in specs]
     m = max(p.shape[1] for p in plans)
     sentinel = n * r_max
     out = np.full((len(plans), n, m), sentinel, dtype=np.int32)
     for i, p in enumerate(plans):
         out[i, :, :p.shape[1]] = p
-    return out
+    offs = None
+    if any(sp.comm_eps for sp in specs):
+        offs = np.zeros((len(plans), n, m), dtype=np.float32)
+        for i, (sp, p) in enumerate(zip(specs, plans)):
+            o = _plan_offsets_of(sp, p, n, r_max)
+            if o is not None:
+                offs[i, :, :p.shape[1]] = o
+    return out, offs
 
 
 # ----------------------------- fused evaluator -------------------------------
@@ -314,21 +520,31 @@ def _stat_width(spec: SchemeSpec, n: int, ks: Optional[int]) -> int:
     return n if ks is None else 1
 
 
+def _flat_window_key(sp: SchemeSpec) -> tuple:
+    return (sp.load, sp.n_messages, sp.loads, sp.comm_eps)
+
+
 def _build_eval(specs: Tuple[SchemeSpec, ...], n: int, r_max: int,
                 ks: Optional[int]):
     """Static-scheme evaluator: slot arrivals ``s`` (chunk, n, r_max) ->
     {name: (chunk, L)}.  All static structure (gather plans, thresholds,
-    slot windows) is baked in at trace time; shared by the single-round
-    sampler and the rounds-axis scan body."""
+    slot windows, ragged-load masks, per-message overhead offsets) is baked
+    in at trace time; shared by the single-round sampler and the
+    rounds-axis scan body."""
     to_specs = tuple(sp for sp in specs if sp.kind == "to")
-    plan_stack = _stack_plans(to_specs, n, r_max) if to_specs else None
+    plan_stack = off_stack = None
+    if to_specs:
+        plan_stack, off_stack = _stack_plans(to_specs, n, r_max)
 
     # lb/pcmm both rank the same flattened per-message-arrival window; group
-    # them by (load, messages) so each distinct window is selected exactly
-    # once.  Full multi-message windows slice the shared slot grid directly
-    # (the pre-message-axis code path, bit-identical); reduced budgets gather
-    # through the closing-slot remap.
-    flat_width: Dict[Tuple[int, int], int] = {}
+    # them by (load, messages, loads, eps) so each distinct window is
+    # selected exactly once.  Dense zero-overhead full-multi-message windows
+    # slice the shared slot grid directly (the pre-message-axis code path,
+    # bit-identical); dense reduced budgets gather through the shared
+    # closing-slot remap; ragged loads and/or overheads use a static flat
+    # gather over the active slots only.
+    flat_width: Dict[tuple, int] = {}
+    flat_spec: Dict[tuple, SchemeSpec] = {}
     for sp in specs:
         if sp.kind == "lb":
             need = n if ks is None else ks
@@ -336,14 +552,40 @@ def _build_eval(specs: Tuple[SchemeSpec, ...], n: int, r_max: int,
             need = _pcmm_threshold(n)
         else:
             continue
-        key = (sp.load, sp.n_messages)
+        key = _flat_window_key(sp)
         flat_width[key] = max(flat_width.get(key, 0), need)
+        flat_spec[key] = sp
+
+    def _flat_window(sp: SchemeSpec, s: Array) -> Array:
+        r, m = sp.load, sp.n_messages
+        if sp.loads is None and not sp.comm_eps:
+            if m == r:
+                return s[..., :, :r].reshape(s.shape[0], -1)
+            return s[..., :, jnp.asarray(message_slot_map(r, m))].reshape(
+                s.shape[0], -1)
+        # ragged loads and/or per-message overhead: static gather over the
+        # active (remapped) slots, plus their static offsets.
+        lv = sp.load_vector(n)
+        smap = _slot_map_of(sp)
+        if smap is None:
+            smap = np.broadcast_to(np.arange(r), (n, r))
+        elif smap.ndim == 1:
+            smap = np.broadcast_to(smap, (n, r))
+        idx = np.asarray([i * r_max + int(smap[i, j])
+                          for i in range(n) for j in range(int(lv[i]))],
+                         np.int32)
+        sf = s.reshape(s.shape[0], -1)
+        win = sf[..., jnp.asarray(idx)]
+        off_flat = _offsets_flat_of(sp, n, r_max)
+        if off_flat is not None:
+            win = win + jnp.asarray(off_flat[idx])
+        return win
 
     def eval_fn(s: Array) -> Dict[str, Array]:
         out: Dict[str, Array] = {}
 
         if to_specs:
-            tau = task_arrival_times_gather(plan_stack, s)   # (chunk, S, n)
+            tau = task_arrival_times_gather(plan_stack, s, off_stack)
             if ks is None:
                 stat = jnp.sort(tau, axis=-1)                # all k at once
             else:
@@ -352,31 +594,29 @@ def _build_eval(specs: Tuple[SchemeSpec, ...], n: int, r_max: int,
                 out[sp.name] = stat[:, i]
 
         flat_stats = {}
-        for (r, m), w in flat_width.items():
-            if m == r:
-                win = s[..., :, :r]
-            else:
-                win = s[..., :, jnp.asarray(message_slot_map(r, m))]
-            flat_stats[(r, m)] = _smallest(
-                win.reshape(s.shape[0], -1), w)      # (chunk, w) ascending
+        for key, w in flat_width.items():
+            win = _flat_window(flat_spec[key], s)
+            flat_stats[key] = _smallest(win, w)      # (chunk, w) ascending
 
         for sp in specs:
             if sp.kind == "tau":
-                plan = task_gather_plan(sp.matrix(), n, r_max,
-                                        slot_map=_slot_map_of(sp))
-                out[sp.name] = task_arrival_times_gather(plan, s)
+                plan = _plan_of(sp, n, r_max)
+                out[sp.name] = task_arrival_times_gather(
+                    plan, s, _plan_offsets_of(sp, plan, n, r_max))
             elif sp.kind == "lb":
-                fs = flat_stats[(sp.load, sp.n_messages)]
+                fs = flat_stats[_flat_window_key(sp)]
                 out[sp.name] = fs[..., :n] if ks is None else fs[..., ks - 1:ks]
             elif sp.kind == "pc":
                 r = sp.load
                 tw = s[..., r - 1]         # = sum_j T1[..., :r] + T2[..., r-1]
+                if sp.comm_eps:
+                    tw = tw + jnp.float32(sp.comm_eps)   # its single message
                 th = _pc_threshold(n, r)   # PC's own decode threshold — the
                 out[sp.name] = _smallest(tw, th)[..., -1:]   # sweep k never
                 # applies to coded schemes (same rule as pcmm below)
             elif sp.kind == "pcmm":
                 th = _pcmm_threshold(n)
-                out[sp.name] = flat_stats[(sp.load, sp.n_messages)][
+                out[sp.name] = flat_stats[_flat_window_key(sp)][
                     ..., th - 1:th]
         return out
 
@@ -454,7 +694,17 @@ def _get_exec(specs: Tuple[SchemeSpec, ...], model, n: int, r_max: int,
     return exec_
 
 
+def _covered_tasks(sp: SchemeSpec) -> int:
+    """Number of distinct tasks a (possibly ragged) TO spec can deliver.
+    Row re-permutation never changes the union of active slots, so this is
+    permutation-invariant; rebalance specs are validated to have a slot-0
+    diagonal covering everything."""
+    C = sp.matrix()
+    return len(np.unique(C[C >= 0]))
+
+
 def _check_specs(specs: Sequence[SchemeSpec], n: int) -> Tuple[SchemeSpec, ...]:
+    from . import scheduling
     specs = tuple(specs)
     if not specs:
         raise ValueError("need at least one SchemeSpec")
@@ -471,6 +721,9 @@ def _check_specs(specs: Sequence[SchemeSpec], n: int) -> Tuple[SchemeSpec, ...]:
             raise ValueError(
                 f"{sp.name}: PCMM infeasible: n*r={n * sp.load} < "
                 f"2n-1={_pcmm_threshold(n)}")
+        if sp.comm_eps < 0:
+            raise ValueError(f"{sp.name}: comm_eps must be >= 0, got "
+                             f"{sp.comm_eps}")
         if sp.messages is not None:
             if sp.kind == "pc" and sp.messages != 1:
                 raise ValueError(
@@ -481,6 +734,49 @@ def _check_specs(specs: Sequence[SchemeSpec], n: int) -> Tuple[SchemeSpec, ...]:
                 raise ValueError(
                     f"{sp.name}: need 1 <= messages <= load={sp.load}, got "
                     f"messages={sp.messages}")
+        # ---- ragged-load validation -----------------------------------
+        if sp.loads is not None:
+            if sp.kind in ("pc", "pcmm"):
+                raise ValueError(f"{sp.name}: ragged loads are not defined "
+                                 f"for coded schemes (the decode threshold "
+                                 f"assumes a uniform load)")
+            lv = np.asarray(sp.loads, np.int64)
+            if lv.shape != (n,) or lv.min() < 1 or lv.max() > sp.load:
+                raise ValueError(
+                    f"{sp.name}: loads must be ({n},) with 1 <= load <= "
+                    f"{sp.load}, got {sp.loads}")
+        if sp.kind in ("to", "tau", "adaptive") and not sp.rebalance:
+            # masks must be a trailing suffix matching the loads field
+            # (spec constructors guarantee this; direct SchemeSpec
+            # construction is validated here)
+            C = sp.matrix()
+            if sp.loads is not None or (C < 0).any():
+                scheduling.validate_to_matrix(C, n, loads=sp.loads)
+        if sp.rebalance:
+            if sp.kind != "adaptive":
+                raise ValueError(f"{sp.name}: rebalance is only defined for "
+                                 f"adaptive specs")
+            C = sp.matrix()
+            if (C < 0).any():
+                raise ValueError(f"{sp.name}: rebalance needs a dense base "
+                                 f"matrix (its width is the load cap)")
+            if sp.loads is None:
+                raise ValueError(f"{sp.name}: rebalance needs an initial "
+                                 f"loads budget below the grid width")
+            if sorted(C[:, 0].tolist()) != list(range(n)):
+                raise ValueError(
+                    f"{sp.name}: rebalance needs a slot-0 diagonal (every "
+                    f"row's first task distinct, e.g. CS/SS) so any load "
+                    f"vector keeps all tasks covered")
+            if sp.messages is not None:
+                raise ValueError(f"{sp.name}: rebalance supports per-slot "
+                                 f"messages only (messages=None)")
+            if sp.comm_eps:
+                raise ValueError(f"{sp.name}: rebalance does not support "
+                                 f"comm_eps yet")
+        elif sp.comm_eps and sp.kind == "adaptive":
+            raise ValueError(f"{sp.name}: comm_eps is not supported for "
+                             f"adaptive specs yet")
     return specs
 
 
@@ -494,6 +790,20 @@ def _run(specs: Sequence[SchemeSpec], model, n: int, *, trials: int,
                              f"axis — use sweep_rounds")
     if ks is not None and not 1 <= ks <= n:
         raise ValueError(f"need 1 <= k <= n={n}, got k={ks}")
+    for sp in specs:
+        if sp.kind != "to":
+            continue                   # tau: raw arrivals, +inf meaningful
+        covered = _covered_tasks(sp)
+        if ks is not None and covered < ks:
+            raise ValueError(
+                f"{sp.name}: ragged schedule covers only {covered} "
+                f"distinct tasks < k={ks}; the completion time would be "
+                f"infinite")
+        if ks is None and covered < n:
+            raise ValueError(
+                f"{sp.name}: schedule covers only {covered} of {n} tasks, "
+                f"so all-k completion times are infinite beyond "
+                f"k={covered}; sweep with ks <= {covered} instead")
     r_max = max(sp.load for sp in specs)
     chunk = trials if chunk is None else max(1, min(int(chunk), trials))
     jstats, jsums, jsamples = _get_exec(specs, model, n, r_max, ks)
@@ -606,12 +916,17 @@ def completion_samples(spec: SchemeSpec, model, n: int, *, trials: int = 10000,
 
 def task_arrival_samples(C, model, *, trials: int = 10000, seed: int = 0,
                          chunk: Optional[int] = None,
-                         messages: Optional[int] = None) -> Array:
+                         messages: Optional[int] = None,
+                         loads=None, comm_eps: float = 0.0) -> Array:
     """Raw per-task arrival-time samples ``tau`` of shape (trials, n) for a
     TO matrix — shared-draw backing for joint-survival estimators.
-    ``messages`` is the per-round message budget (default: per-slot sends)."""
+    ``messages`` is the per-round message budget (default: per-slot sends);
+    ``loads`` masks each row's trailing slots (ragged per-worker loads —
+    tasks with no active copy come out +inf); ``comm_eps`` the per-message
+    overhead."""
     n = np.asarray(C).shape[0]
-    spec = tau_spec("tau", C, messages=messages)
+    spec = tau_spec("tau", C, messages=messages, loads=loads,
+                    comm_eps=comm_eps)
     return _run([spec], model, n, trials=trials, seed=seed, chunk=chunk,
                 ks=None, want_samples=True)[spec.name]
 
@@ -644,23 +959,74 @@ def _build_rounds_fn(specs: Tuple[SchemeSpec, ...], process, n: int,
     ad_specs = tuple(sp for sp in specs if sp.kind == "adaptive")
     eval_fn = (_build_eval(static_specs, n, r_max, ks)
                if static_specs else None)
-    ad_plans = tuple(task_gather_plan(sp.matrix(), n, r_max,
-                                      slot_map=_slot_map_of(sp))
-                     for sp in ad_specs)
     ad_mats = tuple(sp.matrix() for sp in ad_specs)
+    # rebalance specs mask slots dynamically, so their plan must keep every
+    # slot of the dense base; static ragged specs bake their masks in.
+    ad_plans = tuple(_plan_of(sp, n, r_max) for sp in ad_specs)
     ad_mmaps = tuple(_slot_map_of(sp) for sp in ad_specs)
+    # static per-row loads for ragged bases (rows carry their loads through
+    # the re-permutation); None for dense bases (no masking needed).
+    ad_lrow = tuple(None if sp.loads is None or sp.rebalance
+                    else np.asarray(sp.loads, np.int64) for sp in ad_specs)
+    # initial per-worker budgets for rebalance specs
+    ad_l0 = tuple(np.asarray(sp.loads, np.int64) if sp.rebalance else None
+                  for sp in ad_specs)
 
-    def _assign_and_score(sp, plan, Cb, est, s):
-        """Greedy row re-assignment from ``est`` feedback, then this
-        scheme's completion time on the permuted slot grid."""
+    def _assign_and_score(i, est, s):
+        """Greedy row re-assignment (and, for rebalance specs, greedy load
+        re-allocation) from ``est`` feedback, then this scheme's completion
+        time on the permuted (and masked) slot grid.  Returns
+        ``(w_of_row, loads_w, val)`` with ``loads_w`` None for fixed-load
+        specs."""
+        sp, plan, Cb = ad_specs[i], ad_plans[i], ad_mats[i]
         # assignment uses feedback from *previous* rounds only.
         w_of_row = scheduling.greedy_row_assignment_batch(
             Cb, est, gamma=gamma)               # (chunk, n)
         # row p's slots are executed by worker w_of_row[p]: permute the
         # worker axis, then the static gather plan applies.
         s2 = jnp.take_along_axis(s, w_of_row[..., None], axis=1)
+        loads_w = None
+        if sp.rebalance:
+            r_sp = Cb.shape[1]
+            loads_w = scheduling.greedy_load_rebalance_batch(
+                est, ad_l0[i], r_max=r_sp, min_load=1)       # (chunk, n)
+            # row p inherits its executor's load: mask the trailing slots
+            # of the row-major grid to +inf before the static gather.
+            l_row = jnp.take_along_axis(loads_w, w_of_row, axis=-1)
+            s2 = jnp.where(jnp.arange(s2.shape[-1])[None, None, :]
+                           < l_row[..., None], s2, INF)
         tau = task_arrival_times_gather(plan, s2)
-        return w_of_row, s2, _smallest(tau, ks)[..., -1:]
+        return w_of_row, loads_w, _smallest(tau, ks)[..., -1:]
+
+    def _worker_arrivals(i, w_of_row, loads_w, s):
+        """Worker-major per-message arrivals feeding the (censored)
+        feedback: worker w's message arrivals are its own slots of ``s``
+        whatever row it executes (the row permutation and its inverse
+        cancel for the raw slots), masked to +inf beyond the worker's load
+        this round.  A per-ROW message map travels with the assignment:
+        worker w groups its slots by the layout of the row it executes."""
+        Cb, mmap = ad_mats[i], ad_mmaps[i]
+        r_sp = Cb.shape[1]
+        s_w = s[..., :, :r_sp]
+        if mmap is None:
+            arr_w = s_w
+        elif np.ndim(mmap) == 1:                      # row-invariant map
+            arr_w = _apply_slot_map(s_w, mmap)
+        else:
+            # per-row map: permute the static (n, r) map to worker-major
+            # (worker w uses the layout of row row_of_worker[w])
+            row_of_worker = jnp.argsort(w_of_row, axis=-1)
+            mm = jnp.take(jnp.asarray(mmap), row_of_worker, axis=0)
+            arr_w = jnp.take_along_axis(s_w, mm, axis=-1)
+        if loads_w is not None:                       # rebalance: dynamic
+            act = jnp.arange(r_sp)[None, None, :] < loads_w[..., None]
+            arr_w = jnp.where(act, arr_w, INF)
+        elif ad_lrow[i] is not None:                  # static ragged rows
+            row_of_worker = jnp.argsort(w_of_row, axis=-1)
+            l_of_w = jnp.take(jnp.asarray(ad_lrow[i]), row_of_worker)
+            act = jnp.arange(r_sp)[None, None, :] < l_of_w[..., None]
+            arr_w = jnp.where(act, arr_w, INF)
+        return arr_w
 
     def rounds_fn(keys: Array) -> Dict[str, Array]:
         chunk = keys.shape[0]
@@ -676,19 +1042,14 @@ def _build_rounds_fn(specs: Tuple[SchemeSpec, ...], process, n: int,
                 s = jnp.cumsum(T1, axis=-1) + T2    # eq. (1), per round
                 out = dict(eval_fn(s)) if eval_fn is not None else {}
                 new_e = []
-                for sp, plan, Cb, mmap, est in zip(
-                        ad_specs, ad_plans, ad_mats, ad_mmaps, ests):
-                    _, _, val = _assign_and_score(sp, plan, Cb, est, s)
+                for i, (sp, Cb, est) in enumerate(zip(ad_specs, ad_mats,
+                                                      ests)):
+                    w_of_row, loads_w, val = _assign_and_score(i, est, s)
                     out[sp.name] = val
                     r_sp = Cb.shape[1]
-                    # worker w's message arrivals are its own slots of ``s``
-                    # whatever row it executes (the row permutation and its
-                    # inverse cancel), so the worker-major arrivals slice
-                    # ``s`` directly; shared censored update: only messages
-                    # that beat this scheme's own round completion are
-                    # observed.
-                    arr_w = (s[..., :, :r_sp] if mmap is None
-                             else s[..., :, jnp.asarray(mmap)])
+                    # shared censored update: only messages that beat this
+                    # scheme's own round completion are observed.
+                    arr_w = _worker_arrivals(i, w_of_row, loads_w, s)
                     new_e.append(scheduling.censored_feedback_update(
                         est, T1[..., :r_sp], arr_w, val[..., 0], beta=beta))
                 return (pstate, tuple(new_e)), {
@@ -703,9 +1064,8 @@ def _build_rounds_fn(specs: Tuple[SchemeSpec, ...], process, n: int,
                 pstate, T1, T2 = process.step(pstate, kr, n, r_max)
                 s = jnp.cumsum(T1, axis=-1) + T2    # eq. (1), per round
                 out = dict(eval_fn(s)) if eval_fn is not None else {}
-                for sp, plan, Cb in zip(ad_specs, ad_plans, ad_mats):
-                    _, _, out[sp.name] = _assign_and_score(sp, plan, Cb,
-                                                           est, s)
+                for i, sp in enumerate(ad_specs):
+                    _, _, out[sp.name] = _assign_and_score(i, est, s)
                 obs = T1.mean(axis=-1)              # per-worker compute time
                 est = jnp.where(t == 0, obs, beta * est + (1.0 - beta) * obs)
                 return (pstate, est, t + 1), {nm: v[..., 0] for nm, v in
@@ -776,6 +1136,13 @@ def _check_rounds_args(specs, n, ks, rounds):
             raise ValueError(f"{sp.name}: tau specs are single-round only")
     if not 1 <= ks <= n:
         raise ValueError(f"need 1 <= k <= n={n}, got k={ks}")
+    for sp in specs:
+        if (sp.kind in ("to", "adaptive") and not sp.rebalance
+                and _covered_tasks(sp) < ks):
+            raise ValueError(
+                f"{sp.name}: ragged schedule covers only "
+                f"{_covered_tasks(sp)} distinct tasks < k={ks}; the "
+                f"completion time would be infinite")
     if rounds < 1:
         raise ValueError(f"need rounds >= 1, got {rounds}")
     return specs
@@ -873,7 +1240,9 @@ def sweep_rounds(specs: Sequence[SchemeSpec], process, n: int, *,
     Parameters
     ----------
     specs:   schemes to evaluate; ``adaptive_spec`` entries re-assign their
-             base matrix's rows each round from delay feedback.
+             base matrix's rows each round from delay feedback (and, with
+             ``rebalance=True``, re-allocate whole slots between workers
+             under the fixed total budget — Egger-style load adaptation).
     process: a ``DelayProcess`` (or a stateless ``DelayModel``, coerced to
              the zero-correlation ``IIDProcess``).
     rounds:  number of consecutive SGD rounds scanned per trial.

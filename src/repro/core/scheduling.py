@@ -5,6 +5,21 @@ indices worker ``i`` executes, in order: worker ``i`` first computes
 ``h(X[C[i, 0]])``, then ``h(X[C[i, 1]])``, ... (paper Sec. II). Tasks are
 0-indexed here (the paper is 1-indexed).
 
+Ragged per-worker loads
+-----------------------
+The paper fixes one computation load ``r`` for every worker, but real
+clusters are heterogeneous (paper Sec. VI EC2 measurements), and *reducing*
+a slow worker's load beats merely re-ordering its tasks (Egger et al.,
+arXiv:2304.08589).  Every construction therefore accepts a per-worker load
+vector ``loads`` (``loads[i] <= r_max``): the result is still a rectangular
+``(n, r_max)`` grid, with row ``i``'s trailing ``r_max - loads[i]`` slots
+holding the sentinel ``MASKED`` (-1).  A uniform ``loads`` is exactly the
+dense matrix.  ``loads_of_matrix`` recovers the load vector from the
+sentinels; ``validate_to_matrix`` checks coverage/distinctness on the
+active prefix of each row.  ``greedy_load_rebalance`` reallocates whole
+slots between workers from delay feedback under a fixed total budget
+(slow workers shed slots to fast ones, makespan-greedy).
+
 Implemented schedules:
   * Cyclic scheduling   (CS, paper eq. 21):  C(i,j) = g(i + j)
   * Staircase scheduling (SS, paper eq. 29): C(i,j) = g(i + (-1)^i * j)
@@ -38,19 +53,27 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
+    "MASKED",
     "cyclic_to_matrix",
     "staircase_to_matrix",
     "random_assignment_to_matrix",
     "block_to_matrix",
     "validate_to_matrix",
+    "loads_of_matrix",
+    "mask_matrix_loads",
     "to_matrix",
     "SCHEDULES",
     "Schedule",
     "greedy_row_assignment",
     "greedy_row_assignment_batch",
+    "greedy_load_rebalance",
+    "greedy_load_rebalance_batch",
     "censored_feedback_update",
     "AdaptiveScheduler",
 ]
+
+MASKED = -1      # sentinel task index for the inactive trailing slots of a
+                 # ragged row (worker load < grid width)
 
 
 def _g(m: np.ndarray, n: int) -> np.ndarray:
@@ -58,34 +81,91 @@ def _g(m: np.ndarray, n: int) -> np.ndarray:
     return np.mod(m, n)
 
 
-def cyclic_to_matrix(n: int, r: int) -> np.ndarray:
+def _check_loads(n: int, loads, r: int | None) -> tuple[np.ndarray, int]:
+    """Validate a per-worker load vector against ``n`` workers and an
+    optional grid width ``r`` (defaults to ``max(loads)``).  Returns
+    ``(loads, r_max)``."""
+    lv = np.asarray(loads, np.int64)
+    if lv.shape != (n,):
+        raise ValueError(f"loads must have shape ({n},), got {lv.shape}")
+    if lv.min() < 1:
+        raise ValueError(f"every worker needs load >= 1, got min {lv.min()}")
+    r_max = int(lv.max()) if r is None else int(r)
+    if lv.max() > r_max:
+        raise ValueError(f"max load {lv.max()} exceeds grid width r={r_max}")
+    if not 1 <= r_max <= n:
+        raise ValueError(f"need 1 <= r <= n, got r={r_max}, n={n}")
+    return lv, r_max
+
+
+def mask_matrix_loads(C: np.ndarray, loads) -> np.ndarray:
+    """Apply a load vector to a dense TO matrix: slots ``j >= loads[i]`` of
+    row ``i`` are replaced with the ``MASKED`` sentinel."""
+    C = np.asarray(C).astype(np.int64).copy()
+    lv, _ = _check_loads(C.shape[0], loads, C.shape[1])
+    C[np.arange(C.shape[1])[None, :] >= lv[:, None]] = MASKED
+    return C
+
+
+def cyclic_to_matrix(n: int, r: int | None = None, *,
+                     loads=None) -> np.ndarray:
     """CS schedule (eq. 21): every worker walks the ring in the same
     direction, offset by its index, so each task has the same execution
-    *position* at every worker that holds it."""
+    *position* at every worker that holds it.  With ``loads``, row ``i``
+    keeps only its first ``loads[i]`` slots (trailing slots ``MASKED``);
+    the slot-0 diagonal ``C[i, 0] = i`` keeps every task covered for any
+    load vector."""
+    if loads is not None:
+        _, r = _check_loads(n, loads, r)
+    elif r is None:
+        raise ValueError("need a load r (or a loads vector)")
     if not (1 <= r <= n):
         raise ValueError(f"need 1 <= r <= n, got r={r}, n={n}")
     i = np.arange(n)[:, None]
     j = np.arange(r)[None, :]
-    return _g(i + j, n).astype(np.int64)
+    C = _g(i + j, n).astype(np.int64)
+    return C if loads is None else mask_matrix_loads(C, loads)
 
 
-def staircase_to_matrix(n: int, r: int) -> np.ndarray:
+def staircase_to_matrix(n: int, r: int | None = None, *,
+                        loads=None) -> np.ndarray:
     """SS schedule (eq. 29): even-indexed workers walk the ring ascending,
     odd-indexed workers descending (0-indexed parity matches the paper's
-    1-indexed convention: paper worker 1 ≙ row 0 ascends)."""
+    1-indexed convention: paper worker 1 ≙ row 0 ascends).  ``loads`` masks
+    each row's trailing slots as in ``cyclic_to_matrix``; the slot-0
+    diagonal again guarantees coverage."""
+    if loads is not None:
+        _, r = _check_loads(n, loads, r)
+    elif r is None:
+        raise ValueError("need a load r (or a loads vector)")
     if not (1 <= r <= n):
         raise ValueError(f"need 1 <= r <= n, got r={r}, n={n}")
     i = np.arange(n)[:, None]
     j = np.arange(r)[None, :]
     sign = np.where(i % 2 == 0, 1, -1)
-    return _g(i + sign * j, n).astype(np.int64)
+    C = _g(i + sign * j, n).astype(np.int64)
+    return C if loads is None else mask_matrix_loads(C, loads)
 
 
 def random_assignment_to_matrix(n: int, r: int | None = None, *,
                                 rng: np.random.Generator | None = None,
-                                seed: int | None = 0) -> np.ndarray:
+                                seed: int | None = 0,
+                                loads=None) -> np.ndarray:
     """RA scheme [18]: r = n (full dataset at each worker); each row is an
-    independent uniformly random permutation of [n]."""
+    independent uniformly random permutation of [n].  With ``loads``, row
+    ``i`` starts at its own task ``i`` (restoring the coverage guarantee a
+    truncated random permutation would lose) followed by a random
+    permutation of the rest, truncated to ``loads[i]`` slots."""
+    if loads is not None:
+        lv, r_max = _check_loads(n, loads, r if r is not None else n)
+        if rng is None:
+            rng = np.random.default_rng(seed)
+        C = np.full((n, r_max), MASKED, np.int64)
+        for i in range(n):
+            rest = rng.permutation(np.delete(np.arange(n), i))
+            row = np.concatenate([[i], rest])
+            C[i, :lv[i]] = row[:lv[i]]
+        return C
     if r is not None and r != n:
         raise ValueError(f"RA requires r == n (got r={r}, n={n})")
     if rng is None:
@@ -93,24 +173,56 @@ def random_assignment_to_matrix(n: int, r: int | None = None, *,
     return np.stack([rng.permutation(n) for _ in range(n)]).astype(np.int64)
 
 
-def block_to_matrix(n: int, r: int) -> np.ndarray:
+def block_to_matrix(n: int, r: int | None = None, *,
+                    loads=None) -> np.ndarray:
     """Naive blocked redundancy baseline (not in the paper; useful ablation):
     worker i computes tasks {i, i+1, ..., i+r-1} like CS but all workers
     start from the *lowest* index of their block — i.e. identical to CS.
     Differs for the ablation where workers share a start: C(i,j) = g(⌊i/r⌋*r + j).
+    ``loads`` masks trailing slots (note: unlike CS/SS, blocked rows have no
+    slot-0 diagonal, so ragged blocks may leave tasks uncovered).
     """
+    if loads is not None:
+        _, r = _check_loads(n, loads, r)
+    elif r is None:
+        raise ValueError("need a load r (or a loads vector)")
     if not (1 <= r <= n):
         raise ValueError(f"need 1 <= r <= n, got r={r}, n={n}")
     i = np.arange(n)[:, None]
     j = np.arange(r)[None, :]
-    return _g((i // max(r, 1)) * r + j, n).astype(np.int64)
+    C = _g((i // max(r, 1)) * r + j, n).astype(np.int64)
+    return C if loads is None else mask_matrix_loads(C, loads)
+
+
+def loads_of_matrix(C: np.ndarray) -> np.ndarray:
+    """Per-worker load vector of a (possibly ragged) TO matrix: the number
+    of active (non-``MASKED``) leading slots of each row.  Raises if a
+    ``MASKED`` sentinel appears before an active slot (masks must be a
+    trailing suffix) or a row is fully masked."""
+    C = np.asarray(C)
+    if C.ndim != 2:
+        raise ValueError(f"TO matrix must be 2-D, got shape {C.shape}")
+    active = C != MASKED
+    loads = active.sum(axis=1).astype(np.int64)
+    if loads.min() < 1:
+        raise ValueError(f"row {int(loads.argmin())} has no active slots")
+    # masks must be contiguous and trailing: row i active exactly at j < l_i
+    expect = np.arange(C.shape[1])[None, :] < loads[:, None]
+    if not np.array_equal(active, expect):
+        bad = int(np.nonzero((active != expect).any(axis=1))[0][0])
+        raise ValueError(f"row {bad} has a MASKED sentinel before an active "
+                         f"slot; masks must be a trailing suffix: {C[bad]}")
+    return loads
 
 
 def validate_to_matrix(C: np.ndarray, n: int | None = None,
-                       require_distinct: bool = True) -> None:
-    """Check C is a valid TO matrix: shape (n, r), entries in [0, n),
-    optionally distinct within each row (any optimal C has distinct rows,
-    paper Sec. II)."""
+                       require_distinct: bool = True,
+                       loads=None) -> None:
+    """Check C is a valid TO matrix: shape (n, r), active entries in
+    [0, n), optionally distinct within each row's active prefix (any
+    optimal C has distinct rows, paper Sec. II).  Rows may be ragged:
+    trailing slots holding the ``MASKED`` sentinel are inactive; ``loads``
+    (optional) cross-checks the per-row active counts."""
     C = np.asarray(C)
     if C.ndim != 2:
         raise ValueError(f"TO matrix must be 2-D, got shape {C.shape}")
@@ -119,11 +231,19 @@ def validate_to_matrix(C: np.ndarray, n: int | None = None,
         raise ValueError(f"TO matrix has {C.shape[0]} rows, expected n={n}")
     if C.shape[1] > n_:
         raise ValueError(f"computation load r={C.shape[1]} exceeds n={n_}")
-    if C.min() < 0 or C.max() >= n_:
+    lv = loads_of_matrix(C)                # also checks trailing-mask shape
+    if loads is not None:
+        want, _ = _check_loads(C.shape[0], loads, C.shape[1])
+        if not np.array_equal(lv, want):
+            raise ValueError(f"matrix loads {lv.tolist()} do not match the "
+                             f"given loads {want.tolist()}")
+    act = C[C != MASKED]
+    if act.min() < 0 or act.max() >= n_:
         raise ValueError(f"task indices must lie in [0, {n_}), got "
-                         f"[{C.min()}, {C.max()}]")
+                         f"[{act.min()}, {act.max()}]")
     if require_distinct:
         for i, row in enumerate(C):
+            row = row[:lv[i]]
             if len(set(row.tolist())) != len(row):
                 raise ValueError(f"row {i} has repeated tasks: {row}")
 
@@ -134,11 +254,11 @@ class Schedule:
     name: str
     build: Callable[..., np.ndarray]
 
-    def __call__(self, n: int, r: int, **kw) -> np.ndarray:
+    def __call__(self, n: int, r: int | None = None, **kw) -> np.ndarray:
         # ``r`` is passed through for every schedule — RA's builder rejects
         # r != n rather than silently ignoring the requested load.
         C = self.build(n, r, **kw)
-        validate_to_matrix(C, n)
+        validate_to_matrix(C, n, loads=kw.get("loads"))
         return C
 
 
@@ -150,8 +270,10 @@ SCHEDULES: dict[str, Schedule] = {
 }
 
 
-def to_matrix(name: str, n: int, r: int, **kw) -> np.ndarray:
-    """Build a named TO matrix (``cs`` | ``ss`` | ``ra`` | ``block``)."""
+def to_matrix(name: str, n: int, r: int | None = None, **kw) -> np.ndarray:
+    """Build a named TO matrix (``cs`` | ``ss`` | ``ra`` | ``block``).
+    ``loads=`` builds the ragged variant (per-worker loads, trailing slots
+    ``MASKED``) for every schedule that supports it."""
     try:
         sched = SCHEDULES[name.lower()]
     except KeyError:
@@ -211,11 +333,17 @@ def greedy_row_assignment_batch(C: np.ndarray, est: jax.Array, *,
     """Batched JAX twin of ``greedy_row_assignment``: ``est`` has shape
     (..., n); returns ``worker_of_row`` of the same shape (int32).  Pure and
     jit/scan-friendly (``C`` is baked in at trace time); used per-trial
-    inside the fused rounds engine."""
+    inside the fused rounds engine.  ``C`` may be ragged: ``MASKED`` slots
+    contribute no coverage (their discount is statically zeroed)."""
     C = np.asarray(C)
     n, r = C.shape
-    Cj = jnp.asarray(C)
-    disc = jnp.asarray(gamma ** np.arange(r), jnp.float32)
+    # ragged rows: masked slots neither score nor add coverage.  For dense
+    # matrices ``disc_rows`` broadcasts the same per-slot discounts as
+    # before (bit-identical arithmetic).
+    active = C != MASKED
+    Cj = jnp.asarray(np.where(active, C, 0))
+    disc_np = (gamma ** np.arange(r))[None, :] * active
+    disc_rows = jnp.asarray(disc_np, jnp.float32)            # (n, r)
     big = jnp.float32(np.finfo(np.float32).max)
 
     def one(e):                                      # e (n,)
@@ -223,12 +351,12 @@ def greedy_row_assignment_batch(C: np.ndarray, est: jax.Array, *,
 
         def pick(carry, w):
             cov, taken, w_of_row = carry
-            scores = (disc[None, :] * cov[Cj]).sum(-1)
+            scores = (disc_rows * cov[Cj]).sum(-1)
             scores = jnp.where(taken, big, scores)
             p = jnp.argmin(scores)                   # ties -> lowest row
             w_of_row = w_of_row.at[p].set(w.astype(jnp.int32))
             taken = taken.at[p].set(True)
-            add = disc / jnp.maximum(e[w], 1e-30)
+            add = disc_rows[p] / jnp.maximum(e[w], 1e-30)
             cov = cov.at[Cj[p]].add(add)
             return (cov, taken, w_of_row), None
 
@@ -236,6 +364,117 @@ def greedy_row_assignment_batch(C: np.ndarray, est: jax.Array, *,
                 jnp.zeros(n, jnp.int32))
         (_, _, w_of_row), _ = jax.lax.scan(pick, init, order)
         return w_of_row
+
+    batch = est.shape[:-1]
+    flat = est.reshape((-1, n))
+    out = jax.vmap(one)(flat)
+    return out.reshape(batch + (n,))
+
+
+# --------------------- adaptive load re-balancing ----------------------------
+
+def greedy_load_rebalance(speed_est, loads=None, *, total: int | None = None,
+                          r_max: int, min_load: int = 1,
+                          steps: int | None = None) -> np.ndarray:
+    """Re-allocate whole computation slots between workers from estimated
+    per-task delays, under a fixed total budget (Egger et al.,
+    arXiv:2304.08589: *reducing* a slow worker's load beats re-ordering its
+    tasks).
+
+    Starting from ``loads`` (or an as-even-as-possible split of ``total``),
+    the greedy repeatedly moves one slot from the worker with the largest
+    estimated finish time ``est[w] * loads[w]`` to the worker whose
+    post-move finish ``est[w'] * (loads[w'] + 1)`` is smallest, whenever the
+    move strictly lowers the donor's finish below nothing it raises —
+    i.e. classic makespan descent.  Bounds: ``min_load <= loads[w] <=
+    r_max`` and ``sum(loads)`` is invariant (the total computation budget).
+
+    ``speed_est`` may contain ``+inf`` for workers never yet observed
+    (censored feedback): they shed slots down to ``min_load`` as soon as any
+    finite-estimate worker has headroom.  With no observations at all
+    (all-``inf`` estimates, or ``None``/all-equal estimates on a uniform
+    allocation) the allocation is returned unchanged; equal *finite*
+    estimates on an uneven allocation still descend toward the even split
+    (that is the makespan greedy doing its job).
+
+    Returns the new per-worker load vector (int64).  Delegates to the
+    batched JAX implementation (one source of truth with the fused rounds
+    engine).
+    """
+    if loads is None:
+        if total is None or speed_est is None:
+            raise ValueError("need an initial loads vector, or a total "
+                             "budget plus a speed_est to size it from")
+        n = np.asarray(speed_est).shape[0]
+        base, extra = divmod(int(total), n)
+        lv = np.full(n, base, np.int64)
+        lv[:extra] += 1                    # as-even-as-possible split
+    else:
+        lv = np.asarray(loads, np.int64)
+    n = lv.shape[0]
+    if total is not None and int(lv.sum()) != int(total):
+        raise ValueError(f"loads sum {lv.sum()} != total budget {total}")
+    if not 1 <= min_load <= lv.min():
+        raise ValueError(f"need 1 <= min_load <= min(loads); got "
+                         f"min_load={min_load}, loads min {lv.min()}")
+    if lv.max() > r_max:
+        raise ValueError(f"max load {lv.max()} exceeds r_max={r_max}")
+    est = (np.ones(n, np.float32) if speed_est is None
+           else np.asarray(speed_est, np.float32))
+    if est.shape != (n,):
+        raise ValueError(f"speed_est must have shape ({n},), got {est.shape}")
+    fn = _jitted_rebalance(tuple(int(v) for v in lv), int(r_max),
+                           int(min_load), steps)
+    return np.asarray(fn(jnp.asarray(est)[None])[0], np.int64)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_rebalance(loads_tup: tuple, r_max: int, min_load: int,
+                      steps: int | None):
+    loads = np.asarray(loads_tup, np.int64)
+    return jax.jit(lambda est: greedy_load_rebalance_batch(
+        est, loads, r_max=r_max, min_load=min_load, steps=steps))
+
+
+def greedy_load_rebalance_batch(est: jax.Array, loads: np.ndarray, *,
+                                r_max: int, min_load: int = 1,
+                                steps: int | None = None) -> jax.Array:
+    """Batched JAX twin of ``greedy_load_rebalance``: ``est`` has shape
+    (..., n) (``+inf`` = never observed), ``loads`` is the static initial
+    allocation; returns per-worker loads of the same batch shape (int32),
+    each summing to ``sum(loads)``.  Pure and jit/scan-friendly; used
+    per-round inside the fused rounds engine.  ``steps`` bounds the number
+    of single-slot moves (default ``n * r_max``, enough to reach the greedy
+    fixed point from any allocation); once no strictly improving move
+    exists the allocation is a no-op fixed point, so extra steps are
+    harmless."""
+    loads = np.asarray(loads, np.int64)
+    n = loads.shape[0]
+    if steps is None:
+        steps = int(n * r_max)
+    l0 = jnp.asarray(loads, jnp.int32)
+    ninf = jnp.float32(-np.inf)
+    pinf = jnp.float32(np.inf)
+
+    def one(e):                                       # e (n,)
+        def move(l, _):
+            lf = l.astype(jnp.float32)
+            finish = e * lf                           # est finish per worker
+            can_give = l > min_load
+            can_take = l < r_max
+            give = jnp.where(can_give, finish, ninf)
+            take = jnp.where(can_take, e * (lf + 1.0), pinf)
+            d = jnp.argmax(give)                      # slowest finisher
+            w = jnp.argmin(take)                      # cheapest extra slot
+            # move only if it strictly lowers the donor's finish below the
+            # receiver's post-move finish (makespan descent; `inf > inf`
+            # is False, so an all-inf/no-feedback round keeps the split).
+            ok = (give[d] > take[w]) & can_give[d] & can_take[w] & (d != w)
+            l = jnp.where(ok, l.at[d].add(-1).at[w].add(1), l)
+            return l, None
+
+        l, _ = jax.lax.scan(move, l0, None, length=steps)
+        return l
 
     batch = est.shape[:-1]
     flat = est.reshape((-1, n))
@@ -288,16 +527,42 @@ class AdaptiveScheduler:
     nothing keep their previous estimate; a worker never yet observed sits
     at +inf, i.e. is ranked slowest until it first delivers (principled: a
     worker that never beat the round deadline *is* effectively slowest).
+
+    Ragged loads: the base ``C`` may itself be ragged (rows carry their
+    loads through the re-permutation), or — with ``rebalance=True`` and a
+    dense base ``C`` whose width is the per-worker load *cap* — the
+    scheduler additionally re-allocates whole slots between workers each
+    round (``greedy_load_rebalance``) under the fixed total budget
+    ``sum(loads)``: slow workers shed slots to fast ones.  ``loads()``
+    returns the coming round's per-worker loads; ``matrix()`` masks the
+    effective schedule accordingly.
     """
 
     def __init__(self, C: np.ndarray, *, beta: float = 0.7,
-                 gamma: float = 0.5):
-        validate_to_matrix(C)
+                 gamma: float = 0.5, loads=None, rebalance: bool = False,
+                 min_load: int = 1):
         self.C = np.asarray(C)
+        self.rebalance = bool(rebalance)
+        if self.rebalance:
+            if (self.C == MASKED).any():
+                raise ValueError("rebalance needs a dense base matrix (its "
+                                 "width is the per-worker load cap); pass "
+                                 "the budget via loads=")
+            validate_to_matrix(self.C)
+            if loads is None:
+                raise ValueError("rebalance needs an initial loads budget "
+                                 "below the grid width (loads=)")
+            self.base_loads, _ = _check_loads(self.C.shape[0], loads,
+                                              self.C.shape[1])
+        else:
+            validate_to_matrix(self.C, loads=loads)
+            self.base_loads = loads_of_matrix(self.C)
+        self.min_load = int(min_load)
         self.beta = float(beta)
         self.gamma = float(gamma)
         self.est: np.ndarray | None = None
         self._assignment: np.ndarray | None = None   # valid until observe()
+        self._loads: np.ndarray | None = None
 
     def worker_of_row(self) -> np.ndarray:
         if self._assignment is None:
@@ -311,10 +576,28 @@ class AdaptiveScheduler:
         inv[w_of_row] = np.arange(len(w_of_row))
         return inv
 
+    def loads(self) -> np.ndarray:
+        """Per-worker loads for the coming round: the assigned rows' own
+        loads, re-balanced from feedback when ``rebalance`` is on (workers
+        with no estimate yet count as slowest: +inf)."""
+        if not self.rebalance:
+            return self.base_loads[self.row_of_worker()]
+        if self._loads is None:
+            est = self.est
+            if est is None:
+                est = np.full(self.C.shape[0], np.inf)
+            self._loads = greedy_load_rebalance(
+                est, self.base_loads, r_max=self.C.shape[1],
+                min_load=self.min_load)
+        return self._loads
+
     def matrix(self) -> np.ndarray:
         """The effective TO matrix for the coming round: row ``w`` is what
-        worker ``w`` executes."""
-        return self.C[self.row_of_worker()]
+        worker ``w`` executes (``MASKED`` beyond worker ``w``'s load)."""
+        M = self.C[self.row_of_worker()]
+        if self.rebalance:
+            return mask_matrix_loads(M, self.loads())
+        return M
 
     def observe(self, t1, *, arrivals=None, t_done=None) -> None:
         n = self.C.shape[0]
@@ -337,6 +620,7 @@ class AdaptiveScheduler:
                 jnp.asarray(est, jnp.float32), obs, arr, float(t_done),
                 beta=self.beta), np.float64)
             self._assignment = None
+            self._loads = None
             return
         if obs.ndim == 2:
             obs = obs.mean(-1)
@@ -354,3 +638,4 @@ class AdaptiveScheduler:
                                 self.beta * self.est + (1.0 - self.beta) * obs,
                                 obs)
         self._assignment = None
+        self._loads = None

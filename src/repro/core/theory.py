@@ -55,7 +55,8 @@ from . import montecarlo
 
 __all__ = [
     "theorem1_tail_from_H", "joint_survival_mc", "theorem1_tail_mc",
-    "theorem1_mean_mc", "sum_survival_grid", "theorem1_tail_r1_independent",
+    "theorem1_mean_mc", "lower_bound_tail_mc", "lower_bound_mean_mc",
+    "sum_survival_grid", "theorem1_tail_r1_independent",
     "multimessage_marginal_cdfs", "multimessage_coded_tail",
     "multimessage_coded_mean",
 ]
@@ -85,14 +86,18 @@ def theorem1_tail_from_H(H: Callable[[tuple], np.ndarray], n: int, k: int
 def joint_survival_mc(C: np.ndarray, model, tgrid: np.ndarray, *,
                       trials: int = 20000, seed: int = 0,
                       chunk: int | None = None,
-                      messages: int | None = None):
+                      messages: int | None = None,
+                      loads=None):
     """Return ``H(S)`` closure backed by shared MC samples of task arrivals
     (drawn through the fused sweep engine, so they are the same common
     random numbers the direct order-statistic simulation sees).
-    ``messages`` sets the per-round message budget (Sec. V-C)."""
+    ``messages`` sets the per-round message budget (Sec. V-C); ``loads``
+    generalizes to ragged per-worker loads (``C`` may equivalently carry
+    trailing ``MASKED`` sentinels) — a task with no active copy never
+    arrives, i.e. survives every ``t``."""
     tau = np.asarray(montecarlo.task_arrival_samples(
         C, model, trials=trials, seed=seed, chunk=chunk,
-        messages=messages))                                 # (trials, n)
+        messages=messages, loads=loads))                    # (trials, n)
     tg = np.asarray(tgrid)
 
     def H(S: tuple) -> np.ndarray:
@@ -104,27 +109,55 @@ def joint_survival_mc(C: np.ndarray, model, tgrid: np.ndarray, *,
 
 
 def theorem1_tail_mc(C, model, tgrid, *, trials=20000, seed=0, k,
-                     messages=None):
+                     messages=None, loads=None):
     """Pr{t_C(r, k) > t} over ``tgrid`` via Theorem 1 with MC-estimated
-    joint survivals. ``k`` is a required keyword (the computation target)."""
+    joint survivals. ``k`` is a required keyword (the computation target).
+    ``loads`` generalizes to ragged per-worker loads — Theorem 1's
+    inclusion-exclusion identity holds for any joint arrival distribution,
+    so the same assembly applies with the ragged ``H_S``."""
     n = np.asarray(C).shape[0]
     if not isinstance(k, (int, np.integer)) or not 1 <= int(k) <= n:
         raise ValueError(
             f"k must be an integer computation target in [1, n={n}]; got "
             f"k={k!r}")
     H = joint_survival_mc(C, model, tgrid, trials=trials, seed=seed,
-                          messages=messages)
+                          messages=messages, loads=loads)
     return theorem1_tail_from_H(H, n, int(k))
 
 
 def theorem1_mean_mc(C, model, k: int, *, tmax: float, npts: int = 512,
                      trials: int = 20000, seed: int = 0,
-                     messages: int | None = None) -> float:
+                     messages: int | None = None, loads=None) -> float:
     """Average completion time via eq. (8): integral of the tail."""
     tgrid = np.linspace(0.0, tmax, npts)
     tail = theorem1_tail_mc(C, model, tgrid, trials=trials, seed=seed, k=k,
-                            messages=messages)
+                            messages=messages, loads=loads)
     return float(np.trapezoid(np.clip(tail, 0.0, 1.0), tgrid))
+
+
+def lower_bound_tail_mc(model, n: int, k: int, tgrid, *, r: int | None = None,
+                        loads=None, messages: int | None = None,
+                        trials: int = 20000, seed: int = 0) -> np.ndarray:
+    """Pr{t_LB(k) > t}: the oracle lower bound (eq. 46) generalized to a
+    per-worker load vector — the k-th order statistic over all
+    ``sum(loads)`` active slot arrivals, estimated from engine samples."""
+    samples = np.asarray(montecarlo.completion_samples(
+        montecarlo.lb_spec(r, loads=loads, messages=messages), model, n,
+        trials=trials, seed=seed, k=k))
+    tg = np.asarray(tgrid)
+    return (samples[:, None] > tg[None, :]).mean(axis=0)
+
+
+def lower_bound_mean_mc(model, n: int, k: int, *, r: int | None = None,
+                        loads=None, messages: int | None = None,
+                        trials: int = 20000, seed: int = 0) -> float:
+    """Average oracle lower bound (eq. 46) at load ``r`` or ragged load
+    vector ``loads`` (paired with the uncoded schemes' draws under common
+    random numbers)."""
+    samples = np.asarray(montecarlo.completion_samples(
+        montecarlo.lb_spec(r, loads=loads, messages=messages), model, n,
+        trials=trials, seed=seed, k=k))
+    return float(samples.mean())
 
 
 # -------- analytic special case: r = 1, independent delays -------------------

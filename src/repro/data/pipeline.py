@@ -86,13 +86,20 @@ def task_tokens(part: TaskPartition, step: int, task: int) -> jax.Array:
 def lm_task_batches(part: TaskPartition, C: np.ndarray, step: int
                     ) -> Tuple[jax.Array, jax.Array]:
     """Slot-major batches for the TO matrix ``C`` (n, r):
-    returns (inputs (r, n, b, S), labels (r, n, b, S))."""
+    returns (inputs (r, n, b, S), labels (r, n, b, S)).
+
+    ``C`` may be ragged: slots holding the ``MASKED`` (-1) sentinel get an
+    all-zero micro-batch — the straggler train step assigns them zero
+    winner weight, so they contribute nothing to the gradient (the worker
+    simply has fewer tasks that round)."""
     n, r = C.shape
     assert n == part.n
     # generate each distinct task once, then gather into slots
-    uniq = sorted({int(t) for t in C.reshape(-1)})
+    uniq = sorted({int(t) for t in C.reshape(-1) if t >= 0})
     toks = {t: task_tokens(part, step, t) for t in uniq}
-    slots = jnp.stack([jnp.stack([toks[int(C[i, s])] for i in range(n)])
+    dummy = jnp.zeros_like(toks[uniq[0]])           # masked-slot filler
+    slots = jnp.stack([jnp.stack([toks[int(C[i, s])] if C[i, s] >= 0
+                                  else dummy for i in range(n)])
                        for s in range(r)])          # (r, n, b, S+1)
     return slots[..., :-1], slots[..., 1:]
 

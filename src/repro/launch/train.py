@@ -63,6 +63,10 @@ def main(argv=None):
                                                          "block"))
     ap.add_argument("--adaptive", action="store_true",
                     help="re-assign schedule rows each round from feedback")
+    ap.add_argument("--loads", default=None,
+                    help="comma-separated per-worker loads (ragged rounds), "
+                         "e.g. 3,1,2,3 — each <= r; r is then the grid "
+                         "width / load cap")
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--lr", type=float, default=3e-4)
@@ -97,8 +101,14 @@ def main(argv=None):
         raise SystemExit("use text archs for this launcher; whisper/llava "
                          "training is exercised via tests + dryrun")
 
+    loads = None
+    if args.loads:
+        loads = tuple(int(v) for v in args.loads.split(","))
+        if len(loads) != args.n:
+            raise SystemExit(f"--loads needs {args.n} entries, got "
+                             f"{len(loads)}")
     spec = RoundSpec(n=args.n, r=args.n if args.schedule == "ra" else args.r,
-                     k=args.k, schedule=args.schedule)
+                     k=args.k, schedule=args.schedule, loads=loads)
     delay = build_cluster(args)
     part = TaskPartition(n=args.n, global_batch=args.batch,
                          seq_len=args.seq, vocab=cfg.vocab_size,
@@ -116,7 +126,8 @@ def main(argv=None):
                 print(f"resumed from {path} at step {start}")
         print(f"{cfg.name}: {num_params(state.params):,} params | "
               f"round n={spec.n} r={spec.r} k={spec.k} {args.schedule}"
-              f"{'+adaptive' if args.adaptive else ''} | "
+              f"{'+adaptive' if args.adaptive else ''}"
+              f"{' loads=' + ','.join(map(str, loads)) if loads else ''} | "
               f"cluster {args.cluster}")
         step_fn = jax.jit(make_straggler_train_step(cfg, opt, spec, delay))
         base_C = spec.to_matrix()

@@ -33,8 +33,11 @@ import jax.numpy as jnp
 
 from ..core.aggregator import RoundSpec
 from ..core.cluster import as_process
-from ..core.completion import message_arrival_times, winner_mask_gather
+from ..core.completion import (apply_row_layout, message_arrival_times,
+                               message_slot_layout, row_layout_is_identity,
+                               winner_mask_gather)
 from ..core.montecarlo import task_gather_plan
+from ..core.scheduling import loads_of_matrix
 from ..models import ModelConfig, forward, init_params
 from ..optim import Optimizer, clip_by_global_norm
 from ..sharding import DATA, shard
@@ -136,11 +139,30 @@ def make_straggler_train_step(cfg: ModelConfig, opt: Optimizer,
     weighted by the worker's first-k-distinct mask (eq. 61). ``scan_slots``
     mirrors the paper's sequential per-slot execution; set False to unroll
     (used by the dry-run for exact HLO cost accounting).
+
+    Ragged rounds (``RoundSpec.loads``): rows keep only their first
+    ``loads[i]`` slots — masked slots get +inf arrivals, zero winner
+    weight, and all-zero micro-batches from ``lm_task_batches``, so they
+    contribute nothing to the gradient while the virtual completion time
+    reflects the reduced per-worker loads.  ``RoundSpec.comm_eps`` adds
+    the per-message protocol overhead to every arrival.
     """
     n, r, k = round_spec.n, round_spec.r, round_spec.k
     process = as_process(delay)
-    base_C = round_spec.to_matrix()
+    base_C = round_spec.to_matrix()          # ragged rows carry their loads
     plan = task_gather_plan(base_C, n)
+    # static per-row message layout: closing-slot remap, per-message
+    # overhead offsets, ragged-load masks.  None when it is the identity
+    # (dense, per-slot sends, no overhead) — the established fast path.
+    _layout = message_slot_layout(loads_of_matrix(base_C), r,
+                                  round_spec.n_messages, round_spec.comm_eps)
+    if row_layout_is_identity(_layout):
+        _layout = None
+
+    def _row_arrivals(s):
+        """Per-message availability in base-row space (rows carry their
+        own grouping/masks whatever worker executes them)."""
+        return s if _layout is None else apply_row_layout(s, _layout)
 
     def step(state: TrainState, slot_tokens, slot_labels, rng, cluster=None,
              row_of_worker=None, extras=None):
@@ -150,15 +172,16 @@ def make_straggler_train_step(cfg: ModelConfig, opt: Optimizer,
         if cluster is None:
             cluster = process.init(jax.random.fold_in(rng, 0x0c10)[None], n)
         cluster, T1, T2 = process.step(cluster, rng[None], n, r)
-        # (n, r) per-message result availability (eq. 1 generalized to the
-        # round's message budget; identity for the per-slot default)
-        arr = message_arrival_times(T1, T2, round_spec.n_messages)[0]
+        # raw per-slot availability (eq. 1); the message grouping / ragged
+        # masks are applied per row after the (optional) permutation
+        s = message_arrival_times(T1, T2, r)[0]
         if row_of_worker is None:
-            weights, t_done = winner_mask_gather(base_C, plan, arr, n, k)
+            weights, t_done = winner_mask_gather(base_C, plan,
+                                                 _row_arrivals(s), n, k)
         else:
             worker_of_row = jnp.argsort(row_of_worker)       # inverse perm
-            w2, t_done = winner_mask_gather(base_C, plan,
-                                            arr[worker_of_row], n, k)
+            w2, t_done = winner_mask_gather(
+                base_C, plan, _row_arrivals(s[worker_of_row]), n, k)
             weights = w2[row_of_worker]                      # worker-major
 
         # realized selected-task count: == k a.s. with per-slot sends, may
