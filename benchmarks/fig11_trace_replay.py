@@ -1,0 +1,150 @@
+"""Fig. 11 (beyond the paper): record -> replay -> calibrate a cluster.
+
+The paper's headline numbers come from a *measured* EC2 cluster; this
+benchmark exercises the whole trace-driven loop that lets this repo do the
+same (``repro.core.trace``) on the fig8/fig10 heterogeneous
+persistent-straggler cell:
+
+  1. **record** — one ``sweep_rounds`` over the parametric cluster with
+     ``record_trace=True`` captures the realized per-(round, trial,
+     worker, slot) delay tables; they are written to disk in the
+     versioned trace format and read back (round-tripping the on-disk
+     format every CI run; the file is uploaded as a CI artifact);
+  2. **replay** — the loaded trace replayed through ``TraceProcess`` must
+     reproduce the recording run's per-round completion times *and*
+     adaptive decisions bit-exactly, for the static CS/SS schemes, the
+     censored-feedback adaptive scheme, and the oracle LB;
+  3. **calibrate** — ``calibrate_trace`` fits a
+     ``MarkovRegimeProcess`` (per-worker scales, slow/fast regime chain,
+     truncated-Gaussian base) to the trace; the fitted cluster must
+     reproduce the *decision-relevant* structure: the adaptive-vs-static
+     margin keeps its sign (adaptation that pays on the real trace must
+     pay on the synthetic twin).
+
+Rows: ``fig11/<source>`` (source in model / trace / calib) carry each
+delay source's per-scheme ms/round and its ``adapt_vs_static`` margin —
+the ``fig11/trace`` margin is consumed by the CI regression gate.
+``fig11/replay`` carries the max replay deviation (must be 0);
+``fig11/calibration`` the fitted parameters and fit-quality report.  The
+run exits non-zero if replay diverges or the calibrated margin's sign
+flips vs the trace.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core import (TraceProcess, adaptive_spec, calibrate_trace,
+                        cyclic_to_matrix, ec2_cluster, lb_spec, load_trace,
+                        save_trace, scenario1, staircase_to_matrix,
+                        sweep_rounds, to_spec)
+from .common import emit
+
+N, R, K = 12, 3, 9
+ROUNDS = 20
+PERSISTENCE, SPREAD = 0.98, 3.0
+CHUNK = 1000
+
+
+def _process():
+    return ec2_cluster(N, spread=SPREAD, p_slow=0.25,
+                       persistence=PERSISTENCE, slow=8.0, base=scenario1(),
+                       seed=1)
+
+
+def _specs():
+    return [to_spec("cs", cyclic_to_matrix(N, R)),
+            to_spec("ss", staircase_to_matrix(N, R)),
+            adaptive_spec("adapt", cyclic_to_matrix(N, R)),
+            lb_spec(R)]
+
+
+def _sweep(process, trials, seed, record=False):
+    return sweep_rounds(_specs(), process, N, rounds=ROUNDS, k=K,
+                        trials=trials, seed=seed, chunk=CHUNK,
+                        censored_feedback=True, record_trace=record)
+
+
+def _margin(res) -> float:
+    """Adaptive-vs-static margin (%): how much the censored-feedback
+    adaptive scheme beats the better static schedule per round."""
+    ms = {nm: res.mean_round(nm) for nm in ("cs", "ss", "adapt")}
+    static = min(ms["cs"], ms["ss"])
+    return 100.0 * (static - ms["adapt"]) / static
+
+
+def _emit_source(src: str, res, common: str) -> float:
+    ms = {nm: res.mean_round(nm) * 1e3 for nm in ("cs", "ss", "adapt",
+                                                  "lb")}
+    margin = _margin(res)
+    emit(f"fig11/{src}", ms["adapt"] * 1e3,
+         f"{common};cs={ms['cs']:.4f}ms;ss={ms['ss']:.4f}ms;"
+         f"adapt={ms['adapt']:.4f}ms;lb={ms['lb']:.4f}ms;"
+         f"adapt_vs_static={margin:+.1f}%")
+    return margin
+
+
+def run(trials: int = 20000, out: str = "bench_out"):
+    trials = min(trials, 3000)      # ROUNDS sims x 3 sources + recording
+    common = (f"trials={trials};rounds={ROUNDS};n={N};r={R};k={K};"
+              f"persistence={PERSISTENCE};spread={SPREAD:g}")
+
+    # 1. record (statistics computed by replaying the captured tables, so
+    #    step 2 must match them bit-exactly) + on-disk round-trip
+    rec = _sweep(_process(), trials, seed=0, record=True)
+    os.makedirs(out, exist_ok=True)
+    path = save_trace(os.path.join(out, "fig11_trace"), rec.trace)
+    trace = load_trace(path)
+    assert trace == rec.trace, "on-disk trace round-trip changed content"
+
+    # 2. replay the loaded trace — bit-exact or bust
+    rep = _sweep(TraceProcess(trace), trials, seed=99)
+    dev = max(float(np.abs(np.asarray(rep.per_round[nm])
+                           - np.asarray(rec.per_round[nm])).max())
+              for nm in ("cs", "ss", "adapt", "lb"))
+    exact = all(np.array_equal(rep.per_round[nm], rec.per_round[nm])
+                for nm in ("cs", "ss", "adapt", "lb"))
+    emit("fig11/replay", dev,
+         f"{common};status={'PASS' if exact else 'FAIL'};"
+         f"replay_max_dev={dev:g};file={os.path.basename(path)};"
+         f"trace_mb={trace.T1.nbytes * 2 / 1e6:.1f}MB")
+
+    # 3. calibrate a synthetic twin from the trace
+    cal = calibrate_trace(trace)
+    emit("fig11/calibration", cal.mean_rel_err * 100.0,
+         f"p_slow={cal.p_slow:.3f};persistence={cal.persistence:.3f};"
+         f"slow={cal.slow:.2f}x;mean_err={cal.mean_rel_err * 100:.1f}%;"
+         f"comm_err={cal.comm_mean_rel_err * 100:.1f}%;"
+         f"worker_err={cal.worker_mean_rel_err * 100:.1f}%;"
+         f"lag1_trace={cal.lag1_trace:+.2f};lag1_fit={cal.lag1_fit:+.2f}")
+
+    # adaptive-vs-static margins across the three delay sources
+    m_model = _emit_source("model", _sweep(_process(), trials, seed=1),
+                           common)
+    m_trace = _emit_source("trace", rep, common)
+    m_calib = _emit_source("calib", _sweep(cal.process, trials, seed=1),
+                           common)
+
+    sign_ok = (m_calib > 0) == (m_trace > 0)
+    ok = exact and sign_ok
+    emit("fig11/trace_replay_calibrate", 0.0,
+         f"status={'PASS' if ok else 'FAIL'};"
+         f"margin_model={m_model:+.1f}%;margin_trace={m_trace:+.1f}%;"
+         f"margin_calib={m_calib:+.1f}%")
+    if not exact:
+        raise SystemExit(
+            f"fig11: trace replay diverged from the recording run "
+            f"(max deviation {dev:g}) — the record/replay contract is "
+            f"broken")
+    if not sign_ok:
+        raise SystemExit(
+            f"fig11: the calibrated cluster flips the adaptive-vs-static "
+            f"margin sign (trace {m_trace:+.1f}% vs calibrated "
+            f"{m_calib:+.1f}%) — calibration no longer preserves the "
+            f"decision-relevant delay structure")
+    return {"model": m_model, "trace": m_trace, "calib": m_calib}
+
+
+if __name__ == "__main__":
+    run()

@@ -17,12 +17,16 @@ Compares the machine-readable ``BENCH_*.json`` results written by
 * ``fig10`` — the load-rebalancing-vs-permutation-only margin must stay
   within ``--rebal-drop`` percentage points of the baseline (same kind of
   machine-independent scheduler-quality gate, for the ragged-load layer).
+* ``fig11`` — the adaptive-vs-static margin measured on the *recorded
+  trace* (the record -> replay path) must stay within ``--trace-drop``
+  percentage points of the baseline: the trace-driven evaluation pipeline
+  keeps agreeing with the parametric one about how much adaptation pays.
 
 Exit codes: 0 all checks pass, 1 regression detected, 2 missing inputs.
 
 Usage (CI)::
 
-    python -m benchmarks.run --quick --only mc_engine,fig8,fig10 --out bench_out
+    python -m benchmarks.run --quick --only mc_engine,fig8,fig10,fig11 --out bench_out
     python -m benchmarks.regression_gate --results bench_out
 """
 from __future__ import annotations
@@ -69,6 +73,10 @@ def main(argv=None) -> None:
     ap.add_argument("--rebal-drop", type=float, default=2.0,
                     help="max allowed drop (percentage points) of the fig10 "
                          "rebalance-vs-permutation margin vs baseline")
+    ap.add_argument("--trace-drop", type=float, default=6.0,
+                    help="max allowed drop (percentage points) of the fig11 "
+                         "trace-replay adaptive-vs-static margin vs "
+                         "baseline")
     args = ap.parse_args(argv)
 
     if not os.path.exists(args.baseline):
@@ -125,6 +133,22 @@ def main(argv=None) -> None:
           f"{base['fig10_rebal_vs_perm']:+.1f}% - {args.rebal_drop})")
     if not ok:
         failures.append("fig10 rebalance margin")
+
+    # --- fig11 trace-replay adaptive margin ---------------------------------
+    fig11 = _load_bench(args.results, "fig11")
+    margin = _row(fig11, "fig11/trace")["derived"].get("adapt_vs_static")
+    if not isinstance(margin, (int, float)):
+        print("regression_gate: fig11/trace row lacks a numeric "
+              "'adapt_vs_static' derived field")
+        sys.exit(2)
+    floor = max(base["fig11_trace_adapt_vs_static"] - args.trace_drop, 0.0)
+    ok = margin >= floor
+    print(f"{'PASS' if ok else 'FAIL'} fig11 trace-replay adaptive-vs-"
+          f"static margin: {margin:+.1f}% (floor {floor:+.1f}% = baseline "
+          f"{base['fig11_trace_adapt_vs_static']:+.1f}% - "
+          f"{args.trace_drop})")
+    if not ok:
+        failures.append("fig11 trace margin")
 
     if failures:
         print(f"regression_gate: FAILED checks: {failures}")

@@ -16,6 +16,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
          vs static CS/SS and permutation-only adaptation on the
          heterogeneous persistent cluster (exits non-zero unless
          re-balancing beats all three)
+  fig11  trace record -> replay -> calibrate loop: records the
+         heterogeneous cell's delays, round-trips the versioned trace
+         file, replays it (exits non-zero unless bit-exact), and checks
+         the calibrated synthetic twin keeps the adaptive-vs-static
+         margin sign
   mc_engine  fused sweep-engine throughput vs the seed per-scheme path
   table1 end-to-end DGD iteration per scheme incl. real PC/PCMM decode
   roofline  per-(mesh, arch, shape) terms from saved dry-run artifacts
@@ -47,8 +52,9 @@ def main(argv=None) -> None:
 
     from . import (common, fig3_delays, fig4_vs_load, fig5_ec2,
                    fig6_vs_workers, fig7_vs_target, fig8_convergence,
-                   fig9_multimessage, fig10_load_rebalance, mc_engine,
-                   table1_e2e, roofline_report)
+                   fig9_multimessage, fig10_load_rebalance,
+                   fig11_trace_replay, mc_engine, table1_e2e,
+                   roofline_report)
 
     jobs = {
         "fig3": lambda: fig3_delays.run(trials),
@@ -59,6 +65,8 @@ def main(argv=None) -> None:
         "fig8": lambda: fig8_convergence.run(trials),
         "fig9": lambda: fig9_multimessage.run(trials),
         "fig10": lambda: fig10_load_rebalance.run(trials),
+        "fig11": lambda: fig11_trace_replay.run(trials,
+                                                out=args.out or "bench_out"),
         "mc_engine": lambda: mc_engine.run(trials),
         "table1": table1_e2e.run,
         "roofline": roofline_report.run,

@@ -13,6 +13,9 @@ from .delays import (DelayModel, TruncatedGaussianDelays,
 from .cluster import (DelayProcess, IIDProcess, MarkovRegimeProcess,
                       AR1Process, as_process, heterogeneous_scales,
                       ec2_cluster, message_comm_delays)
+from .trace import (TRACE_FORMAT_VERSION, DelayTrace, TraceProcess,
+                    save_trace, load_trace, validate_trace_file,
+                    CalibrationReport, calibrate_trace)
 from .montecarlo import (SchemeSpec, SweepResult, RoundsResult, to_spec,
                          lb_spec, pc_spec, pcmm_spec, tau_spec,
                          adaptive_spec, task_gather_plan,

@@ -11,7 +11,8 @@ One SGD iteration = one *round*:
      (``repro.core.cluster``): worker-specific straggling *persists* across
      ``round_mask`` calls, so consecutive rounds see correlated delays just
      like a real cluster (stateless ``DelayModel``s are coerced to the
-     zero-correlation ``IIDProcess``);
+     zero-correlation ``IIDProcess``; a recorded ``DelayTrace`` replays a
+     *measured* cluster through the same API — see ``repro.core.trace``);
   4. the earliest copies of the k earliest distinct tasks are combined with
      the unbiased scaling of eq. (61):
 
@@ -226,7 +227,12 @@ class StragglerAggregator:
         self._row_layout = None if row_layout_is_identity(layout) else layout
         if init_key is None:
             init_key = jax.random.PRNGKey(spec.seed)
-        self._state = self.process.init(init_key[None], spec.n)
+        # trial id 0: a live training run is the single realization of a
+        # trace-backed process (lane 0 of its table); parametric processes
+        # ignore the id.
+        self._state = self.process.init_trials(
+            init_key[None], jnp.zeros((1,), jnp.int32), spec.n)
+        self._rounds_done = 0
         self._round = jax.jit(self._round_fn)
 
     # --- one round, jitted: delays + winner weights in base-row space ------
@@ -274,6 +280,10 @@ class StragglerAggregator:
         completion time scalar). weights[i, j] in [0, 1]; sums to k over all
         slots (its active subset) and matches ``current_matrix()``'s
         worker/slot layout."""
+        # finite sources (trace replay) enforce their horizon policy here:
+        # the live loop learns it ran off the recording's end *before* the
+        # round executes, with the remedy in the error message.
+        self.process.check_rounds(self._rounds_done + 1)
         row_of_worker = (np.arange(self.spec.n) if self.scheduler is None
                          else self.scheduler.row_of_worker())
         loads_w = (self.scheduler.loads() if self.rebalance
@@ -281,6 +291,7 @@ class StragglerAggregator:
         self._state, t1, arrivals, weights, t_done = self._round(
             self._state, key[None], jnp.asarray(row_of_worker),
             jnp.asarray(loads_w))
+        self._rounds_done += 1
         if self.scheduler is not None:
             if self.censored:
                 # a real master only sees messages that beat the deadline
@@ -313,8 +324,14 @@ class StragglerAggregator:
         ``rounds`` consecutive rounds (default 8) and averages; for the
         i.i.d. shim one round suffices.  ``key`` may be an int seed or a
         PRNG key (compat)."""
+        from .trace import TraceProcess
         if rounds is None:
             rounds = 1 if isinstance(self.process, IIDProcess) else 8
+            if isinstance(self.process, TraceProcess):
+                # a strict trace can only serve what remains of its
+                # recorded horizon after the replay offset
+                rounds = min(rounds, self.process.trace.rounds
+                             - int(self.process.start_round))
         m = self.spec.messages
         if self.rebalance:
             spec = montecarlo.adaptive_spec("s", self.base_C,

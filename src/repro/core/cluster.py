@@ -98,6 +98,21 @@ class DelayProcess:
     def init(self, keys: Array, n: int) -> State:
         raise NotImplementedError
 
+    def init_trials(self, keys: Array, trial_ids: Array, n: int) -> State:
+        """``init`` with explicit global trial indices.  Parametric
+        processes are fully determined by their per-trial keys and ignore
+        the ids; trace-backed replay (``repro.core.trace.TraceProcess``)
+        uses them to read the right trial of its table under any chunking
+        of the trial axis (the fused rounds engine always calls this
+        form)."""
+        del trial_ids
+        return self.init(keys, n)
+
+    def check_rounds(self, rounds: int) -> None:
+        """Hook for finite delay sources: raise if a ``rounds``-long run
+        cannot be served.  Parametric processes are unbounded (no-op);
+        ``TraceProcess`` enforces its ``pad_rounds`` policy here."""
+
     def step(self, state: State, keys: Array, n: int, r: int
              ) -> Tuple[State, Array, Array]:
         raise NotImplementedError
@@ -106,9 +121,11 @@ class DelayProcess:
                       rounds: int) -> Tuple[Array, Array]:
         """Convenience: unroll the process, returning delay tensors of shape
         ``(rounds, trials, n, r)`` (small-scale inspection / tests)."""
+        self.check_rounds(rounds)
         allk = jax.vmap(lambda kk: jax.random.split(kk, rounds + 1))(
             jax.random.split(key, trials))           # (trials, rounds+1, 2)
-        state = self.init(allk[:, 0], n)
+        state = self.init_trials(allk[:, 0],
+                                 jnp.arange(trials, dtype=jnp.int32), n)
 
         def body(st, kr):
             st, T1, T2 = self.step(st, kr, n, r)
@@ -255,13 +272,28 @@ def message_comm_delays(T2: Array, messages: int,
 
 
 def as_process(delay) -> DelayProcess:
-    """Coerce a stateless ``DelayModel`` into an ``IIDProcess``; pass
-    ``DelayProcess`` instances through unchanged."""
+    """Coerce any delay source into a ``DelayProcess``:
+
+    * ``DelayProcess`` instances pass through unchanged;
+    * a stateless ``DelayModel`` becomes the zero-correlation
+      ``IIDProcess`` shim;
+    * a recorded ``DelayTrace`` becomes a ``TraceProcess`` replay (default
+      strict padding policies — build the ``TraceProcess`` yourself for
+      cycle/hold extension).
+    """
     if isinstance(delay, DelayProcess):
         return delay
     if isinstance(delay, DelayModel):
         return IIDProcess(delay)
-    raise TypeError(f"expected DelayModel or DelayProcess, got {type(delay)}")
+    from .trace import DelayTrace, TraceProcess    # late: trace imports us
+    if isinstance(delay, DelayTrace):
+        return TraceProcess(delay)
+    raise TypeError(
+        f"cannot interpret {type(delay).__name__!r} as a delay source: "
+        f"expected a DelayProcess (init/step protocol, e.g. IIDProcess, "
+        f"MarkovRegimeProcess, AR1Process, TraceProcess), a stateless "
+        f"DelayModel (e.g. TruncatedGaussianDelays), or a recorded "
+        f"DelayTrace; got {delay!r}")
 
 
 def heterogeneous_scales(n: int, spread: float = 2.0, seed: int = 0) -> tuple:

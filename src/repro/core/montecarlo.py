@@ -108,6 +108,16 @@ state), so one call yields full wall-clock trajectories for every scheme
 under common random numbers: per-round mean completion times and
 cumulative wall-clock curves of shape ``(rounds,)``, or raw per-trial
 trajectories ``(trials, rounds)`` via ``trajectory_samples``.
+
+Trace recording and replay (``repro.core.trace``)
+-------------------------------------------------
+``sweep_rounds``/``trajectory_samples`` accept ``record_trace=True`` to
+also stream the realized per-(round, trial, worker, slot) delay tables out
+of the scan as a ``DelayTrace``; a ``TraceProcess`` built on that trace
+replays it through the same ``init``/``step`` API — keys are ignored and
+the per-trial tables ride on the engine's global trial ids, so replay is
+chunk-invariant and reproduces the recording run's completion times and
+adaptive decisions bit-exactly.
 """
 from __future__ import annotations
 
@@ -936,8 +946,14 @@ def task_arrival_samples(C, model, *, trials: int = 10000, seed: int = 0,
 def _build_rounds_fn(specs: Tuple[SchemeSpec, ...], process, n: int,
                      r_max: int, ks: int, rounds: int, beta: float,
                      gamma: float, censored: bool):
-    """Multi-round evaluator: (chunk, 2) per-trial keys ->
-    {name: (rounds, chunk)} per-round completion times.
+    """Multi-round evaluator: (chunk, 2) per-trial keys + (chunk,) global
+    trial ids -> {name: (rounds, chunk)} per-round completion times.
+
+    Trial ids exist for trace-backed processes
+    (``repro.core.trace.TraceProcess``): they tell each lane which trial
+    of the recorded table it replays, so replay — like sampling — is
+    invariant to how the trial axis is chunked.  Parametric processes are
+    fully determined by their per-trial keys and ignore the ids.
 
     One ``lax.scan`` over rounds carries (a) the delay process state — the
     straggler persistence — and (b) the adaptive schemes' per-trial EMA of
@@ -1028,12 +1044,12 @@ def _build_rounds_fn(specs: Tuple[SchemeSpec, ...], process, n: int,
             arr_w = jnp.where(act, arr_w, INF)
         return arr_w
 
-    def rounds_fn(keys: Array) -> Dict[str, Array]:
+    def rounds_fn(keys: Array, tids: Array):
         chunk = keys.shape[0]
         # one subkey per (trial, round) + one for the process init, derived
         # from the per-trial key so everything stays chunk-invariant.
         allk = jax.vmap(lambda kk: jax.random.split(kk, rounds + 1))(keys)
-        pstate = process.init(allk[:, 0], n)
+        pstate = process.init_trials(allk[:, 0], tids, n)
 
         if censored:
             def body(carry, kr):
@@ -1086,25 +1102,32 @@ _ROUNDS_CACHE: dict = {}
 def _get_rounds_exec(specs: Tuple[SchemeSpec, ...], process, n: int,
                      r_max: int, ks: int, rounds: int, beta: float,
                      gamma: float, censored: bool):
+    from .trace import TraceProcess
     cache_key = None
-    try:
-        cache_key = (specs, process, n, r_max, ks, rounds, beta, gamma,
-                     censored)
-        hit = _ROUNDS_CACHE.get(cache_key)
-        if hit is not None:
-            return hit
-    except TypeError:               # unhashable custom process: uncached
-        cache_key = None
+    if isinstance(process, TraceProcess):
+        # uncached: the compiled program closes over the full delay tables
+        # (hundreds of MB for big recordings) and traces are one-shot —
+        # caching would pin every trace ever swept for the process's life.
+        pass
+    else:
+        try:
+            cache_key = (specs, process, n, r_max, ks, rounds, beta, gamma,
+                         censored)
+            hit = _ROUNDS_CACHE.get(cache_key)
+            if hit is not None:
+                return hit
+        except TypeError:           # unhashable custom process: uncached
+            cache_key = None
 
     rounds_fn = _build_rounds_fn(specs, process, n, r_max, ks, rounds,
                                  beta, gamma, censored)
 
-    def sums_scan(keys3):           # (nc, chunk, 2) -> per-round moments
+    def sums_scan(keys3, tids3):    # (nc, chunk, 2/-) -> per-round moments
         zeros = {sp.name: jnp.zeros((rounds,), jnp.float32) for sp in specs}
         init = tuple({k2: v for k2, v in zeros.items()} for _ in range(4))
 
-        def body(carry, kc):
-            ys = rounds_fn(kc)
+        def body(carry, kt):
+            ys = rounds_fn(*kt)
             s0, s1, c0, c1 = carry
             cum = {k2: jnp.cumsum(v, axis=0) for k2, v in ys.items()}
             s0 = {k2: s0[k2] + ys[k2].sum(axis=1) for k2 in s0}
@@ -1113,20 +1136,70 @@ def _get_rounds_exec(specs: Tuple[SchemeSpec, ...], process, n: int,
             c1 = {k2: c1[k2] + jnp.square(cum[k2]).sum(axis=1) for k2 in c1}
             return (s0, s1, c0, c1), None
 
-        carry, _ = jax.lax.scan(body, init, keys3)
+        carry, _ = jax.lax.scan(body, init, (keys3, tids3))
         return carry
 
-    def samples_scan(keys3):        # (nc, chunk, 2) -> {name: (nc, R, chunk)}
-        def body(carry, kc):
-            return carry, rounds_fn(kc)
+    def samples_scan(keys3, tids3):  # -> {name: (nc, R, chunk)}
+        def body(carry, kt):
+            return carry, rounds_fn(*kt)
 
-        _, ys = jax.lax.scan(body, None, keys3)
+        _, ys = jax.lax.scan(body, None, (keys3, tids3))
         return ys
 
     exec_ = (jax.jit(rounds_fn), jax.jit(sums_scan), jax.jit(samples_scan))
     if cache_key is not None:
         _ROUNDS_CACHE[cache_key] = exec_
     return exec_
+
+
+def _capture_rounds_fn(process, n: int, r_max: int, rounds: int):
+    """The recording pass: scan the process alone (same per-trial key
+    derivation as ``_build_rounds_fn``), streaming out the realized delay
+    tensors — (chunk, 2) keys + (chunk,) trial ids ->
+    ``(T1, T2)`` of shape (rounds, chunk, n, r_max) each."""
+    def capture_fn(keys: Array, tids: Array):
+        allk = jax.vmap(lambda kk: jax.random.split(kk, rounds + 1))(keys)
+        pstate = process.init_trials(allk[:, 0], tids, n)
+
+        def body(pstate, kr):
+            pstate, T1, T2 = process.step(pstate, kr, n, r_max)
+            return pstate, (T1, T2)
+
+        _, recs = jax.lax.scan(body, pstate,
+                               jnp.swapaxes(allk[:, 1:], 0, 1))
+        return recs
+
+    return capture_fn
+
+
+def _record_trace(process, n, r_max, *, rounds, trials, seed, chunk,
+                  meta: dict):
+    """Capture the delay tables a rounds run over ``process`` realizes,
+    as a ``repro.core.trace.DelayTrace``.
+
+    This is the first pass of ``record_trace=True``: the per-trial key
+    derivation is identical to the evaluation scan, so the captured
+    tables are exactly the delays any sweep over the same
+    (process, seed, trials) draws.  The evaluation pass then *replays*
+    these materialized tables (``TraceProcess``), which makes the
+    reported statistics bit-exactly reproducible from the returned trace
+    — XLA is free to fuse a parametric process's arithmetic into eq. (1)
+    with fused-multiply-adds, so values consumed in a fused sampling run
+    can differ from any materialized table by ulps; evaluating through
+    the replay path removes that divergence by construction.
+    """
+    from .trace import DelayTrace
+    capture = jax.jit(_capture_rounds_fn(process, n, r_max, rounds))
+    keys = jax.random.split(jax.random.PRNGKey(seed), trials)
+    tids = jnp.arange(trials, dtype=jnp.int32)
+    parts1, parts2 = [], []
+    for lo in range(0, trials, chunk):
+        T1c, T2c = capture(keys[lo:lo + chunk], tids[lo:lo + chunk])
+        parts1.append(np.asarray(T1c))
+        parts2.append(np.asarray(T2c))
+    T1 = np.concatenate(parts1, axis=1) if len(parts1) > 1 else parts1[0]
+    T2 = np.concatenate(parts2, axis=1) if len(parts2) > 1 else parts2[0]
+    return DelayTrace(T1, T2, meta=meta)
 
 
 def _check_rounds_args(specs, n, ks, rounds):
@@ -1150,34 +1223,57 @@ def _check_rounds_args(specs, n, ks, rounds):
 
 def _run_rounds(specs, process, n, *, rounds: int, k: int, trials: int,
                 seed: int, chunk: Optional[int], beta: float, gamma: float,
-                censored: bool, want_samples: bool):
+                censored: bool, want_samples: bool, record: bool = False):
     from .cluster import as_process
     process = as_process(process)
+    process.check_rounds(rounds)
     specs = _check_rounds_args(specs, n, k, rounds)
     r_max = max(sp.load for sp in specs)
     chunk = trials if chunk is None else max(1, min(int(chunk), trials))
+
+    if record:
+        # two-pass recording: capture the realized delay tables first,
+        # then evaluate by REPLAYING them — the reported statistics are
+        # then bit-exactly reproducible from the returned trace (see
+        # ``_record_trace``).
+        from .trace import TraceProcess
+        trace = _record_trace(
+            process, n, r_max, rounds=rounds, trials=trials, seed=seed,
+            chunk=chunk,
+            meta={"source": "sweep_rounds", "seed": int(seed), "k": int(k),
+                  "process": type(process).__name__,
+                  "schemes": [sp.name for sp in specs]})
+        out = _run_rounds(specs, TraceProcess(trace), n, rounds=rounds,
+                          k=k, trials=trials, seed=seed, chunk=chunk,
+                          beta=beta, gamma=gamma, censored=censored,
+                          want_samples=want_samples)
+        return out[:-1] + (trace,)
+
     jrounds, jsums, jsamples = _get_rounds_exec(
         specs, process, n, r_max, k, rounds, beta, gamma, censored)
 
     keys = jax.random.split(jax.random.PRNGKey(seed), trials)
+    tids = jnp.arange(trials, dtype=jnp.int32)
     nc = trials // chunk
     main = nc * chunk
     main_keys = keys[:main].reshape(nc, chunk, 2)
-    tail_keys = keys[main:]
+    main_tids = tids[:main].reshape(nc, chunk)
+    tail_keys, tail_tids = keys[main:], tids[main:]
 
     if want_samples:
-        ys = jsamples(main_keys)
+        ys = jsamples(main_keys, main_tids)
         parts = {nm: [jnp.moveaxis(v, 1, -1).reshape(main, rounds)]
                  for nm, v in ys.items()}       # (nc, R, chunk)->(trials, R)
         if main < trials:
-            for nm, v in jrounds(tail_keys).items():
+            for nm, v in jrounds(tail_keys, tail_tids).items():
                 parts[nm].append(v.T)           # (R, tail) -> (tail, R)
-        return {nm: jnp.concatenate(vs, axis=0) if len(vs) > 1 else vs[0]
-                for nm, vs in parts.items()}
+        samples = {nm: jnp.concatenate(vs, axis=0) if len(vs) > 1 else vs[0]
+                   for nm, vs in parts.items()}
+        return samples, None
 
-    s0, s1, c0, c1 = jsums(main_keys)
+    s0, s1, c0, c1 = jsums(main_keys, main_tids)
     if main < trials:
-        ys = jrounds(tail_keys)
+        ys = jrounds(tail_keys, tail_tids)
         cum = {k2: jnp.cumsum(v, axis=0) for k2, v in ys.items()}
         s0 = {k2: s0[k2] + ys[k2].sum(axis=1) for k2 in s0}
         s1 = {k2: s1[k2] + jnp.square(ys[k2]).sum(axis=1) for k2 in s1}
@@ -1193,7 +1289,7 @@ def _run_rounds(specs, process, n, *, rounds: int, k: int, trials: int,
     for nm in s0:
         per_round[nm], stderr[nm] = moments(s0[nm], s1[nm])
         wallclock[nm], wc_stderr[nm] = moments(c0[nm], c1[nm])
-    return per_round, stderr, wallclock, wc_stderr
+    return per_round, stderr, wallclock, wc_stderr, None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -1203,7 +1299,10 @@ class RoundsResult:
     ``per_round[name]``  — (rounds,) mean completion time of each round;
     ``wallclock[name]``  — (rounds,) mean *cumulative* wall-clock after each
                            round (the x-axis of a loss-vs-time curve);
-    ``stderr`` / ``wallclock_stderr`` — matching MC standard errors.
+    ``stderr`` / ``wallclock_stderr`` — matching MC standard errors;
+    ``trace``            — the realized delay tables of the whole sweep
+                           (a ``repro.core.trace.DelayTrace``) when run
+                           with ``record_trace=True``, else None.
     """
     per_round: Dict[str, np.ndarray]
     stderr: Dict[str, np.ndarray]
@@ -1213,6 +1312,7 @@ class RoundsResult:
     rounds: int
     n: int
     k: int
+    trace: Optional[object] = None
 
     def _get(self, d: Dict[str, np.ndarray], name: str) -> np.ndarray:
         if name not in d:
@@ -1233,7 +1333,8 @@ def sweep_rounds(specs: Sequence[SchemeSpec], process, n: int, *,
                  rounds: int, k: int, trials: int = 20000, seed: int = 0,
                  chunk: Optional[int] = None, feedback_beta: float = 0.7,
                  coverage_gamma: float = 0.5,
-                 censored_feedback: bool = False) -> RoundsResult:
+                 censored_feedback: bool = False,
+                 record_trace: bool = False) -> RoundsResult:
     """Evaluate every scheme over ``rounds`` consecutive rounds of ONE
     shared ``DelayProcess`` realization per trial.
 
@@ -1255,14 +1356,24 @@ def sweep_rounds(specs: Sequence[SchemeSpec], process, n: int, *,
     censored_feedback: restrict adaptive feedback to messages that arrived
              before the scheme's own round completion (what a real master
              observes) instead of the idealized full-delay feedback.
+    record_trace: also capture the realized per-(round, trial, worker,
+             slot) delay tables — the result's ``trace`` field becomes a
+             ``repro.core.trace.DelayTrace``.  Recording is two-pass: the
+             process is scanned once to materialize the tables, and the
+             reported statistics are computed by *replaying* them, so a
+             later ``TraceProcess`` replay reproduces this result
+             bit-exactly (a fused sampling run may differ by float32 ulps
+             — XLA contracts a process's arithmetic into eq. (1) with
+             FMAs).  Memory: O(rounds * trials * n * r_max) floats x2.
     """
-    per_round, stderr, wallclock, wc_stderr = _run_rounds(
+    per_round, stderr, wallclock, wc_stderr, trace = _run_rounds(
         specs, process, n, rounds=rounds, k=k, trials=trials, seed=seed,
         chunk=chunk, beta=feedback_beta, gamma=coverage_gamma,
-        censored=censored_feedback, want_samples=False)
+        censored=censored_feedback, want_samples=False,
+        record=record_trace)
     return RoundsResult(per_round=per_round, stderr=stderr,
                         wallclock=wallclock, wallclock_stderr=wc_stderr,
-                        trials=trials, rounds=rounds, n=n, k=k)
+                        trials=trials, rounds=rounds, n=n, k=k, trace=trace)
 
 
 def trajectory_samples(spec: SchemeSpec, process, n: int, *, rounds: int,
@@ -1270,12 +1381,18 @@ def trajectory_samples(spec: SchemeSpec, process, n: int, *, rounds: int,
                        chunk: Optional[int] = None,
                        feedback_beta: float = 0.7,
                        coverage_gamma: float = 0.5,
-                       censored_feedback: bool = False) -> Array:
+                       censored_feedback: bool = False,
+                       record_trace: bool = False):
     """Per-trial completion-time trajectories for one scheme: shape
     ``(trials, rounds)``; ``jnp.cumsum(..., axis=1)`` gives per-trial
-    wall-clock curves."""
-    return _run_rounds([spec], process, n, rounds=rounds, k=k,
-                       trials=trials, seed=seed, chunk=chunk,
-                       beta=feedback_beta, gamma=coverage_gamma,
-                       censored=censored_feedback,
-                       want_samples=True)[spec.name]
+    wall-clock curves.  With ``record_trace=True`` returns
+    ``(trajectories, DelayTrace)`` — the realized delay tables alongside
+    the samples."""
+    samples, trace = _run_rounds([spec], process, n, rounds=rounds, k=k,
+                                 trials=trials, seed=seed, chunk=chunk,
+                                 beta=feedback_beta, gamma=coverage_gamma,
+                                 censored=censored_feedback,
+                                 want_samples=True, record=record_trace)
+    if record_trace:
+        return samples[spec.name], trace
+    return samples[spec.name]

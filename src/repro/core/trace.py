@@ -1,0 +1,512 @@
+"""Trace-driven delay sources: record, replay, and calibrate real clusters.
+
+The paper's headline results (Sec. VI) come from a *measured* Amazon EC2
+cluster, while every other delay source in this repo is a parametric model
+we invented.  This module closes that gap with three pieces:
+
+``DelayTrace``
+    An immutable per-(round, trial, worker, slot) table of realized
+    computation (``T1``) and communication (``T2``) delays — the thing a
+    real master's timestamp log reduces to.  Traces come from three
+    places: ``sweep_rounds(..., record_trace=True)`` /
+    ``trajectory_samples(..., record_trace=True)`` capture the delay
+    tensors actually drawn inside the fused rounds scan;
+    ``launch/train.py --log-delays`` logs them from a live training run;
+    and ``load_trace`` reads the versioned on-disk format (an ``.npz``
+    with a JSON header — see ``save_trace``).
+
+``TraceProcess``
+    The replay backend: a ``DelayProcess`` whose ``step`` *reads* the
+    trace instead of sampling, so recorded clusters flow through every
+    layer built on the process API — ``sweep_rounds`` figures, the
+    aggregator, the train step — unchanged.  Replay is deterministic
+    (PRNG keys are ignored) and common-random-number compatible: the
+    per-trial table rides on the engine's trial ids, so replaying a
+    recorded run reproduces its completion times and adaptive decisions
+    bit-exactly under any trial chunking.  Shape mismatches between the
+    trace and the requested run are governed by explicit per-axis
+    policies (``pad_rounds`` / ``pad_workers`` / ``pad_slots``):
+    truncation (asking for less than was recorded) is always allowed —
+    delay statistics are slot-order-independent (paper Remark 6) — while
+    extension either raises (``"error"``, the default), wraps around
+    (``"cycle"``), or, for rounds only, holds the final round
+    (``"hold"``).  The trial axis always cycles, so a single recorded
+    realization replays across any number of Monte-Carlo trials.
+
+``calibrate_trace``
+    Fits the parametric cluster models to a trace so ``ec2_cluster``-style
+    synthetic clusters can be *derived from data*: per-worker speed scales
+    (mean-ratio estimates on the fast regime — the exact MLE for scale
+    families like the shifted exponential), a slow/fast regime
+    segmentation (between-class-variance threshold on log per-round
+    worker means, Otsu-style) giving ``p_slow`` / ``slow`` / the chain's
+    ``persistence`` from observed transition counts, and a truncated-
+    Gaussian base refit.  The returned ``CalibrationReport`` carries the
+    assembled ``MarkovRegimeProcess`` plus a fit-quality report (moment
+    and lag-1-autocorrelation errors of the fitted process vs the trace).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .cluster import DelayProcess, MarkovRegimeProcess
+from .delays import TruncatedGaussianDelays
+
+__all__ = [
+    "TRACE_FORMAT_VERSION", "DelayTrace", "TraceProcess", "save_trace",
+    "load_trace", "validate_trace_file", "CalibrationReport",
+    "calibrate_trace",
+]
+
+TRACE_FORMAT_VERSION = 1
+
+_PAD_ROUNDS = ("error", "cycle", "hold")
+_PAD_AXES = ("error", "cycle")
+
+
+# ------------------------------ the container --------------------------------
+
+class DelayTrace:
+    """Realized per-(round, trial, worker, slot) compute/comm delay tables.
+
+    ``T1``/``T2`` are float32 arrays of shape ``(rounds, trials, n, r)``;
+    a 3-D ``(rounds, n, r)`` input (a single recorded realization — what a
+    real cluster log yields) gets a singleton trial axis.  Instances are
+    immutable, hashable (by content digest) and comparable by content, so
+    ``TraceProcess`` works with the fused engine's compiled-evaluator
+    cache exactly like the parametric processes.
+    """
+
+    __slots__ = ("T1", "T2", "meta", "_digest")
+
+    def __init__(self, T1, T2, meta: Optional[dict] = None):
+        # own copies: freezing an aliased caller array in place would make
+        # *their* array read-only, and a shared buffer would let later
+        # caller mutations silently break the content-digest identity
+        T1 = np.array(T1, np.float32)
+        T2 = np.array(T2, np.float32)
+        if T1.ndim == 3:
+            T1, T2 = T1[:, None], (T2[:, None] if T2.ndim == 3 else T2)
+        if T1.ndim != 4:
+            raise ValueError(
+                f"trace tables must be (rounds, n, r) or (rounds, trials, "
+                f"n, r); got shape {T1.shape}")
+        if T2.shape != T1.shape:
+            raise ValueError(f"T1/T2 shape mismatch: {T1.shape} vs "
+                             f"{T2.shape}")
+        if 0 in T1.shape:
+            raise ValueError(f"empty trace: shape {T1.shape}")
+        if not (np.isfinite(T1).all() and np.isfinite(T2).all()):
+            raise ValueError("trace delays must be finite")
+        if (T1 <= 0).any() or (T2 <= 0).any():
+            raise ValueError("trace delays must be positive")
+        T1.setflags(write=False)
+        T2.setflags(write=False)
+        object.__setattr__(self, "T1", T1)
+        object.__setattr__(self, "T2", T2)
+        object.__setattr__(self, "meta", dict(meta or {}))
+        h = hashlib.sha1()
+        h.update(np.int64(T1.shape).tobytes())
+        h.update(T1.tobytes())
+        h.update(T2.tobytes())
+        object.__setattr__(self, "_digest", h.hexdigest())
+
+    def __setattr__(self, *a):                       # immutability
+        raise AttributeError("DelayTrace is immutable")
+
+    # content identity: the engine caches compiled evaluators per process,
+    # and a TraceProcess's compiled program is a function of the tables.
+    def __hash__(self):
+        return hash(self._digest)
+
+    def __eq__(self, other):
+        return (isinstance(other, DelayTrace)
+                and self._digest == other._digest)
+
+    def __repr__(self):
+        return (f"DelayTrace(rounds={self.rounds}, trials={self.trials}, "
+                f"n={self.n}, r={self.r}, digest={self._digest[:8]})")
+
+    @property
+    def rounds(self) -> int:
+        return self.T1.shape[0]
+
+    @property
+    def trials(self) -> int:
+        return self.T1.shape[1]
+
+    @property
+    def n(self) -> int:
+        return self.T1.shape[2]
+
+    @property
+    def r(self) -> int:
+        return self.T1.shape[3]
+
+    def header(self) -> dict:
+        """The JSON header written by ``save_trace``."""
+        return {"format": "repro.delay_trace",
+                "version": TRACE_FORMAT_VERSION,
+                "rounds": self.rounds, "trials": self.trials,
+                "n": self.n, "r": self.r, "dtype": "float32",
+                "digest": self._digest, "meta": self.meta}
+
+
+# --------------------------- on-disk format ----------------------------------
+# A trace file is a ``.npz`` with exactly three members:
+#   header — JSON (bytes) with format/version/shape/digest/meta fields;
+#   T1, T2 — float32 (rounds, trials, n, r) delay tables.
+# The digest covers the tables, so corruption and header/table mismatches
+# are detected at load time.  Unknown *newer* versions are rejected rather
+# than misread.
+
+def save_trace(path: str, trace: DelayTrace) -> str:
+    """Write ``trace`` to ``path`` in the versioned npz+JSON-header format
+    (appends ``.npz`` if missing).  Returns the path written."""
+    if not str(path).endswith(".npz"):
+        path = f"{path}.npz"
+    hdr = trace.header()
+    hdr["created_unix"] = time.time()
+    np.savez_compressed(path,
+                        header=np.frombuffer(
+                            json.dumps(hdr).encode(), dtype=np.uint8),
+                        T1=trace.T1, T2=trace.T2)
+    return path
+
+
+def _read_header(z) -> dict:
+    if "header" not in z:
+        raise ValueError("not a delay-trace file: missing 'header' member")
+    try:
+        hdr = json.loads(bytes(z["header"].tobytes()).decode())
+    except Exception as e:
+        raise ValueError(f"corrupt delay-trace header: {e}") from e
+    if hdr.get("format") != "repro.delay_trace":
+        raise ValueError(f"not a delay-trace file: format="
+                         f"{hdr.get('format')!r}")
+    if int(hdr.get("version", -1)) > TRACE_FORMAT_VERSION:
+        raise ValueError(
+            f"delay-trace version {hdr.get('version')} is newer than this "
+            f"reader (supports <= {TRACE_FORMAT_VERSION}); upgrade repro")
+    return hdr
+
+
+def load_trace(path: str) -> DelayTrace:
+    """Read a trace written by ``save_trace``, validating version, shapes,
+    and the content digest."""
+    with np.load(path) as z:
+        hdr = _read_header(z)
+        if "T1" not in z or "T2" not in z:
+            raise ValueError(f"{path}: missing T1/T2 tables")
+        trace = DelayTrace(z["T1"], z["T2"], meta=hdr.get("meta"))
+    want = (hdr["rounds"], hdr["trials"], hdr["n"], hdr["r"])
+    if trace.T1.shape != want:
+        raise ValueError(f"{path}: header says shape {want}, tables are "
+                         f"{trace.T1.shape}")
+    if hdr.get("digest") and hdr["digest"] != trace._digest:
+        raise ValueError(f"{path}: content digest mismatch (corrupt or "
+                         f"hand-edited tables)")
+    return trace
+
+
+def validate_trace_file(path: str) -> dict:
+    """Validate a trace file without keeping the tables; returns its
+    header dict (raises ``ValueError`` on any format problem)."""
+    return load_trace(path).header()
+
+
+# ------------------------------ the replay backend ---------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TraceProcess(DelayProcess):
+    """Replay a recorded ``DelayTrace`` through the ``init``/``step`` API.
+
+    Deterministic: the per-trial PRNG keys are ignored — trial ``t`` of a
+    replay reads trial ``t % trace.trials`` of the table (so a single
+    recorded realization broadcasts across any Monte-Carlo trial count,
+    and a trace recorded from ``sweep_rounds`` replays per-trial
+    bit-exactly at the recording's own ``trials``/any chunking).
+
+    Axis policies when the requested run exceeds the recording:
+      * ``pad_rounds``:  ``"error"`` (default) — raise where the horizon
+        is known statically (``sweep_rounds``, ``sample_rounds``, the
+        aggregator's live round counter); ``"cycle"`` — wrap around;
+        ``"hold"`` — repeat the final recorded round.
+      * ``pad_workers`` / ``pad_slots``: ``"error"`` (default) or
+        ``"cycle"`` (wrap the worker / slot axis).
+    Requests *smaller* than the recording always use the leading
+    workers/slots/rounds (truncation; delay statistics are
+    slot-order-independent, paper Remark 6).
+
+    ``start_round`` begins replay that many rounds into the recording —
+    resuming a checkpointed training run keeps its remaining steps
+    aligned with the rounds they originally consumed.
+
+    The ``pad_rounds="error"`` policy is enforced through
+    ``check_rounds``, which every driver in this repo calls wherever the
+    horizon is known (``sweep_rounds`` / ``sample_rounds``, the
+    aggregator per round, the launcher up front).  ``step`` itself runs
+    under ``jit`` and cannot raise, so a hand-rolled ``init``/``step``
+    loop must call ``check_rounds(n_rounds)`` itself — stepping past the
+    recorded horizon without it wraps around silently.
+    """
+    trace: DelayTrace = None
+    pad_rounds: str = "error"
+    pad_workers: str = "error"
+    pad_slots: str = "error"
+    start_round: int = 0
+
+    def __post_init__(self):
+        if not isinstance(self.trace, DelayTrace):
+            raise TypeError(f"TraceProcess needs a DelayTrace, got "
+                            f"{type(self.trace).__name__}")
+        if self.pad_rounds not in _PAD_ROUNDS:
+            raise ValueError(f"pad_rounds must be one of {_PAD_ROUNDS}, "
+                             f"got {self.pad_rounds!r}")
+        for name in ("pad_workers", "pad_slots"):
+            if getattr(self, name) not in _PAD_AXES:
+                raise ValueError(f"{name} must be one of {_PAD_AXES}, got "
+                                 f"{getattr(self, name)!r}")
+        if not 0 <= int(self.start_round):
+            raise ValueError(f"start_round must be >= 0, got "
+                             f"{self.start_round}")
+
+    # --- static-shape policy resolution (python-time, informative errors) --
+    def _axis_index(self, want: int, have: int, axis: str,
+                    policy: str) -> Optional[np.ndarray]:
+        """Wrap-around index for an over-long axis, or None when plain
+        (possibly truncating) leading slices suffice."""
+        if want <= have:
+            return None
+        if policy == "error":
+            raise ValueError(
+                f"replay needs {want} {axis} but the trace recorded only "
+                f"{have}; pass pad_{axis}='cycle' to wrap the recording "
+                f"(TraceProcess(trace, pad_{axis}='cycle'))")
+        return np.arange(want) % have
+
+    def check_rounds(self, rounds: int) -> None:
+        """Raise if a ``rounds``-long run (from ``start_round``) would
+        exhaust the trace under ``pad_rounds='error'`` (called by the
+        engines and the aggregator wherever the horizon is known
+        statically)."""
+        need = rounds + int(self.start_round)
+        if self.pad_rounds == "error" and need > self.trace.rounds:
+            raise ValueError(
+                f"replay needs {need} rounds (start_round="
+                f"{self.start_round}) but the trace recorded only "
+                f"{self.trace.rounds}; pass pad_rounds='cycle' (wrap) or "
+                f"'hold' (repeat the final round) to extend it")
+
+    # --- the process API ---------------------------------------------------
+    def init(self, keys, n):
+        # positional trial ids: correct for every unchunked caller (the
+        # aggregator / train step run one lane; sample_rounds runs all
+        # trials flat).  The chunked rounds engine passes global ids via
+        # init_trials instead.
+        trials = keys.shape[0]
+        return self.init_trials(keys, jnp.arange(trials, dtype=jnp.int32), n)
+
+    def init_trials(self, keys, trial_ids, n):
+        self._axis_index(n, self.trace.n, "workers", self.pad_workers)
+        tids = jnp.asarray(trial_ids, jnp.int32) % self.trace.trials
+        return (jnp.asarray(int(self.start_round), jnp.int32), tids)
+
+    def step(self, state, keys, n, r):
+        t = self.trace
+        ridx, tids = state
+        widx = self._axis_index(n, t.n, "workers", self.pad_workers)
+        sidx = self._axis_index(r, t.r, "slots", self.pad_slots)
+        if self.pad_rounds == "hold":
+            rnow = jnp.minimum(ridx, t.rounds - 1)
+        else:
+            # "cycle" semantics; under "error" the horizon checks make the
+            # wrapped branch unreachable, and the modulo keeps the traced
+            # index in range either way.
+            rnow = ridx % t.rounds
+
+        def pick(table):
+            x = jnp.asarray(table)                    # (rounds, trials, n, r)
+            x = jax.lax.dynamic_index_in_dim(x, rnow, axis=0, keepdims=False)
+            x = jnp.take(x, tids, axis=0)             # (replay trials, n, r)
+            # cycle-gather over-long axes; plain leading slices truncate
+            x = x[:, widx] if widx is not None else x[:, :n]
+            x = x[:, :, sidx] if sidx is not None else x[:, :, :r]
+            return x
+
+        return (ridx + 1, tids), pick(t.T1), pick(t.T2)
+
+
+# ------------------------------- calibration ---------------------------------
+
+def _otsu_threshold(x: np.ndarray) -> float:
+    """Between-class-variance-maximizing split point of a 1-D sample
+    (Otsu's method on a 64-bin histogram) — used to segment per-round
+    worker means into fast/slow regimes without assuming a slow factor."""
+    lo, hi = float(x.min()), float(x.max())
+    edges = np.linspace(lo, hi, 65)
+    hist, _ = np.histogram(x, bins=edges)
+    centers = 0.5 * (edges[:-1] + edges[1:])
+    w = hist / hist.sum()
+    mu = centers * w
+    w0 = np.cumsum(w)
+    m0 = np.cumsum(mu)
+    m_tot = m0[-1]
+    with np.errstate(divide="ignore", invalid="ignore"):
+        between = (m_tot * w0 - m0) ** 2 / (w0 * (1.0 - w0))
+    between[~np.isfinite(between)] = -np.inf
+    return float(centers[int(np.argmax(between))])
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationReport:
+    """A parametric cluster fitted to a ``DelayTrace``, plus how well it
+    fits.
+
+    ``process`` is the assembled ``MarkovRegimeProcess`` (heterogeneous
+    ``worker_scale``, slow/fast regime chain, truncated-Gaussian base
+    refit from the trace) — drop-in wherever ``ec2_cluster`` is used.
+    The ``*_rel_err`` fields compare Monte-Carlo moments of the fitted
+    process against the trace: overall compute/comm delay means, the
+    worst per-worker compute mean, and the lag-1 autocorrelation of
+    per-(round, worker) means (the straggler-persistence signature).
+    """
+    process: MarkovRegimeProcess
+    worker_scale: tuple
+    p_slow: float
+    persistence: float
+    slow: float
+    mean_rel_err: float
+    comm_mean_rel_err: float
+    worker_mean_rel_err: float
+    lag1_trace: float
+    lag1_fit: float
+
+    def summary(self) -> str:
+        return (f"calibrated MarkovRegimeProcess: p_slow={self.p_slow:.3f} "
+                f"persistence={self.persistence:.3f} slow={self.slow:.2f}x "
+                f"scale_spread={max(self.worker_scale) / min(self.worker_scale):.2f}x | "
+                f"fit: mean_err={self.mean_rel_err * 100:.1f}% "
+                f"comm_err={self.comm_mean_rel_err * 100:.1f}% "
+                f"worst_worker_err={self.worker_mean_rel_err * 100:.1f}% "
+                f"lag1 {self.lag1_trace:+.2f}->{self.lag1_fit:+.2f}")
+
+
+def _lag1(m: np.ndarray) -> float:
+    """Lag-1 autocorrelation over the round axis of per-(round, trial,
+    worker) means, pooled across trials and workers."""
+    if m.shape[0] < 2:
+        return 0.0
+    a, b = m[:-1].reshape(-1), m[1:].reshape(-1)
+    if a.std() == 0 or b.std() == 0:
+        return 0.0
+    return float(np.corrcoef(a, b)[0, 1])
+
+
+def calibrate_trace(trace: DelayTrace, *, min_slow_factor: float = 1.5,
+                    fit_trials: int = 512, seed: int = 0
+                    ) -> CalibrationReport:
+    """Fit a heterogeneous persistent-straggler cluster to a trace.
+
+    Segmentation runs on the log per-(round, trial, worker) mean compute
+    delays with each worker's median removed (so *persistent* machine-
+    speed heterogeneity is not mistaken for a slow regime).  A regime is
+    only declared when the fast/slow separation exceeds
+    ``min_slow_factor``; otherwise the fit degenerates gracefully to a
+    pure heterogeneous-scale cluster (``p_slow = 0``).
+
+    Estimators
+    ----------
+    * ``worker_scale`` — per-worker mean compute delay on fast cells over
+      the global fast mean (the scale MLE for scale families, normalized
+      to geometric mean 1 like ``heterogeneous_scales``);
+    * ``slow`` — ratio of slow-cell to fast-cell means;
+    * ``p_slow`` — the stationary slow-cell fraction;
+    * ``persistence`` — ``1 - p(fast->slow) - p(slow->fast)`` from the
+      per-worker regime transition counts (the chain's one-step
+      autocorrelation, clipped to [0, 1]);
+    * base model — truncated Gaussian refit by moment matching on the
+      de-scaled fast cells (mu/sigma per delay type, +-3 sigma support
+      clipped to keep delays positive).
+    """
+    T1 = np.asarray(trace.T1, np.float64)            # (R, t, n, r)
+    T2 = np.asarray(trace.T2, np.float64)
+    R, _, n, r = T1.shape
+    m1 = T1.mean(axis=3)                             # (R, t, n) round means
+    X = np.log(m1)
+    Xc = X - np.median(X, axis=(0, 1), keepdims=True)    # de-heterogenize
+
+    thr = _otsu_threshold(Xc.reshape(-1))
+    slow_mask = Xc > thr                             # (R, t, n)
+    frac = float(slow_mask.mean())
+    sep = (np.exp(Xc[slow_mask].mean() - Xc[~slow_mask].mean())
+           if 0.0 < frac < 1.0 else 1.0)
+
+    if not 0.0 < frac < 1.0 or sep < min_slow_factor:
+        # no credible slow regime: pure heterogeneous scales
+        slow_mask = np.zeros_like(slow_mask)
+        p_slow, slow, persistence = 0.0, 1.0, 0.0
+    else:
+        p_slow = frac
+        slow = float(sep)
+        n_fast = int((~slow_mask[:-1]).sum())
+        n_slow = int(slow_mask[:-1].sum())
+        p_fs = (float((~slow_mask[:-1] & slow_mask[1:]).sum()) / n_fast
+                if n_fast else 0.0)
+        p_sf = (float((slow_mask[:-1] & ~slow_mask[1:]).sum()) / n_slow
+                if n_slow else 0.0)
+        persistence = float(np.clip(1.0 - p_fs - p_sf, 0.0, 1.0))
+
+    fast = ~slow_mask                                # (R, t, n)
+    # per-worker scale MLE on the fast regime (mean ratio), geometric mean 1
+    wm = np.array([m1[..., i][fast[..., i]].mean() if fast[..., i].any()
+                   else m1[..., i].mean() for i in range(n)])
+    scale = wm / np.exp(np.log(wm).mean())
+    scale = tuple(float(v) for v in scale)
+
+    # de-scaled fast-cell samples -> truncated-Gaussian base refit
+    f1 = T1 / np.asarray(scale)[None, None, :, None]
+    f2 = T2 / np.asarray(scale)[None, None, :, None]
+    sel = np.broadcast_to(fast[..., None], T1.shape)
+    s1, s2 = f1[sel], f2[sel]
+
+    def _tg(s):
+        mu, sd = float(s.mean()), float(max(s.std(), 1e-12 * s.mean()))
+        a = min(3.0 * sd, 0.999 * mu)                # keep support positive
+        return mu, sd, a
+
+    mu1, sd1, a1 = _tg(s1)
+    mu2, sd2, a2 = _tg(s2)
+    base = TruncatedGaussianDelays(mu1=mu1, sigma1=sd1, a1=a1,
+                                   mu2=mu2, sigma2=sd2, a2=a2)
+    process = MarkovRegimeProcess(base=base, worker_scale=scale,
+                                  p_slow=float(p_slow),
+                                  persistence=float(persistence),
+                                  slow=float(slow))
+
+    # ---- fit-quality: MC moments of the fitted process vs the trace -------
+    F1, F2 = process.sample_rounds(jax.random.PRNGKey(seed),
+                                   max(int(fit_trials), 1), n, r, R)
+    F1, F2 = np.asarray(F1, np.float64), np.asarray(F2, np.float64)
+
+    def rel(a, b):
+        return float(abs(a - b) / max(abs(b), 1e-30))
+
+    worker_err = max(rel(F1[..., i, :].mean(), T1[..., i, :].mean())
+                     for i in range(n))
+    report = CalibrationReport(
+        process=process, worker_scale=scale, p_slow=float(p_slow),
+        persistence=float(persistence), slow=float(slow),
+        mean_rel_err=rel(F1.mean(), T1.mean()),
+        comm_mean_rel_err=rel(F2.mean(), T2.mean()),
+        worker_mean_rel_err=worker_err,
+        lag1_trace=_lag1(m1), lag1_fit=_lag1(F1.mean(axis=3)))
+    return report

@@ -9,11 +9,18 @@ on this CPU container use ``--smoke --mesh local``.
   PYTHONPATH=src python -m repro.launch.train --arch phi4-mini-3.8b \
       --smoke --steps 20 --n 4 --r 2 --k 3 --schedule ss \
       --cluster markov --persistence 0.95 --spread 3 --adaptive
+
+Record / replay: ``--log-delays PATH`` writes every round's realized
+per-(worker, slot) delays to a versioned trace file
+(``repro.core.trace``); ``--cluster trace --trace PATH`` drives a later
+run from such a recording (or from delay tables recorded by
+``sweep_rounds``) instead of a parametric model.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 import time
 
 import jax
@@ -22,7 +29,8 @@ import numpy as np
 
 from ..configs import ARCH_IDS, get_config
 from ..core import (AR1Process, AdaptiveScheduler, BimodalStragglerDelays,
-                    RoundSpec, ec2_cluster, heterogeneous_scales, scenario1)
+                    DelayTrace, RoundSpec, TraceProcess, ec2_cluster,
+                    heterogeneous_scales, load_trace, save_trace, scenario1)
 from ..data import TaskPartition, lm_task_batches
 from ..models import num_params
 from ..optim import adamw, cosine_schedule
@@ -32,10 +40,36 @@ from ..ckpt import save_checkpoint, load_checkpoint, latest_checkpoint
 from .mesh import make_mesh_ctx
 
 
-def build_cluster(args):
-    """The round delay source: an i.i.d. model or a stateful process.
-    ``--straggle`` layers i.i.d. bimodal slowdowns on the base model in
-    every mode (stateful processes add their own regime chain on top)."""
+def derive_seeds(seed: int) -> dict:
+    """Deterministically derive every randomness stream of a run from one
+    root ``--seed``: independent keys/ints for parameter init, the data
+    pipeline, the per-round delay realizations, and schedule construction
+    (RA matrices), via ``fold_in`` on the root key.  Same seed -> same
+    run; different seeds decorrelate every stream at once."""
+    root = jax.random.PRNGKey(seed)
+
+    def _int(i):
+        return int(np.asarray(jax.random.fold_in(root, i))[1])
+
+    return {"init_key": jax.random.fold_in(root, 0),
+            "delay_root": jax.random.fold_in(root, 1),
+            "data_seed": _int(2),
+            "schedule_seed": _int(3),
+            "cluster_seed": _int(4)}
+
+
+def build_cluster(args, seeds):
+    """The round delay source: an i.i.d. model, a stateful process, or a
+    recorded trace replay.  ``--straggle`` layers i.i.d. bimodal slowdowns
+    on the base model in the parametric modes (stateful processes add
+    their own regime chain on top)."""
+    if args.cluster == "trace":
+        if not args.trace:
+            raise SystemExit("--cluster trace needs --trace PATH "
+                             "(a file written by --log-delays or "
+                             "repro.core.save_trace)")
+        return TraceProcess(load_trace(args.trace),
+                            pad_rounds=args.trace_pad)
     base = (BimodalStragglerDelays(p_straggle=0.3, slow=8.0)
             if args.straggle else scenario1())
     if args.cluster == "iid":
@@ -43,15 +77,23 @@ def build_cluster(args):
     if args.cluster == "markov":
         return ec2_cluster(args.n, spread=args.spread, p_slow=args.p_slow,
                            persistence=args.persistence, slow=args.slow,
-                           base=base, seed=args.n)
+                           base=base, seed=seeds["cluster_seed"])
     return AR1Process(base=base,
                       worker_scale=heterogeneous_scales(
-                          args.n, args.spread, seed=args.n),
+                          args.n, args.spread, seed=seeds["cluster_seed"]),
                       rho=args.persistence, sigma=0.4)
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="Straggler-scheduled training with record/replay "
+                    "delay sources.",
+        epilog="Determinism: a single --seed derives every randomness "
+               "stream (parameter init, data pipeline, per-round delay "
+               "realizations, RA schedule construction) via fold_in, so "
+               "one integer pins the whole run; --log-delays / --cluster "
+               "trace make the delay stream itself recordable and "
+               "replayable.")
     ap.add_argument("--arch", choices=ARCH_IDS, required=True)
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-runnable)")
@@ -70,12 +112,31 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="root seed; deterministically derives the data, "
+                         "delay, and schedule/init keys (fold_in streams "
+                         "0..4), so one integer reproduces the whole run")
     ap.add_argument("--straggle", action="store_true",
                     help="layer i.i.d. bimodal slowdowns on the base "
-                         "delays (all cluster modes)")
+                         "delays (parametric cluster modes)")
     ap.add_argument("--cluster", default="iid",
-                    choices=("iid", "markov", "ar1"),
-                    help="round-aware delay process for the virtual cluster")
+                    choices=("iid", "markov", "ar1", "trace"),
+                    help="round-aware delay process for the virtual "
+                         "cluster; 'trace' replays a recorded delay trace "
+                         "(--trace PATH)")
+    ap.add_argument("--trace", default=None,
+                    help="delay-trace file (.npz from --log-delays or "
+                         "repro.core.save_trace) for --cluster trace")
+    ap.add_argument("--trace-pad", default="error",
+                    choices=("error", "cycle", "hold"),
+                    help="what to do when --steps exceeds the recorded "
+                         "rounds: fail, wrap around, or hold the final "
+                         "round")
+    ap.add_argument("--log-delays", default=None, metavar="PATH",
+                    help="record every round's realized per-(worker, "
+                         "slot) compute/comm delays and write them to "
+                         "PATH as a versioned delay trace (replayable "
+                         "via --cluster trace)")
     ap.add_argument("--persistence", type=float, default=0.9,
                     help="straggler persistence (markov) / AR(1) rho")
     ap.add_argument("--spread", type=float, default=2.0,
@@ -107,16 +168,25 @@ def main(argv=None):
         if len(loads) != args.n:
             raise SystemExit(f"--loads needs {args.n} entries, got "
                              f"{len(loads)}")
+    if args.log_delays:
+        # fail fast on an unwritable destination instead of after the
+        # whole run has been spent recording
+        out_dir = os.path.dirname(os.path.abspath(args.log_delays))
+        os.makedirs(out_dir, exist_ok=True)
+        if not os.access(out_dir, os.W_OK):
+            raise SystemExit(f"--log-delays: cannot write to {out_dir}")
+    seeds = derive_seeds(args.seed)
     spec = RoundSpec(n=args.n, r=args.n if args.schedule == "ra" else args.r,
-                     k=args.k, schedule=args.schedule, loads=loads)
-    delay = build_cluster(args)
+                     k=args.k, schedule=args.schedule, loads=loads,
+                     seed=seeds["schedule_seed"])
+    delay = build_cluster(args, seeds)
     part = TaskPartition(n=args.n, global_batch=args.batch,
                          seq_len=args.seq, vocab=cfg.vocab_size,
-                         source="bigram")
+                         source="bigram", seed=seeds["data_seed"])
     opt = adamw(cosine_schedule(args.lr, args.steps, warmup=5))
 
     with mesh_context(ctx):
-        state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+        state = init_train_state(seeds["init_key"], cfg, opt)
         start = 0
         if args.resume and args.ckpt_dir:
             path = latest_checkpoint(args.ckpt_dir, args.arch)
@@ -129,22 +199,33 @@ def main(argv=None):
               f"{'+adaptive' if args.adaptive else ''}"
               f"{' loads=' + ','.join(map(str, loads)) if loads else ''} | "
               f"cluster {args.cluster}")
+        if isinstance(delay, TraceProcess) and start:
+            # resumed runs keep their remaining steps aligned with the
+            # trace rounds those steps originally consumed
+            delay = dataclasses.replace(delay, start_round=start)
+        if hasattr(delay, "check_rounds"):
+            # fail fast (with the remedy) instead of r rounds into the run
+            delay.check_rounds(args.steps - start)
         step_fn = jax.jit(make_straggler_train_step(cfg, opt, spec, delay))
         base_C = spec.to_matrix()
         sched = AdaptiveScheduler(base_C) if args.adaptive else None
         cluster = None
         vclock = 0.0
+        logged_t1, logged_t2 = [], []
         t0 = time.time()
         for i in range(start, args.steps):
             C = base_C if sched is None else sched.matrix()
             row = (None if sched is None
                    else jnp.asarray(sched.row_of_worker()))
             toks, labs = lm_task_batches(part, C, i)
-            state, m, cluster = step_fn(state, toks, labs,
-                                        jax.random.PRNGKey(4242 + i),
-                                        cluster, row)
+            state, m, cluster = step_fn(
+                state, toks, labs,
+                jax.random.fold_in(seeds["delay_root"], i), cluster, row)
             if sched is not None:
                 sched.observe(np.asarray(m["worker_t1"]))
+            if args.log_delays:
+                logged_t1.append(np.asarray(m["slot_t1"]))
+                logged_t2.append(np.asarray(m["slot_t2"]))
             vclock += float(m["completion_time"])
             if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
                 print(f"step {i:5d}  loss {float(m['loss']):.4f}  "
@@ -152,6 +233,17 @@ def main(argv=None):
                       f"vclock {vclock * 1e3:.2f} ms")
         print(f"done: {args.steps - start} rounds in "
               f"{time.time() - t0:.1f}s wall, {vclock * 1e3:.2f} ms virtual")
+        if args.log_delays and logged_t1:
+            trace = DelayTrace(
+                np.stack(logged_t1), np.stack(logged_t2),
+                meta={"source": "launch.train", "arch": args.arch,
+                      "schedule": args.schedule, "cluster": args.cluster,
+                      "n": args.n, "r": spec.r, "k": args.k,
+                      "seed": args.seed, "start_step": start,
+                      "adaptive": bool(args.adaptive)})
+            p = save_trace(args.log_delays, trace)
+            print(f"logged {trace.rounds} rounds of delays -> {p} "
+                  f"(replay with --cluster trace --trace {p})")
         if args.ckpt_dir:
             p = save_checkpoint(f"{args.ckpt_dir}/{args.arch}", state,
                                 step=args.steps)

@@ -130,8 +130,11 @@ def make_straggler_train_step(cfg: ModelConfig, opt: Optimizer,
     optionally ``extras`` (dict of slot-major modality inputs, e.g.
     ``enc_frames`` (r, n, b, T_enc, D) for whisper). Returns
     ``(state, metrics, cluster)`` with metrics incl. the round's virtual
-    completion time (eq. 6), the winner count, and the per-worker observed
-    compute delays (``worker_t1``) that feed adaptive scheduling.
+    completion time (eq. 6), the winner count, the per-worker observed
+    compute delays (``worker_t1``) that feed adaptive scheduling, and the
+    raw per-(worker, slot) delay draws (``slot_t1``/``slot_t2``) that
+    ``launch/train.py --log-delays`` accumulates into a replayable
+    ``DelayTrace``.
 
     Layout: the worker axis is FLATTENED into the batch (worker-major), so
     each data shard holds exactly its workers' sequences and the model
@@ -170,7 +173,11 @@ def make_straggler_train_step(cfg: ModelConfig, opt: Optimizer,
         b = slot_tokens.shape[2]
         # --- cluster round: stateful delays + first-k-distinct weights ----
         if cluster is None:
-            cluster = process.init(jax.random.fold_in(rng, 0x0c10)[None], n)
+            # trial id 0: a training run is the single realization of a
+            # trace-backed process (lane 0 of its recorded table)
+            cluster = process.init_trials(
+                jax.random.fold_in(rng, 0x0c10)[None],
+                jnp.zeros((1,), jnp.int32), n)
         cluster, T1, T2 = process.step(cluster, rng[None], n, r)
         # raw per-slot availability (eq. 1); the message grouping / ragged
         # masks are applied per row after the (optional) permutation
@@ -221,7 +228,11 @@ def make_straggler_train_step(cfg: ModelConfig, opt: Optimizer,
         metrics = {"loss": l, "aux": aux, "grad_norm": gnorm,
                    "completion_time": t_done,
                    "winners": (weights > 0).sum(),
-                   "worker_t1": T1[0].mean(axis=-1)}
+                   "worker_t1": T1[0].mean(axis=-1),
+                   # raw per-(worker, slot) delay draws of the round —
+                   # what `launch/train.py --log-delays` accumulates into
+                   # a replayable DelayTrace (repro.core.trace)
+                   "slot_t1": T1[0], "slot_t2": T2[0]}
         return TrainState(params, opt_state, state.step + 1), metrics, cluster
 
     return step
