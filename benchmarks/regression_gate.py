@@ -21,18 +21,28 @@ Compares the machine-readable ``BENCH_*.json`` results written by
   trace* (the record -> replay path) must stay within ``--trace-drop``
   percentage points of the baseline: the trace-driven evaluation pipeline
   keeps agreeing with the parametric one about how much adaptation pays.
+* ``fig12`` — the adaptive-vs-static margin in time-per-realized-result
+  under spot preemption with a round deadline (``close_partial``) must
+  stay positive and within ``--fault-drop`` percentage points of the
+  baseline: crash-aware scheduling keeps paying under failures.
+
+Every metric the gate reads — and every numeric derived field in every
+consumed ``BENCH_*.json`` — must be finite: a NaN or inf anywhere fails
+the gate with an explicit message (a poisoned benchmark can otherwise
+sail through a ``>=`` comparison).
 
 Exit codes: 0 all checks pass, 1 regression detected, 2 missing inputs.
 
 Usage (CI)::
 
-    python -m benchmarks.run --quick --only mc_engine,fig8,fig10,fig11 --out bench_out
+    python -m benchmarks.run --quick --only mc_engine,fig8,fig10,fig11,fig12 --out bench_out
     python -m benchmarks.regression_gate --results bench_out
 """
 from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 import sys
 
@@ -59,6 +69,20 @@ def _row(payload: dict, name: str) -> dict:
     sys.exit(2)
 
 
+def _check_finite(payload: dict) -> None:
+    """A NaN/inf in any numeric derived field is an automatic failure: a
+    poisoned metric must never pass a threshold comparison silently."""
+    bad = [(row.get("name"), key, val)
+           for row in payload.get("rows", [])
+           for key, val in row.get("derived", {}).items()
+           if isinstance(val, float) and not math.isfinite(val)]
+    if bad:
+        lines = "; ".join(f"{r}:{k}={v}" for r, k, v in bad)
+        print(f"regression_gate: BENCH_{payload.get('bench')}.json carries "
+              f"non-finite metric(s): {lines}")
+        sys.exit(1)
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--results", default="bench_out",
@@ -77,6 +101,10 @@ def main(argv=None) -> None:
                     help="max allowed drop (percentage points) of the fig11 "
                          "trace-replay adaptive-vs-static margin vs "
                          "baseline")
+    ap.add_argument("--fault-drop", type=float, default=5.0,
+                    help="max allowed drop (percentage points) of the fig12 "
+                         "adaptive-vs-static margin under preemption vs "
+                         "baseline")
     args = ap.parse_args(argv)
 
     if not os.path.exists(args.baseline):
@@ -89,6 +117,7 @@ def main(argv=None) -> None:
 
     # --- mc_engine throughput ------------------------------------------------
     mc = _load_bench(args.results, "mc_engine")
+    _check_finite(mc)
     thr = _row(mc, "mc_engine/fused")["derived"].get("throughput")
     if not isinstance(thr, (int, float)):
         print("regression_gate: mc_engine/fused row lacks a numeric "
@@ -105,6 +134,7 @@ def main(argv=None) -> None:
 
     # --- fig8 adaptive-vs-static margin -------------------------------------
     fig8 = _load_bench(args.results, "fig8")
+    _check_finite(fig8)
     cell = base.get("fig8_cell", "fig8/p0.98_s3")
     margin = _row(fig8, cell)["derived"].get("adapt_vs_static")
     if not isinstance(margin, (int, float)):
@@ -121,6 +151,7 @@ def main(argv=None) -> None:
 
     # --- fig10 rebalance-vs-permutation margin ------------------------------
     fig10 = _load_bench(args.results, "fig10")
+    _check_finite(fig10)
     margin = _row(fig10, "fig10/rebalance")["derived"].get("rebal_vs_perm")
     if not isinstance(margin, (int, float)):
         print("regression_gate: fig10/rebalance row lacks a numeric "
@@ -136,6 +167,7 @@ def main(argv=None) -> None:
 
     # --- fig11 trace-replay adaptive margin ---------------------------------
     fig11 = _load_bench(args.results, "fig11")
+    _check_finite(fig11)
     margin = _row(fig11, "fig11/trace")["derived"].get("adapt_vs_static")
     if not isinstance(margin, (int, float)):
         print("regression_gate: fig11/trace row lacks a numeric "
@@ -149,6 +181,23 @@ def main(argv=None) -> None:
           f"{args.trace_drop})")
     if not ok:
         failures.append("fig11 trace margin")
+
+    # --- fig12 fault-tolerance adaptive margin ------------------------------
+    fig12 = _load_bench(args.results, "fig12")
+    _check_finite(fig12)
+    margin = _row(fig12, "fig12/preemption")["derived"].get("adapt_vs_static")
+    if not isinstance(margin, (int, float)):
+        print("regression_gate: fig12/preemption row lacks a numeric "
+              "'adapt_vs_static' derived field")
+        sys.exit(2)
+    floor = max(base["fig12_fault_margin"] - args.fault_drop, 0.0)
+    ok = margin >= floor
+    print(f"{'PASS' if ok else 'FAIL'} fig12 fault-tolerance adaptive-vs-"
+          f"static margin (preemption, close_partial): {margin:+.1f}% "
+          f"(floor {floor:+.1f}% = baseline "
+          f"{base['fig12_fault_margin']:+.1f}% - {args.fault_drop})")
+    if not ok:
+        failures.append("fig12 fault margin")
 
     if failures:
         print(f"regression_gate: FAILED checks: {failures}")

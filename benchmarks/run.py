@@ -21,6 +21,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
          file, replays it (exits non-zero unless bit-exact), and checks
          the calibrated synthetic twin keeps the adaptive-vs-static
          margin sign
+  fig12  fault injection and graceful degradation: the failure-scenario
+         zoo under round deadlines (exits non-zero unless adaptive +
+         close_partial beats static under preemption, every scenario
+         stays finite, and the fault-bearing trace replays bit-exactly)
   mc_engine  fused sweep-engine throughput vs the seed per-scheme path
   table1 end-to-end DGD iteration per scheme incl. real PC/PCMM decode
   roofline  per-(mesh, arch, shape) terms from saved dry-run artifacts
@@ -29,12 +33,29 @@ Each job also writes a machine-readable ``BENCH_<name>.json`` (the CSV rows
 with parsed derived metrics) into ``--out`` for CI artifact upload and the
 ``benchmarks.regression_gate`` check.
 
+Every drained row is screened for NaN/inf metric values: a non-finite
+number in a derived field aborts the harness with a non-zero exit and an
+explicit message, so a silently-poisoned benchmark can never look green.
+
 Use --quick for CI-speed runs (fewer MC trials).
 """
 import argparse
 import json
+import math
 import os
 import time
+
+
+def _check_finite(name: str, rows: list) -> None:
+    """Fail loudly (non-zero exit) when a benchmark emits NaN/inf metrics."""
+    bad = [(row["name"], key, val)
+           for row in rows for key, val in row.get("derived", {}).items()
+           if isinstance(val, float) and not math.isfinite(val)]
+    if bad:
+        lines = "; ".join(f"{r}:{k}={v}" for r, k, v in bad)
+        raise SystemExit(
+            f"benchmarks.run: benchmark {name!r} emitted non-finite "
+            f"metric(s): {lines} — refusing to report poisoned results")
 
 
 def main(argv=None) -> None:
@@ -53,8 +74,8 @@ def main(argv=None) -> None:
     from . import (common, fig3_delays, fig4_vs_load, fig5_ec2,
                    fig6_vs_workers, fig7_vs_target, fig8_convergence,
                    fig9_multimessage, fig10_load_rebalance,
-                   fig11_trace_replay, mc_engine, table1_e2e,
-                   roofline_report)
+                   fig11_trace_replay, fig12_faults, mc_engine,
+                   table1_e2e, roofline_report)
 
     jobs = {
         "fig3": lambda: fig3_delays.run(trials),
@@ -67,6 +88,8 @@ def main(argv=None) -> None:
         "fig10": lambda: fig10_load_rebalance.run(trials),
         "fig11": lambda: fig11_trace_replay.run(trials,
                                                 out=args.out or "bench_out"),
+        "fig12": lambda: fig12_faults.run(trials,
+                                          out=args.out or "bench_out"),
         "mc_engine": lambda: mc_engine.run(trials),
         "table1": table1_e2e.run,
         "roofline": roofline_report.run,
@@ -97,6 +120,7 @@ def main(argv=None) -> None:
                                "trials": trials, "unix_time": time.time(),
                                "rows": rows}, f, indent=2)
                     f.write("\n")
+        _check_finite(name, rows)
 
 
 if __name__ == "__main__":

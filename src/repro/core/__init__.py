@@ -12,7 +12,10 @@ from .delays import (DelayModel, TruncatedGaussianDelays,
                      EmpiricalDelays, scenario1, scenario2, ec2_like)
 from .cluster import (DelayProcess, IIDProcess, MarkovRegimeProcess,
                       AR1Process, as_process, heterogeneous_scales,
-                      ec2_cluster, message_comm_delays)
+                      ec2_cluster, message_comm_delays, FaultProcess,
+                      SpotPreemptionProcess, NetworkPartitionProcess,
+                      RackFailureProcess, MessageLossProcess,
+                      DiurnalLoadProcess, FAULT_SCENARIOS, make_scenario)
 from .trace import (TRACE_FORMAT_VERSION, DelayTrace, TraceProcess,
                     save_trace, load_trace, validate_trace_file,
                     CalibrationReport, calibrate_trace)

@@ -79,6 +79,14 @@ class RoundSpec:
     load re-balancing, ``loads`` is the *initial budget* under the cap
     ``r``).  ``comm_eps`` is the serialized per-message protocol overhead
     (Ozfatura et al.'s communication/computation trade-off).
+
+    ``deadline`` caps the round's wall-clock (fault tolerance — under
+    fault-injecting delay processes a round may otherwise never reach k
+    results); ``deadline_policy`` picks the fallback: ``"wait"`` (report
+    the true completion, flag the miss), ``"close_partial"`` (close at the
+    deadline with whatever arrived — eq. 61 renormalizes by the realized
+    count), or ``"reissue"`` (close partial + the adaptive scheduler
+    re-gathers undelivered tasks first next round).
     """
     n: int            # number of logical tasks == number of workers
     r: int            # computation load (tasks per worker) / grid width
@@ -89,6 +97,8 @@ class RoundSpec:
                                  # (None = one per slot, eq. 1)
     loads: tuple | None = None   # per-row loads (ragged rounds)
     comm_eps: float = 0.0        # per-message protocol overhead
+    deadline: float | None = None      # per-round wall-clock cap
+    deadline_policy: str = "wait"      # wait | close_partial | reissue
 
     def __post_init__(self):
         if not (1 <= self.k <= self.n):
@@ -100,6 +110,14 @@ class RoundSpec:
                              f"messages={self.messages}")
         if self.comm_eps < 0:
             raise ValueError(f"comm_eps must be >= 0, got {self.comm_eps}")
+        if self.deadline_policy not in ("wait", "close_partial", "reissue"):
+            raise ValueError(f"deadline_policy must be wait | close_partial "
+                             f"| reissue; got {self.deadline_policy!r}")
+        if self.deadline is not None and not self.deadline > 0:
+            raise ValueError(f"deadline must be > 0, got {self.deadline}")
+        if self.deadline is None and self.deadline_policy != "wait":
+            raise ValueError(f"deadline_policy="
+                             f"{self.deadline_policy!r} needs a deadline")
         if self.loads is not None:
             object.__setattr__(self, "loads",
                                tuple(int(v) for v in self.loads))
@@ -112,6 +130,17 @@ class RoundSpec:
                     f"ragged loads need a slot-0-diagonal schedule (cs / ss "
                     f"/ ra) so every task stays covered; got "
                     f"{self.schedule!r}")
+        # the masked assignment must still be able to deliver k distinct
+        # results — catch impossible rounds up front instead of letting the
+        # engine report +inf completions (or hang a waiting master).
+        C = self.to_matrix()
+        covered = int(np.unique(C[C >= 0]).size)
+        if covered < self.k:
+            raise ValueError(
+                f"schedule {self.schedule!r} with loads={self.loads} covers "
+                f"only {covered} distinct tasks < k={self.k} "
+                f"({self.k - covered} short): no round can ever complete; "
+                f"lower k or raise the per-worker loads")
 
     @property
     def n_messages(self) -> int:
@@ -176,13 +205,21 @@ class StragglerAggregator:
                  init_key: Array | None = None, feedback_beta: float = 0.7,
                  coverage_gamma: float = 0.5,
                  censored_feedback: bool = False,
-                 rebalance: bool = False):
+                 rebalance: bool = False,
+                 dead_after: int | None = None):
         if censored_feedback and not adaptive:
             raise ValueError("censored_feedback requires adaptive=True — "
                              "static schedules take no feedback to censor")
         if rebalance and not adaptive:
             raise ValueError("rebalance requires adaptive=True — load "
                              "re-allocation is feedback-driven")
+        if dead_after is not None and not adaptive:
+            raise ValueError("dead_after requires adaptive=True — crash "
+                             "detection feeds the adaptive scheduler")
+        if spec.deadline_policy == "reissue" and not adaptive:
+            raise ValueError("deadline_policy='reissue' requires "
+                             "adaptive=True — re-gathering undelivered "
+                             "tasks is a scheduling decision")
         if rebalance and spec.loads is None:
             raise ValueError("rebalance needs RoundSpec.loads as the "
                              "initial budget below the cap r")
@@ -210,6 +247,8 @@ class StragglerAggregator:
         self._plan = montecarlo.task_gather_plan(self.base_C, spec.n)
         if adaptive:
             kw = dict(beta=feedback_beta, gamma=coverage_gamma)
+            if dead_after is not None:
+                kw.update(dead_after=int(dead_after), target_k=spec.k)
             if rebalance:
                 self.scheduler = scheduling.AdaptiveScheduler(
                     self.base_C, loads=spec.loads, rebalance=True, **kw)
@@ -233,6 +272,14 @@ class StragglerAggregator:
         self._state = self.process.init_trials(
             init_key[None], jnp.zeros((1,), jnp.int32), spec.n)
         self._rounds_done = 0
+        # a deadline that actually closes the round (close_partial /
+        # reissue) caps the winner selection; "wait" keeps the true
+        # completion and only *flags* misses.
+        self._dl_close = (spec.deadline
+                          if spec.deadline is not None
+                          and spec.deadline_policy != "wait" else None)
+        self.rounds_missed = 0          # rounds that blew the deadline
+        self.realized_k_history: list[float] = []   # realized count / round
         self._round = jax.jit(self._round_fn)
 
     # --- one round, jitted: delays + winner weights in base-row space ------
@@ -254,10 +301,15 @@ class StragglerAggregator:
             l_row = loads_w[worker_of_row]
             s2 = jnp.where(jnp.arange(r)[None, :] < l_row[:, None], s2,
                            jnp.inf)
-        w2, t_done = winner_mask_gather(self.base_C, self._plan, s2, n, k)
+        w2, t_done = winner_mask_gather(self.base_C, self._plan, s2, n, k,
+                                        deadline=self._dl_close)
+        # per-task delivery by the (capped) round close — the reissue
+        # policy's re-gather signal
+        tau = montecarlo.task_arrival_times_gather(self._plan, s2)
+        delivered = (tau <= t_done) & jnp.isfinite(tau)
         weights = w2[row_of_worker]                      # back to worker-major
         arr_w = s2[row_of_worker]                        # worker-major arrivals
-        return state, T1[0], arr_w, weights, t_done
+        return state, T1[0], arr_w, weights, t_done, delivered
 
     def current_matrix(self) -> np.ndarray:
         """The effective TO matrix for the coming round (row ``w`` = tasks
@@ -277,8 +329,9 @@ class StragglerAggregator:
 
     def round_mask(self, key: Array) -> Tuple[Array, Array]:
         """Advance the cluster one round, returning (weights (n, r),
-        completion time scalar). weights[i, j] in [0, 1]; sums to k over all
-        slots (its active subset) and matches ``current_matrix()``'s
+        completion time scalar). weights[i, j] in [0, 1]; sums to the
+        *realized* distinct-result count over all slots (k almost surely
+        without faults/deadlines) and matches ``current_matrix()``'s
         worker/slot layout."""
         # finite sources (trace replay) enforce their horizon policy here:
         # the live loop learns it ran off the recording's end *before* the
@@ -288,10 +341,16 @@ class StragglerAggregator:
                          else self.scheduler.row_of_worker())
         loads_w = (self.scheduler.loads() if self.rebalance
                    else self.spec.load_vector)
-        self._state, t1, arrivals, weights, t_done = self._round(
+        self._state, t1, arrivals, weights, t_done, delivered = self._round(
             self._state, key[None], jnp.asarray(row_of_worker),
             jnp.asarray(loads_w))
         self._rounds_done += 1
+        realized = float(np.asarray(weights).sum())
+        self.realized_k_history.append(realized)
+        if self.spec.deadline is not None:
+            blown = (float(t_done) > self.spec.deadline
+                     if self._dl_close is None else realized < self.spec.k)
+            self.rounds_missed += int(blown)
         if self.scheduler is not None:
             if self.censored:
                 # a real master only sees messages that beat the deadline
@@ -300,6 +359,9 @@ class StragglerAggregator:
                                        t_done=float(t_done))
             else:
                 self.scheduler.observe(np.asarray(t1))
+            if self.spec.deadline_policy == "reissue":
+                # undelivered tasks get re-gather priority next round
+                self.scheduler.set_need(~np.asarray(delivered))
         return weights, t_done
 
     def combine(self, slot_grads: PyTree, weights: Array) -> PyTree:
@@ -311,10 +373,15 @@ class StragglerAggregator:
         with per-slot sends that is k almost surely (eq. 61 exactly), but a
         reduced message budget makes arrival ties structural — a message can
         deliver more distinct tasks than the target still missing — and the
-        unbiased scaling then divides by however many arrived."""
+        unbiased scaling then divides by however many arrived.  A round
+        that realized *nothing* (every arrival fault-censored past the
+        deadline) yields a zero gradient instead of 0/0 NaN."""
+        den_raw = weights.sum()
+        den = jnp.where(den_raw > 0, den_raw, 1.0)
+
         def _one(g):
             w = weights.reshape(weights.shape + (1,) * (g.ndim - 2))
-            return (g * w).sum(axis=(0, 1)) / weights.sum()
+            return (g * w).sum(axis=(0, 1)) / den
         return jax.tree_util.tree_map(_one, slot_grads)
 
     def expected_completion(self, key: Array | int = 0, trials: int = 4096,
@@ -347,6 +414,9 @@ class StragglerAggregator:
             kw = dict(feedback_beta=self.scheduler.beta,
                       coverage_gamma=self.scheduler.gamma,
                       censored_feedback=self.censored)
+        if self.spec.deadline is not None:
+            kw.update(deadline=self.spec.deadline,
+                      deadline_policy=self.spec.deadline_policy)
         res = montecarlo.sweep_rounds(
             [spec], self.process, self.spec.n, rounds=rounds, k=self.spec.k,
             trials=trials, seed=_seed_of(key), **kw)

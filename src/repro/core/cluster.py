@@ -68,6 +68,9 @@ __all__ = [
     "DelayProcess", "IIDProcess", "MarkovRegimeProcess", "AR1Process",
     "as_process", "heterogeneous_scales", "ec2_cluster",
     "message_comm_delays",
+    "FaultProcess", "SpotPreemptionProcess", "NetworkPartitionProcess",
+    "RackFailureProcess", "MessageLossProcess", "DiurnalLoadProcess",
+    "FAULT_SCENARIOS", "make_scenario",
 ]
 
 Array = jax.Array
@@ -244,6 +247,261 @@ class AR1Process(DelayProcess):
         f = jnp.exp(x - 0.5 * self.sigma ** 2)[..., None]
         f = f * _scale_column(self.worker_scale, n)
         return x, T1 * f, T2 * f
+
+
+def _split_each(keys: Array) -> Tuple[Array, Array]:
+    """Split each per-trial key into (base, fault) streams.  Wrapping a
+    process in a ``FaultProcess`` therefore changes the base draws (the
+    base sees a child key), but draws stay chunk-invariant and identical
+    across schemes — the CRN convention the engine relies on."""
+    def two(kk):
+        return tuple(jax.random.split(kk, 2))
+    return jax.vmap(two)(keys)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultProcess(DelayProcess):
+    """Composable failure overlay on any base ``DelayProcess``.
+
+    Faults are modeled in-band: a killed/unreachable worker's delays are
+    ``+inf``, so its results simply never arrive (arrival = +inf through
+    ``message_arrival_times`` and the winner-mask paths).  The wrapper
+    keeps the ``DelayProcess`` init/step protocol — state is the pytree
+    ``(base_state, fault_state)`` and each per-trial key is split into a
+    base stream and a fault stream — so any scenario stacks on any base
+    process (and scenarios stack on each other, e.g. message loss on top
+    of preemption).
+
+    Subclasses implement ``fault_init(keys, n)`` and
+    ``fault_step(fstate, keys, n, r, T1, T2) -> (fstate, T1, T2)``.
+    """
+    base: DelayProcess = dataclasses.field(default_factory=IIDProcess)
+
+    def fault_init(self, keys: Array, n: int) -> State:
+        return ()
+
+    def fault_step(self, fstate: State, keys: Array, n: int, r: int,
+                   T1: Array, T2: Array) -> Tuple[State, Array, Array]:
+        raise NotImplementedError
+
+    def init(self, keys, n):
+        kb, kf = _split_each(keys)
+        return (self.base.init(kb, n), self.fault_init(kf, n))
+
+    def init_trials(self, keys, trial_ids, n):
+        kb, kf = _split_each(keys)
+        return (self.base.init_trials(kb, trial_ids, n),
+                self.fault_init(kf, n))
+
+    def check_rounds(self, rounds):
+        self.base.check_rounds(rounds)
+
+    def step(self, state, keys, n, r):
+        bstate, fstate = state
+        kb, kf = _split_each(keys)
+        bstate, T1, T2 = self.base.step(bstate, kb, n, r)
+        fstate, T1, T2 = self.fault_step(fstate, kf, n, r, T1, T2)
+        return (bstate, fstate), T1, T2
+
+
+@dataclasses.dataclass(frozen=True)
+class SpotPreemptionProcess(FaultProcess):
+    """Spot-instance preemption: each worker dies with probability
+    ``kill_p`` per round and, once dead, respawns with probability
+    ``respawn_p`` per round (geometric kill/respawn holding times).  A
+    dead worker's compute delays are +inf for the round — nothing it was
+    assigned ever arrives.  ``kill_p = 0`` recovers the base process."""
+    kill_p: float = 0.05
+    respawn_p: float = 0.3
+
+    def __post_init__(self):
+        for nm in ("kill_p", "respawn_p"):
+            v = getattr(self, nm)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{nm} must be in [0, 1], got {v}")
+
+    def fault_init(self, keys, n):
+        return jnp.ones((keys.shape[0], n), bool)    # everyone starts alive
+
+    def fault_step(self, fstate, keys, n, r, T1, T2):
+        alive = fstate
+        u = jax.vmap(lambda kk: jax.random.uniform(kk, (n,)))(keys)
+        # advance the alive chain first (same convention as the regime
+        # chain): the round reflects the post-transition liveness
+        alive = jnp.where(alive, u >= self.kill_p, u < self.respawn_p)
+        dead = ~alive[..., None]
+        return alive, jnp.where(dead, jnp.inf, T1), T2
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkPartitionProcess(FaultProcess):
+    """Network partition: a fixed worker subset's *communication* delays
+    are +inf for a regime-length round window ``[start, start + length)``
+    — the partitioned workers keep computing but their results cannot be
+    delivered until the partition heals."""
+    workers: tuple = (0,)
+    start: int = 2
+    length: int = 5
+
+    def __post_init__(self):
+        if not self.workers:
+            raise ValueError("partition needs a non-empty worker subset")
+        if min(self.workers) < 0:
+            raise ValueError(f"negative worker index in {self.workers}")
+        if self.start < 0 or self.length <= 0:
+            raise ValueError(
+                f"need start >= 0 and length > 0, got start={self.start} "
+                f"length={self.length}")
+
+    def fault_init(self, keys, n):
+        if max(self.workers) >= n:
+            raise ValueError(
+                f"partition workers {self.workers} out of range for n={n}")
+        return jnp.zeros((), jnp.int32)          # round counter
+
+    def fault_step(self, fstate, keys, n, r, T1, T2):
+        del keys
+        t = fstate
+        cut = (t >= self.start) & (t < self.start + self.length)
+        member = jnp.asarray(np.isin(np.arange(n), self.workers))
+        gone = cut & member[None, :, None]
+        return t + 1, T1, jnp.where(gone, jnp.inf, T2)
+
+
+@dataclasses.dataclass(frozen=True)
+class RackFailureProcess(FaultProcess):
+    """Correlated rack failure: workers are grouped into racks
+    (``racks[i]`` = rack id of worker i) and the kill/respawn chain runs
+    per *rack* — all workers of a failed rack die simultaneously and
+    respawn together.  With one worker per rack this degenerates to
+    ``SpotPreemptionProcess``."""
+    racks: tuple = (0,)
+    kill_p: float = 0.02
+    respawn_p: float = 0.5
+
+    def __post_init__(self):
+        if not self.racks:
+            raise ValueError("racks must map every worker to a rack id")
+        if min(self.racks) < 0:
+            raise ValueError(f"negative rack id in {self.racks}")
+        for nm in ("kill_p", "respawn_p"):
+            v = getattr(self, nm)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{nm} must be in [0, 1], got {v}")
+
+    def fault_init(self, keys, n):
+        if len(self.racks) != n:
+            raise ValueError(
+                f"racks maps {len(self.racks)} workers, cluster has {n}")
+        n_racks = max(self.racks) + 1
+        return jnp.ones((keys.shape[0], n_racks), bool)
+
+    def fault_step(self, fstate, keys, n, r, T1, T2):
+        alive = fstate
+        u = jax.vmap(lambda kk: jax.random.uniform(kk, (max(self.racks) + 1,))
+                     )(keys)
+        alive = jnp.where(alive, u >= self.kill_p, u < self.respawn_p)
+        rack_of = jnp.asarray(np.asarray(self.racks, np.int32))
+        dead_w = ~alive[:, rack_of][..., None]    # (trials, n, 1)
+        return alive, jnp.where(dead_w, jnp.inf, T1), T2
+
+
+@dataclasses.dataclass(frozen=True)
+class MessageLossProcess(FaultProcess):
+    """Per-slot Bernoulli message loss.  Each (worker, slot) result's
+    uplink drops independently with probability ``p_drop``.  Without
+    retry the dropped message is simply never delivered (``T2 = +inf``);
+    with ``retry_delay`` set, the sender re-sends after that backoff
+    until a send survives, so the message arrives late by
+    ``failures * retry_delay`` with geometrically distributed failure
+    count."""
+    p_drop: float = 0.1
+    retry_delay: float | None = None
+
+    def __post_init__(self):
+        if not 0.0 <= self.p_drop < 1.0:
+            raise ValueError(f"p_drop must be in [0, 1), got {self.p_drop}")
+        if self.retry_delay is not None and self.retry_delay <= 0:
+            raise ValueError(
+                f"retry_delay must be positive, got {self.retry_delay}")
+
+    def fault_step(self, fstate, keys, n, r, T1, T2):
+        u = jax.vmap(lambda kk: jax.random.uniform(kk, (n, r)))(keys)
+        if self.retry_delay is None:
+            return fstate, T1, jnp.where(u < self.p_drop, jnp.inf, T2)
+        if self.p_drop == 0.0:
+            return fstate, T1, T2
+        # inverse-CDF geometric: #failed sends before the first success
+        fails = jnp.floor(jnp.log(u) / np.log(self.p_drop))
+        return fstate, T1, T2 + fails * self.retry_delay
+
+
+@dataclasses.dataclass(frozen=True)
+class DiurnalLoadProcess(FaultProcess):
+    """Diurnal load swell: a shared sinusoidal multiplier on all delays,
+    cycling over ``period`` rounds between 1x and ``1 + amplitude``x —
+    the whole cluster slows together at "peak hours".  No worker dies;
+    this is the graceful end of the zoo (deadline pressure without
+    censoring)."""
+    period: int = 24
+    amplitude: float = 1.0
+    phase: float = 0.0
+
+    def __post_init__(self):
+        if self.period <= 0:
+            raise ValueError(f"period must be positive, got {self.period}")
+        if self.amplitude < 0:
+            raise ValueError(
+                f"amplitude must be >= 0, got {self.amplitude}")
+
+    def fault_init(self, keys, n):
+        del keys
+        return jnp.zeros((), jnp.int32)
+
+    def fault_step(self, fstate, keys, n, r, T1, T2):
+        del keys
+        t = fstate
+        ang = 2.0 * np.pi * (t.astype(jnp.float32) + self.phase) / self.period
+        f = 1.0 + self.amplitude * 0.5 * (1.0 - jnp.cos(ang))
+        return t + 1, T1 * f, T2 * f
+
+
+FAULT_SCENARIOS = ("preemption", "partition", "rack", "msgloss", "diurnal")
+
+
+def make_scenario(name: str, base, n: int, **overrides) -> FaultProcess:
+    """Build a named fault scenario over ``base`` (any delay source) with
+    cluster-size-derived defaults; ``overrides`` replace any scenario
+    field.  Scenarios: 'preemption' (spot kill/respawn), 'partition'
+    (n//3 workers unreachable for a round window), 'rack' (correlated
+    kills of n//3-sized racks), 'msgloss' (per-slot Bernoulli drop),
+    'diurnal' (sinusoidal cluster-wide load swell)."""
+    proc = as_process(base)
+    if name == "preemption":
+        kw = {"kill_p": 0.1, "respawn_p": 0.25}
+        kw.update(overrides)
+        return SpotPreemptionProcess(base=proc, **kw)
+    if name == "partition":
+        kw = {"workers": tuple(range(max(1, n // 3))),
+              "start": 2, "length": 6}
+        kw.update(overrides)
+        return NetworkPartitionProcess(base=proc, **kw)
+    if name == "rack":
+        size = max(2, n // 3)
+        kw = {"racks": tuple(i // size for i in range(n)),
+              "kill_p": 0.05, "respawn_p": 0.3}
+        kw.update(overrides)
+        return RackFailureProcess(base=proc, **kw)
+    if name == "msgloss":
+        kw = {"p_drop": 0.1, "retry_delay": None}
+        kw.update(overrides)
+        return MessageLossProcess(base=proc, **kw)
+    if name == "diurnal":
+        kw = {"period": 8, "amplitude": 2.0}
+        kw.update(overrides)
+        return DiurnalLoadProcess(base=proc, **kw)
+    raise ValueError(
+        f"unknown fault scenario {name!r}; choose from {FAULT_SCENARIOS}")
 
 
 def message_comm_delays(T2: Array, messages: int,

@@ -167,7 +167,8 @@ def lower_bound_time(s: Array, k: int) -> Array:
     return jnp.sort(sf, axis=-1)[..., k - 1]
 
 
-def first_k_distinct_mask(C: Array, s: Array, n: int, k: int
+def first_k_distinct_mask(C: Array, s: Array, n: int, k: int, *,
+                          deadline: float | None = None
                           ) -> Tuple[Array, Array]:
     """Which (worker, slot) results the master uses: the earliest copy of
     each of the k earliest-arriving distinct tasks.
@@ -183,13 +184,21 @@ def first_k_distinct_mask(C: Array, s: Array, n: int, k: int
     structural — the closing message can deliver more distinct tasks than
     were still missing — so ``weights`` may sum to more than ``k``; consumers
     normalize by the realized sum (see ``StragglerAggregator.combine``).
+
+    ``deadline`` caps the round (fault tolerance, see
+    ``cluster.FaultProcess``): the master closes at
+    ``min(t_done, deadline)`` and only results arrived by then win —
+    fewer than k when arrivals are late or censored to +inf, so a
+    fully-missed round has all-zero weights.
     """
     active = _static_active(C)             # static, before any jnp tracing
     tau = task_arrival_times(C, s, n)                    # (..., n)
-    return _winner_weights(jnp.asarray(C), s, tau, k, active)
+    return _winner_weights(jnp.asarray(C), s, tau, k, active,
+                           deadline=deadline)
 
 
-def winner_mask_gather(C: Array, plan: np.ndarray, s: Array, n: int, k: int
+def winner_mask_gather(C: Array, plan: np.ndarray, s: Array, n: int, k: int,
+                       *, deadline: float | None = None
                        ) -> Tuple[Array, Array]:
     """``first_k_distinct_mask`` with task arrivals computed through the
     fused engine's static gather layout (``task_gather_plan(C, n)``) instead
@@ -197,13 +206,21 @@ def winner_mask_gather(C: Array, plan: np.ndarray, s: Array, n: int, k: int
     (aggregator / train step hot paths)."""
     active = _static_active(C)             # static, before any jnp tracing
     tau = montecarlo.task_arrival_times_gather(plan, s)  # (..., n)
-    return _winner_weights(jnp.asarray(C), s, tau, k, active)
+    return _winner_weights(jnp.asarray(C), s, tau, k, active,
+                           deadline=deadline)
 
 
 def _winner_weights(C: Array, s: Array, tau: Array, k: int,
-                    active: np.ndarray | None) -> Tuple[Array, Array]:
+                    active: np.ndarray | None, *,
+                    deadline: float | None = None) -> Tuple[Array, Array]:
     t_done = completion_time(tau, k)                     # (...,)
-    selected = tau <= t_done[..., None]                  # (..., n) k tasks (a.s.)
+    if deadline is not None:
+        # close the round at the deadline with whatever has arrived —
+        # t_done stays finite even when fewer than k tasks ever arrive
+        t_done = jnp.minimum(t_done, jnp.asarray(deadline, tau.dtype))
+    # +inf-safe: a censored task (tau = +inf, fault-killed worker) must
+    # not be "selected" when t_done is itself +inf (inf <= inf is True)
+    selected = (tau <= t_done[..., None]) & jnp.isfinite(tau)
     # winner slots: slot arrival equals its task's earliest arrival
     tau_at_slot = tau[..., C]                            # (..., n_w, r)
     sel_at_slot = selected[..., C]                       # (..., n_w, r)

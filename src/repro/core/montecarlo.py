@@ -535,12 +535,19 @@ def _flat_window_key(sp: SchemeSpec) -> tuple:
 
 
 def _build_eval(specs: Tuple[SchemeSpec, ...], n: int, r_max: int,
-                ks: Optional[int]):
+                ks: Optional[int], deadline: Optional[float] = None):
     """Static-scheme evaluator: slot arrivals ``s`` (chunk, n, r_max) ->
     {name: (chunk, L)}.  All static structure (gather plans, thresholds,
     slot windows, ragged-load masks, per-message overhead offsets) is baked
     in at trace time; shared by the single-round sampler and the
-    rounds-axis scan body."""
+    rounds-axis scan body.
+
+    With ``deadline`` set the evaluator additionally returns per-scheme
+    arrival counts ``{name: (by_deadline, deliverable)}`` (each (chunk,)
+    float32): how many distinct results arrive by the deadline, and how
+    many would *ever* arrive (finite arrival — fault censoring makes this
+    < n).  Coded schemes decode all-or-nothing, so their counts are n or
+    0; the oracle bound counts slot arrivals capped at n."""
     to_specs = tuple(sp for sp in specs if sp.kind == "to")
     plan_stack = off_stack = None
     if to_specs:
@@ -591,8 +598,12 @@ def _build_eval(specs: Tuple[SchemeSpec, ...], n: int, r_max: int,
             win = win + jnp.asarray(off_flat[idx])
         return win
 
-    def eval_fn(s: Array) -> Dict[str, Array]:
+    DL = None if deadline is None else jnp.float32(deadline)
+    nf = jnp.float32(n)
+
+    def eval_fn(s: Array):
         out: Dict[str, Array] = {}
+        cnts: Dict[str, Tuple[Array, Array]] = {}
 
         if to_specs:
             tau = task_arrival_times_gather(plan_stack, s, off_stack)
@@ -600,13 +611,26 @@ def _build_eval(specs: Tuple[SchemeSpec, ...], n: int, r_max: int,
                 stat = jnp.sort(tau, axis=-1)                # all k at once
             else:
                 stat = _smallest(tau, ks)[..., -1:]          # k-th only
+            if DL is not None:
+                by_s = (tau <= DL).sum(-1).astype(jnp.float32)
+                dv_s = jnp.isfinite(tau).sum(-1).astype(jnp.float32)
             for i, sp in enumerate(to_specs):
                 out[sp.name] = stat[:, i]
+                if DL is not None:
+                    cnts[sp.name] = (by_s[:, i], dv_s[:, i])
 
         flat_stats = {}
+        flat_cnts = {}
         for key, w in flat_width.items():
             win = _flat_window(flat_spec[key], s)
             flat_stats[key] = _smallest(win, w)      # (chunk, w) ascending
+            if DL is not None:
+                # oracle: first however-many received are distinct, so the
+                # realized count is the slot-arrival count capped at n
+                flat_cnts[key] = (
+                    jnp.minimum((win <= DL).sum(-1), n).astype(jnp.float32),
+                    jnp.minimum(jnp.isfinite(win).sum(-1),
+                                n).astype(jnp.float32))
 
         for sp in specs:
             if sp.kind == "tau":
@@ -616,6 +640,8 @@ def _build_eval(specs: Tuple[SchemeSpec, ...], n: int, r_max: int,
             elif sp.kind == "lb":
                 fs = flat_stats[_flat_window_key(sp)]
                 out[sp.name] = fs[..., :n] if ks is None else fs[..., ks - 1:ks]
+                if DL is not None:
+                    cnts[sp.name] = flat_cnts[_flat_window_key(sp)]
             elif sp.kind == "pc":
                 r = sp.load
                 tw = s[..., r - 1]         # = sum_j T1[..., :r] + T2[..., r-1]
@@ -628,7 +654,15 @@ def _build_eval(specs: Tuple[SchemeSpec, ...], n: int, r_max: int,
                 th = _pcmm_threshold(n)
                 out[sp.name] = flat_stats[_flat_window_key(sp)][
                     ..., th - 1:th]
-        return out
+            if DL is not None and sp.kind in ("pc", "pcmm"):
+                # coded decode is all-or-nothing: the full gradient (all n
+                # tasks' worth) or nothing usable by the deadline
+                v0 = out[sp.name][..., -1]
+                cnts[sp.name] = (jnp.where(v0 <= DL, nf, 0.0),
+                                 jnp.where(jnp.isfinite(v0), nf, 0.0))
+        if DL is None:
+            return out
+        return out, cnts
 
     return eval_fn
 
@@ -945,7 +979,9 @@ def task_arrival_samples(C, model, *, trials: int = 10000, seed: int = 0,
 
 def _build_rounds_fn(specs: Tuple[SchemeSpec, ...], process, n: int,
                      r_max: int, ks: int, rounds: int, beta: float,
-                     gamma: float, censored: bool):
+                     gamma: float, censored: bool,
+                     deadline: Optional[float] = None,
+                     policy: str = "wait"):
     """Multi-round evaluator: (chunk, 2) per-trial keys + (chunk,) global
     trial ids -> {name: (rounds, chunk)} per-round completion times.
 
@@ -968,13 +1004,47 @@ def _build_rounds_fn(specs: Tuple[SchemeSpec, ...], process, n: int,
     start at +inf, i.e. sorted slowest until they first deliver).  The
     uncensored path keeps the original idealized full-delay feedback,
     bit-identical to the pre-censoring engine.
+
+    ``deadline`` caps every round (fault tolerance): the returned stream
+    becomes ``(times, aux)`` with per-scheme degradation streams
+    (``realized``, ``missed``, ``stale`` — each (rounds, chunk)):
+
+    * ``wait``          — times unchanged (a round missing k arrivals
+                          forever reports +inf); ``missed`` marks rounds
+                          whose completion exceeded the deadline.
+    * ``close_partial`` — the round closes at ``min(t_done, deadline)``
+                          with however many distinct results arrived;
+                          ``realized`` is that count (capped at k),
+                          ``stale`` the per-round missing gradient mass
+                          ``(k - realized) / k``.
+    * ``reissue``       — like ``close_partial``, but undelivered tasks
+                          accumulate in a per-trial backlog that adaptive
+                          schemes re-gather first next round (the greedy
+                          assignment's ``need`` priority); ``stale`` is
+                          ``backlog / k`` (how much re-gathering is owed).
+
+    With ``deadline=None`` the aux dict is empty and every number is
+    bit-identical to the pre-deadline engine.
     """
     from . import scheduling                    # adaptive assignment
 
     static_specs = tuple(sp for sp in specs if sp.kind != "adaptive")
     ad_specs = tuple(sp for sp in specs if sp.kind == "adaptive")
-    eval_fn = (_build_eval(static_specs, n, r_max, ks)
+    eval_fn = (_build_eval(static_specs, n, r_max, ks, deadline)
                if static_specs else None)
+    DL = None if deadline is None else jnp.float32(deadline)
+    reissue = deadline is not None and policy == "reissue"
+    kf = jnp.float32(ks)
+    nf = jnp.float32(n)
+
+    def _policy_close(v, by, dv):
+        """Apply the fallback policy to one scheme's raw completion ``v``
+        (chunk,) given its arrival counts: returns (v_eff, realized,
+        missed)."""
+        if policy == "wait":
+            return v, jnp.minimum(dv, kf), (~(v <= DL)).astype(jnp.float32)
+        return (jnp.minimum(v, DL), jnp.minimum(by, kf),
+                (by < kf).astype(jnp.float32))
     ad_mats = tuple(sp.matrix() for sp in ad_specs)
     # rebalance specs mask slots dynamically, so their plan must keep every
     # slot of the dense base; static ragged specs bake their masks in.
@@ -988,16 +1058,17 @@ def _build_rounds_fn(specs: Tuple[SchemeSpec, ...], process, n: int,
     ad_l0 = tuple(np.asarray(sp.loads, np.int64) if sp.rebalance else None
                   for sp in ad_specs)
 
-    def _assign_and_score(i, est, s):
+    def _assign_and_score(i, est, s, need=None):
         """Greedy row re-assignment (and, for rebalance specs, greedy load
         re-allocation) from ``est`` feedback, then this scheme's completion
         time on the permuted (and masked) slot grid.  Returns
-        ``(w_of_row, loads_w, val)`` with ``loads_w`` None for fixed-load
-        specs."""
+        ``(w_of_row, loads_w, val, tau)`` with ``loads_w`` None for
+        fixed-load specs.  ``need`` (reissue policy) prioritizes rows
+        holding backlogged tasks in the greedy pick order."""
         sp, plan, Cb = ad_specs[i], ad_plans[i], ad_mats[i]
         # assignment uses feedback from *previous* rounds only.
         w_of_row = scheduling.greedy_row_assignment_batch(
-            Cb, est, gamma=gamma)               # (chunk, n)
+            Cb, est, gamma=gamma, need=need)    # (chunk, n)
         # row p's slots are executed by worker w_of_row[p]: permute the
         # worker axis, then the static gather plan applies.
         s2 = jnp.take_along_axis(s, w_of_row[..., None], axis=1)
@@ -1012,7 +1083,7 @@ def _build_rounds_fn(specs: Tuple[SchemeSpec, ...], process, n: int,
             s2 = jnp.where(jnp.arange(s2.shape[-1])[None, None, :]
                            < l_row[..., None], s2, INF)
         tau = task_arrival_times_gather(plan, s2)
-        return w_of_row, loads_w, _smallest(tau, ks)[..., -1:]
+        return w_of_row, loads_w, _smallest(tau, ks)[..., -1:], tau
 
     def _worker_arrivals(i, w_of_row, loads_w, s):
         """Worker-major per-message arrivals feeding the (censored)
@@ -1044,54 +1115,134 @@ def _build_rounds_fn(specs: Tuple[SchemeSpec, ...], process, n: int,
             arr_w = jnp.where(act, arr_w, INF)
         return arr_w
 
+    def _eval_static(s):
+        """Static-scheme raw stats + (with a deadline) arrival counts."""
+        if eval_fn is None:
+            return {}, {}
+        if DL is None:
+            return dict(eval_fn(s)), {}
+        out, cnts = eval_fn(s)
+        return dict(out), cnts
+
+    def _degrade(nm, v, by, dv, backs, new_backs):
+        """Policy application + degradation streams for one scheme.
+        Returns (v_eff, aux | None); updates ``new_backs`` under reissue."""
+        if DL is None:
+            return v, None
+        v_eff, realized, missed = _policy_close(v, by, dv)
+        if reissue:
+            nb = jnp.clip(backs[nm] + kf - jnp.minimum(by, kf), 0.0, nf)
+            new_backs[nm] = nb
+            stale = nb / kf
+        else:
+            stale = (kf - realized) / kf
+        return v_eff, {"realized": realized, "missed": missed,
+                       "stale": stale}
+
     def rounds_fn(keys: Array, tids: Array):
         chunk = keys.shape[0]
         # one subkey per (trial, round) + one for the process init, derived
         # from the per-trial key so everything stays chunk-invariant.
         allk = jax.vmap(lambda kk: jax.random.split(kk, rounds + 1))(keys)
         pstate = process.init_trials(allk[:, 0], tids, n)
+        backs0 = ({sp.name: jnp.zeros((chunk,), jnp.float32)
+                   for sp in specs} if reissue else {})
+        needs0 = ({sp.name: jnp.zeros((chunk, n), jnp.float32)
+                   for sp in ad_specs} if reissue else {})
+
+        def _adaptive_round(i, est, s, needs, backs, new_backs, new_needs,
+                            times, aux):
+            """One adaptive scheme's round: assign (+ reissue priority),
+            score, apply the deadline policy, update the reissue backlog /
+            need.  Returns what the censored feedback update needs."""
+            sp = ad_specs[i]
+            need = needs.get(sp.name) if reissue else None
+            w_of_row, loads_w, val, tau = _assign_and_score(i, est, s, need)
+            v = val[..., 0]
+            if DL is None:
+                by = dv = None
+            else:
+                by = (tau <= DL).sum(-1).astype(jnp.float32)
+                dv = jnp.isfinite(tau).sum(-1).astype(jnp.float32)
+            v_eff, a = _degrade(sp.name, v, by, dv, backs, new_backs)
+            if a is not None:
+                aux[sp.name] = a
+            if reissue:
+                # undelivered tasks become next round's re-gather priority
+                # (only while a backlog is actually owed)
+                delivered = (tau <= v_eff[..., None]) & jnp.isfinite(tau)
+                owed = (new_backs[sp.name] > 0)[..., None]
+                new_needs[sp.name] = (~delivered & owed).astype(jnp.float32)
+            times[sp.name] = v_eff
+            return w_of_row, loads_w, v_eff
 
         if censored:
             def body(carry, kr):
-                pstate, ests = carry
+                pstate, ests, needs, backs = carry
                 pstate, T1, T2 = process.step(pstate, kr, n, r_max)
                 s = jnp.cumsum(T1, axis=-1) + T2    # eq. (1), per round
-                out = dict(eval_fn(s)) if eval_fn is not None else {}
+                out, cnts = _eval_static(s)
+                times, aux = {}, {}
+                new_backs, new_needs = {}, {}
+                for sp in static_specs:
+                    by, dv = cnts.get(sp.name, (None, None))
+                    v_eff, a = _degrade(sp.name, out[sp.name][..., 0],
+                                        by, dv, backs, new_backs)
+                    times[sp.name] = v_eff
+                    if a is not None:
+                        aux[sp.name] = a
                 new_e = []
                 for i, (sp, Cb, est) in enumerate(zip(ad_specs, ad_mats,
                                                       ests)):
-                    w_of_row, loads_w, val = _assign_and_score(i, est, s)
-                    out[sp.name] = val
+                    w_of_row, loads_w, v_eff = _adaptive_round(
+                        i, est, s, needs, backs, new_backs, new_needs,
+                        times, aux)
                     r_sp = Cb.shape[1]
                     # shared censored update: only messages that beat this
-                    # scheme's own round completion are observed.
+                    # scheme's own round close are observed (the deadline
+                    # policies censor at the effective close).
                     arr_w = _worker_arrivals(i, w_of_row, loads_w, s)
                     new_e.append(scheduling.censored_feedback_update(
-                        est, T1[..., :r_sp], arr_w, val[..., 0], beta=beta))
-                return (pstate, tuple(new_e)), {
-                    nm: v[..., 0] for nm, v in out.items()}
+                        est, T1[..., :r_sp], arr_w, v_eff, beta=beta))
+                return (pstate, tuple(new_e), new_needs, new_backs), (times,
+                                                                      aux)
 
             init = (pstate,
                     tuple(jnp.full((chunk, n), INF, jnp.float32)
-                          for _ in ad_specs))
+                          for _ in ad_specs), needs0, backs0)
         else:
             def body(carry, kr):
-                pstate, est, t = carry
+                pstate, est, t, needs, backs = carry
                 pstate, T1, T2 = process.step(pstate, kr, n, r_max)
                 s = jnp.cumsum(T1, axis=-1) + T2    # eq. (1), per round
-                out = dict(eval_fn(s)) if eval_fn is not None else {}
-                for i, sp in enumerate(ad_specs):
-                    _, _, out[sp.name] = _assign_and_score(i, est, s)
+                out, cnts = _eval_static(s)
+                times, aux = {}, {}
+                new_backs, new_needs = {}, {}
+                for sp in static_specs:
+                    by, dv = cnts.get(sp.name, (None, None))
+                    v_eff, a = _degrade(sp.name, out[sp.name][..., 0],
+                                        by, dv, backs, new_backs)
+                    times[sp.name] = v_eff
+                    if a is not None:
+                        aux[sp.name] = a
+                for i in range(len(ad_specs)):
+                    _adaptive_round(i, est, s, needs, backs, new_backs,
+                                    new_needs, times, aux)
                 obs = T1.mean(axis=-1)              # per-worker compute time
-                est = jnp.where(t == 0, obs, beta * est + (1.0 - beta) * obs)
-                return (pstate, est, t + 1), {nm: v[..., 0] for nm, v in
-                                              out.items()}
+                # +inf-safe: a fault-censored worker's +inf observation
+                # keeps the previous estimate (EMAing it would pin est at
+                # +inf forever); bit-identical when all delays are finite.
+                fin = jnp.isfinite(obs)
+                upd = jnp.where(t == 0, obs, beta * est + (1.0 - beta) * obs)
+                est = jnp.where(fin, upd, est)
+                return (pstate, est, t + 1, new_needs, new_backs), (times,
+                                                                    aux)
 
             init = (pstate, jnp.ones((chunk, n), jnp.float32),
-                    jnp.zeros((), jnp.int32))
+                    jnp.zeros((), jnp.int32), needs0, backs0)
 
         _, ys = jax.lax.scan(body, init, jnp.swapaxes(allk[:, 1:], 0, 1))
-        return ys                                   # {name: (rounds, chunk)}
+        return ys             # ({name: (rounds, chunk)}, {name: aux dicts})
 
     return rounds_fn
 
@@ -1101,7 +1252,8 @@ _ROUNDS_CACHE: dict = {}
 
 def _get_rounds_exec(specs: Tuple[SchemeSpec, ...], process, n: int,
                      r_max: int, ks: int, rounds: int, beta: float,
-                     gamma: float, censored: bool):
+                     gamma: float, censored: bool,
+                     deadline: Optional[float] = None, policy: str = "wait"):
     from .trace import TraceProcess
     cache_key = None
     if isinstance(process, TraceProcess):
@@ -1112,7 +1264,7 @@ def _get_rounds_exec(specs: Tuple[SchemeSpec, ...], process, n: int,
     else:
         try:
             cache_key = (specs, process, n, r_max, ks, rounds, beta, gamma,
-                         censored)
+                         censored, deadline, policy)
             hit = _ROUNDS_CACHE.get(cache_key)
             if hit is not None:
                 return hit
@@ -1120,28 +1272,52 @@ def _get_rounds_exec(specs: Tuple[SchemeSpec, ...], process, n: int,
             cache_key = None
 
     rounds_fn = _build_rounds_fn(specs, process, n, r_max, ks, rounds,
-                                 beta, gamma, censored)
+                                 beta, gamma, censored, deadline, policy)
+    has_dl = deadline is not None
+
+    def _acc_aux(ac, aux):
+        """Accumulate one chunk's degradation streams: sums over the trial
+        axis plus the realized-k histogram (one_hot over 0..k)."""
+        new_ac = {}
+        for nm, a in aux.items():
+            hist = jax.nn.one_hot(a["realized"].astype(jnp.int32),
+                                  ks + 1).sum(axis=1)
+            d = ac[nm]
+            new_ac[nm] = {
+                "realized": d["realized"] + a["realized"].sum(axis=1),
+                "missed": d["missed"] + a["missed"].sum(axis=1),
+                "stale": d["stale"] + a["stale"].sum(axis=1),
+                "khist": d["khist"] + hist,
+            }
+        return new_ac
 
     def sums_scan(keys3, tids3):    # (nc, chunk, 2/-) -> per-round moments
         zeros = {sp.name: jnp.zeros((rounds,), jnp.float32) for sp in specs}
-        init = tuple({k2: v for k2, v in zeros.items()} for _ in range(4))
+        init4 = tuple({k2: v for k2, v in zeros.items()} for _ in range(4))
+        ac0 = ({sp.name: {"realized": jnp.zeros((rounds,), jnp.float32),
+                          "missed": jnp.zeros((rounds,), jnp.float32),
+                          "stale": jnp.zeros((rounds,), jnp.float32),
+                          "khist": jnp.zeros((rounds, ks + 1), jnp.float32)}
+                for sp in specs} if has_dl else {})
 
         def body(carry, kt):
-            ys = rounds_fn(*kt)
-            s0, s1, c0, c1 = carry
+            ys, aux = rounds_fn(*kt)
+            s0, s1, c0, c1, ac = carry
             cum = {k2: jnp.cumsum(v, axis=0) for k2, v in ys.items()}
             s0 = {k2: s0[k2] + ys[k2].sum(axis=1) for k2 in s0}
             s1 = {k2: s1[k2] + jnp.square(ys[k2]).sum(axis=1) for k2 in s1}
             c0 = {k2: c0[k2] + cum[k2].sum(axis=1) for k2 in c0}
             c1 = {k2: c1[k2] + jnp.square(cum[k2]).sum(axis=1) for k2 in c1}
-            return (s0, s1, c0, c1), None
+            if has_dl:
+                ac = _acc_aux(ac, aux)
+            return (s0, s1, c0, c1, ac), None
 
-        carry, _ = jax.lax.scan(body, init, (keys3, tids3))
+        carry, _ = jax.lax.scan(body, init4 + (ac0,), (keys3, tids3))
         return carry
 
     def samples_scan(keys3, tids3):  # -> {name: (nc, R, chunk)}
         def body(carry, kt):
-            return carry, rounds_fn(*kt)
+            return carry, rounds_fn(*kt)[0]    # times only (aux is DCE'd)
 
         _, ys = jax.lax.scan(body, None, (keys3, tids3))
         return ys
@@ -1221,13 +1397,28 @@ def _check_rounds_args(specs, n, ks, rounds):
     return specs
 
 
+_POLICIES = ("wait", "close_partial", "reissue")
+
+
 def _run_rounds(specs, process, n, *, rounds: int, k: int, trials: int,
                 seed: int, chunk: Optional[int], beta: float, gamma: float,
-                censored: bool, want_samples: bool, record: bool = False):
+                censored: bool, want_samples: bool, record: bool = False,
+                deadline: Optional[float] = None,
+                deadline_policy: str = "wait"):
     from .cluster import as_process
     process = as_process(process)
     process.check_rounds(rounds)
     specs = _check_rounds_args(specs, n, k, rounds)
+    if deadline_policy not in _POLICIES:
+        raise ValueError(f"unknown deadline policy {deadline_policy!r}; "
+                         f"choose from {_POLICIES}")
+    if deadline is not None:
+        deadline = float(deadline)
+        if not deadline > 0:
+            raise ValueError(f"deadline must be > 0, got {deadline}")
+    elif deadline_policy != "wait":
+        raise ValueError(f"deadline_policy={deadline_policy!r} needs a "
+                         f"deadline")
     r_max = max(sp.load for sp in specs)
     chunk = trials if chunk is None else max(1, min(int(chunk), trials))
 
@@ -1246,11 +1437,13 @@ def _run_rounds(specs, process, n, *, rounds: int, k: int, trials: int,
         out = _run_rounds(specs, TraceProcess(trace), n, rounds=rounds,
                           k=k, trials=trials, seed=seed, chunk=chunk,
                           beta=beta, gamma=gamma, censored=censored,
-                          want_samples=want_samples)
+                          want_samples=want_samples, deadline=deadline,
+                          deadline_policy=deadline_policy)
         return out[:-1] + (trace,)
 
     jrounds, jsums, jsamples = _get_rounds_exec(
-        specs, process, n, r_max, k, rounds, beta, gamma, censored)
+        specs, process, n, r_max, k, rounds, beta, gamma, censored,
+        deadline, deadline_policy)
 
     keys = jax.random.split(jax.random.PRNGKey(seed), trials)
     tids = jnp.arange(trials, dtype=jnp.int32)
@@ -1265,20 +1458,33 @@ def _run_rounds(specs, process, n, *, rounds: int, k: int, trials: int,
         parts = {nm: [jnp.moveaxis(v, 1, -1).reshape(main, rounds)]
                  for nm, v in ys.items()}       # (nc, R, chunk)->(trials, R)
         if main < trials:
-            for nm, v in jrounds(tail_keys, tail_tids).items():
+            for nm, v in jrounds(tail_keys, tail_tids)[0].items():
                 parts[nm].append(v.T)           # (R, tail) -> (tail, R)
         samples = {nm: jnp.concatenate(vs, axis=0) if len(vs) > 1 else vs[0]
                    for nm, vs in parts.items()}
         return samples, None
 
-    s0, s1, c0, c1 = jsums(main_keys, main_tids)
+    s0, s1, c0, c1, ac = jsums(main_keys, main_tids)
     if main < trials:
-        ys = jrounds(tail_keys, tail_tids)
+        ys, auxT = jrounds(tail_keys, tail_tids)
         cum = {k2: jnp.cumsum(v, axis=0) for k2, v in ys.items()}
         s0 = {k2: s0[k2] + ys[k2].sum(axis=1) for k2 in s0}
         s1 = {k2: s1[k2] + jnp.square(ys[k2]).sum(axis=1) for k2 in s1}
         c0 = {k2: c0[k2] + cum[k2].sum(axis=1) for k2 in c0}
         c1 = {k2: c1[k2] + jnp.square(cum[k2]).sum(axis=1) for k2 in c1}
+        if deadline is not None:
+            for nm, a in auxT.items():
+                r = np.asarray(a["realized"])             # (rounds, tail)
+                hist = np.stack([np.bincount(row.astype(np.int64),
+                                             minlength=k + 1)
+                                 for row in np.minimum(r, k)])
+                d = {k2: np.asarray(v) for k2, v in ac[nm].items()}
+                d["realized"] = d["realized"] + r.sum(axis=1)
+                d["missed"] = d["missed"] + np.asarray(
+                    a["missed"]).sum(axis=1)
+                d["stale"] = d["stale"] + np.asarray(a["stale"]).sum(axis=1)
+                d["khist"] = d["khist"] + hist
+                ac[nm] = d
 
     def moments(sum_, sumsq):
         mu = np.asarray(sum_) / trials
@@ -1289,7 +1495,14 @@ def _run_rounds(specs, process, n, *, rounds: int, k: int, trials: int,
     for nm in s0:
         per_round[nm], stderr[nm] = moments(s0[nm], s1[nm])
         wallclock[nm], wc_stderr[nm] = moments(c0[nm], c1[nm])
-    return per_round, stderr, wallclock, wc_stderr, None
+    degr = None
+    if deadline is not None:
+        degr = {nm: {"realized_k": np.asarray(d["realized"]) / trials,
+                     "missed": np.asarray(d["missed"]) / trials,
+                     "stale": np.asarray(d["stale"]) / trials,
+                     "khist": np.asarray(d["khist"]) / trials}
+                for nm, d in ac.items()}
+    return per_round, stderr, wallclock, wc_stderr, degr, None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -1302,7 +1515,16 @@ class RoundsResult:
     ``stderr`` / ``wallclock_stderr`` — matching MC standard errors;
     ``trace``            — the realized delay tables of the whole sweep
                            (a ``repro.core.trace.DelayTrace``) when run
-                           with ``record_trace=True``, else None.
+                           with ``record_trace=True``, else None;
+    ``degradation``      — per-scheme graceful-degradation streams when run
+                           with a ``deadline``: ``realized_k`` (rounds,)
+                           mean distinct results credited per round,
+                           ``missed`` (rounds,) fraction of trials whose
+                           round missed the deadline, ``stale`` (rounds,)
+                           mean missing-gradient fraction (reissue: owed
+                           backlog / k), ``khist`` (rounds, k+1) the
+                           realized-k distribution.  None without a
+                           deadline.
     """
     per_round: Dict[str, np.ndarray]
     stderr: Dict[str, np.ndarray]
@@ -1313,6 +1535,9 @@ class RoundsResult:
     n: int
     k: int
     trace: Optional[object] = None
+    deadline: Optional[float] = None
+    deadline_policy: str = "wait"
+    degradation: Optional[Dict[str, Dict[str, np.ndarray]]] = None
 
     def _get(self, d: Dict[str, np.ndarray], name: str) -> np.ndarray:
         if name not in d:
@@ -1328,13 +1553,37 @@ class RoundsResult:
         """Mean wall-clock of the whole R-round run."""
         return float(self._get(self.wallclock, name)[-1])
 
+    def _degr(self, name: str, key: str) -> np.ndarray:
+        if self.degradation is None:
+            raise ValueError("no degradation metrics: run sweep_rounds "
+                             "with a deadline")
+        return self._get(self.degradation, name)[key]
+
+    def realized_k(self, name: str) -> np.ndarray:
+        """(rounds,) mean distinct results credited per round (<= k)."""
+        return self._degr(name, "realized_k")
+
+    def missed_fraction(self, name: str) -> np.ndarray:
+        """(rounds,) fraction of trials whose round missed the deadline."""
+        return self._degr(name, "missed")
+
+    def stale_fraction(self, name: str) -> np.ndarray:
+        """(rounds,) mean missing-gradient fraction per round."""
+        return self._degr(name, "stale")
+
+    def khist(self, name: str) -> np.ndarray:
+        """(rounds, k+1) realized-k distribution (rows sum to 1)."""
+        return self._degr(name, "khist")
+
 
 def sweep_rounds(specs: Sequence[SchemeSpec], process, n: int, *,
                  rounds: int, k: int, trials: int = 20000, seed: int = 0,
                  chunk: Optional[int] = None, feedback_beta: float = 0.7,
                  coverage_gamma: float = 0.5,
                  censored_feedback: bool = False,
-                 record_trace: bool = False) -> RoundsResult:
+                 record_trace: bool = False,
+                 deadline: Optional[float] = None,
+                 deadline_policy: str = "wait") -> RoundsResult:
     """Evaluate every scheme over ``rounds`` consecutive rounds of ONE
     shared ``DelayProcess`` realization per trial.
 
@@ -1365,15 +1614,26 @@ def sweep_rounds(specs: Sequence[SchemeSpec], process, n: int, *,
              bit-exactly (a fused sampling run may differ by float32 ulps
              — XLA contracts a process's arithmetic into eq. (1) with
              FMAs).  Memory: O(rounds * trials * n * r_max) floats x2.
+    deadline: cap every round at this wall-clock budget (fault tolerance —
+             with fault-injecting processes a round may otherwise never
+             reach k results).  Enables the ``degradation`` metrics.
+    deadline_policy: what happens at the deadline — ``"wait"`` (report the
+             true completion, just flag the miss), ``"close_partial"``
+             (close the round with whatever arrived), or ``"reissue"``
+             (close partial + adaptive schemes re-gather the undelivered
+             tasks first next round).
     """
-    per_round, stderr, wallclock, wc_stderr, trace = _run_rounds(
+    per_round, stderr, wallclock, wc_stderr, degr, trace = _run_rounds(
         specs, process, n, rounds=rounds, k=k, trials=trials, seed=seed,
         chunk=chunk, beta=feedback_beta, gamma=coverage_gamma,
         censored=censored_feedback, want_samples=False,
-        record=record_trace)
+        record=record_trace, deadline=deadline,
+        deadline_policy=deadline_policy)
     return RoundsResult(per_round=per_round, stderr=stderr,
                         wallclock=wallclock, wallclock_stderr=wc_stderr,
-                        trials=trials, rounds=rounds, n=n, k=k, trace=trace)
+                        trials=trials, rounds=rounds, n=n, k=k, trace=trace,
+                        deadline=deadline, deadline_policy=deadline_policy,
+                        degradation=degr)
 
 
 def trajectory_samples(spec: SchemeSpec, process, n: int, *, rounds: int,
@@ -1382,17 +1642,23 @@ def trajectory_samples(spec: SchemeSpec, process, n: int, *, rounds: int,
                        feedback_beta: float = 0.7,
                        coverage_gamma: float = 0.5,
                        censored_feedback: bool = False,
-                       record_trace: bool = False):
+                       record_trace: bool = False,
+                       deadline: Optional[float] = None,
+                       deadline_policy: str = "wait"):
     """Per-trial completion-time trajectories for one scheme: shape
     ``(trials, rounds)``; ``jnp.cumsum(..., axis=1)`` gives per-trial
     wall-clock curves.  With ``record_trace=True`` returns
     ``(trajectories, DelayTrace)`` — the realized delay tables alongside
-    the samples."""
+    the samples.  With a ``deadline`` the trajectories are the *effective*
+    round closes under ``deadline_policy`` (capped at the deadline for
+    ``close_partial``/``reissue``)."""
     samples, trace = _run_rounds([spec], process, n, rounds=rounds, k=k,
                                  trials=trials, seed=seed, chunk=chunk,
                                  beta=feedback_beta, gamma=coverage_gamma,
                                  censored=censored_feedback,
-                                 want_samples=True, record=record_trace)
+                                 want_samples=True, record=record_trace,
+                                 deadline=deadline,
+                                 deadline_policy=deadline_policy)
     if record_trace:
         return samples[spec.name], trace
     return samples[spec.name]

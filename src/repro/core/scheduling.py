@@ -284,7 +284,7 @@ def to_matrix(name: str, n: int, r: int | None = None, **kw) -> np.ndarray:
 # --------------------- adaptive row assignment -------------------------------
 
 def greedy_row_assignment(C: np.ndarray, speed_est=None, *,
-                          gamma: float = 0.5) -> np.ndarray:
+                          gamma: float = 0.5, need=None) -> np.ndarray:
     """Assign workers to the rows of base TO matrix ``C`` from estimated
     per-worker delays: fastest workers pick first, each taking the row whose
     leading slots cover the least-covered tasks.
@@ -306,6 +306,11 @@ def greedy_row_assignment(C: np.ndarray, speed_est=None, *,
     is ``C_eff[w] = C[row_of_worker[w]]`` with ``row_of_worker`` the inverse
     permutation (``AdaptiveScheduler.matrix`` builds it).
 
+    ``need`` (optional, length-n bool over *tasks*) marks tasks whose
+    previous-round results were never delivered (reissue deadline policy):
+    rows containing a needed task are picked before any row without one,
+    so the fastest workers re-gather the backlog first.
+
     This delegates to the batched JAX implementation (one source of truth),
     so training loops and the fused rounds engine pick identical rows for
     identical feedback.
@@ -316,9 +321,17 @@ def greedy_row_assignment(C: np.ndarray, speed_est=None, *,
            else np.asarray(speed_est, np.float32))
     if est.shape != (n,):
         raise ValueError(f"speed_est must have shape ({n},), got {est.shape}")
-    fn = _jitted_greedy(tuple(tuple(int(v) for v in row) for row in C),
-                        float(gamma))
-    return np.asarray(fn(jnp.asarray(est)[None])[0], np.int64)
+    C_tup = tuple(tuple(int(v) for v in row) for row in C)
+    if need is None:
+        fn = _jitted_greedy(C_tup, float(gamma))
+        return np.asarray(fn(jnp.asarray(est)[None])[0], np.int64)
+    nd = np.asarray(need)
+    if nd.shape != (n,):
+        raise ValueError(f"need must have shape ({n},), got {nd.shape}")
+    fn = _jitted_greedy_need(C_tup, float(gamma))
+    return np.asarray(
+        fn(jnp.asarray(est)[None],
+           jnp.asarray(nd, jnp.float32)[None])[0], np.int64)
 
 
 @functools.lru_cache(maxsize=None)
@@ -328,13 +341,26 @@ def _jitted_greedy(C_tup: tuple, gamma: float):
                                                            gamma=gamma))
 
 
+@functools.lru_cache(maxsize=None)
+def _jitted_greedy_need(C_tup: tuple, gamma: float):
+    C = np.asarray(C_tup, np.int64)
+    return jax.jit(lambda est, need: greedy_row_assignment_batch(
+        C, est, gamma=gamma, need=need))
+
+
 def greedy_row_assignment_batch(C: np.ndarray, est: jax.Array, *,
-                                gamma: float = 0.5) -> jax.Array:
+                                gamma: float = 0.5,
+                                need: jax.Array | None = None) -> jax.Array:
     """Batched JAX twin of ``greedy_row_assignment``: ``est`` has shape
     (..., n); returns ``worker_of_row`` of the same shape (int32).  Pure and
     jit/scan-friendly (``C`` is baked in at trace time); used per-trial
     inside the fused rounds engine.  ``C`` may be ragged: ``MASKED`` slots
-    contribute no coverage (their discount is statically zeroed)."""
+    contribute no coverage (their discount is statically zeroed).
+
+    ``need`` (traced, (..., n) or (n,) over tasks, nonzero = needed) is the
+    reissue priority: while any un-taken row still holds a needed task, the
+    picker's argmin runs over those rows only.  ``need=None`` (and an
+    all-zero ``need``) keeps the established pick order bit-exactly."""
     C = np.asarray(C)
     n, r = C.shape
     # ragged rows: masked slots neither score nor add coverage.  For dense
@@ -342,18 +368,26 @@ def greedy_row_assignment_batch(C: np.ndarray, est: jax.Array, *,
     # before (bit-identical arithmetic).
     active = C != MASKED
     Cj = jnp.asarray(np.where(active, C, 0))
+    act_f = jnp.asarray(active, jnp.float32)
     disc_np = (gamma ** np.arange(r))[None, :] * active
     disc_rows = jnp.asarray(disc_np, jnp.float32)            # (n, r)
     big = jnp.float32(np.finfo(np.float32).max)
 
-    def one(e):                                      # e (n,)
+    def one(e, nd):                                  # e (n,), nd (n,) | None
         order = jnp.argsort(e)                       # stable; fastest first
+        row_need = (None if nd is None
+                    else (nd[Cj] * act_f).max(-1) > 0)       # (n,) rows
 
         def pick(carry, w):
             cov, taken, w_of_row = carry
             scores = (disc_rows * cov[Cj]).sum(-1)
             scores = jnp.where(taken, big, scores)
-            p = jnp.argmin(scores)                   # ties -> lowest row
+            if row_need is None:
+                p = jnp.argmin(scores)               # ties -> lowest row
+            else:
+                pref = jnp.where(row_need & ~taken, scores, big)
+                p = jnp.where((pref < big).any(),
+                              jnp.argmin(pref), jnp.argmin(scores))
             w_of_row = w_of_row.at[p].set(w.astype(jnp.int32))
             taken = taken.at[p].set(True)
             add = disc_rows[p] / jnp.maximum(e[w], 1e-30)
@@ -367,7 +401,12 @@ def greedy_row_assignment_batch(C: np.ndarray, est: jax.Array, *,
 
     batch = est.shape[:-1]
     flat = est.reshape((-1, n))
-    out = jax.vmap(one)(flat)
+    if need is None:
+        out = jax.vmap(lambda e: one(e, None))(flat)
+    else:
+        ndf = jnp.broadcast_to(jnp.asarray(need, jnp.float32),
+                               est.shape).reshape((-1, n))
+        out = jax.vmap(one)(flat, ndf)
     return out.reshape(batch + (n,))
 
 
@@ -499,12 +538,19 @@ def censored_feedback_update(est: jax.Array, t1: jax.Array,
     workers get their masked-mean compute delay (replace on first
     observation, EMA with weight ``beta`` on history after), silent workers
     keep their previous estimate.  Returns the new ``est``.
+
+    +inf-safe: a censored slot (fault-killed worker, ``arrivals`` and/or
+    ``t1`` = +inf) is never observed, even when ``t_done`` is itself +inf
+    (``wait`` policy with fewer than k survivors) — ``inf <= inf`` must
+    not count as an arrival, and masked +inf delays must not poison the
+    observed mean with ``inf * 0 = nan``.
     """
     td = jnp.asarray(t_done)[..., None, None]
-    mobs = jnp.asarray(arrivals) <= td
+    arr = jnp.asarray(arrivals)
+    mobs = (arr <= td) & jnp.isfinite(arr)
     cnt = mobs.sum(axis=-1)
     obs = jnp.where(cnt > 0,
-                    (jnp.asarray(t1) * mobs).sum(axis=-1)
+                    jnp.where(mobs, jnp.asarray(t1), 0.0).sum(axis=-1)
                     / jnp.maximum(cnt, 1), 0.0)
     est = jnp.asarray(est)
     seen = jnp.isfinite(est)
@@ -536,11 +582,24 @@ class AdaptiveScheduler:
     ``sum(loads)``: slow workers shed slots to fast ones.  ``loads()``
     returns the coming round's per-worker loads; ``matrix()`` masks the
     effective schedule accordingly.
+
+    Crash awareness (fault tolerance, see ``cluster.FaultProcess``): with
+    ``dead_after`` set, a worker that has delivered nothing for that many
+    consecutive observed rounds is presumed *dead* — its estimate is
+    forced to +inf so the greedy assignment hands it the least-covering
+    rows (survivors repair coverage by taking the high-coverage rows
+    first) and, under ``rebalance``, it sheds load down to ``min_load``.
+    With ``target_k`` set, ``matrix()`` additionally verifies the
+    surviving assignment still spans >= ``target_k`` distinct tasks and
+    raises a ``ValueError`` naming the shortfall when degradation cannot
+    be graceful.  ``set_need`` feeds the reissue deadline policy: tasks
+    whose results were never delivered get re-gathered first next round.
     """
 
     def __init__(self, C: np.ndarray, *, beta: float = 0.7,
                  gamma: float = 0.5, loads=None, rebalance: bool = False,
-                 min_load: int = 1):
+                 min_load: int = 1, dead_after: int | None = None,
+                 target_k: int | None = None):
         self.C = np.asarray(C)
         self.rebalance = bool(rebalance)
         if self.rebalance:
@@ -560,14 +619,52 @@ class AdaptiveScheduler:
         self.min_load = int(min_load)
         self.beta = float(beta)
         self.gamma = float(gamma)
+        if dead_after is not None and dead_after < 1:
+            raise ValueError(f"dead_after must be >= 1, got {dead_after}")
+        if target_k is not None and not 1 <= target_k <= self.C.shape[0]:
+            raise ValueError(f"target_k must be in [1, {self.C.shape[0]}], "
+                             f"got {target_k}")
+        self.dead_after = dead_after
+        self.target_k = target_k
         self.est: np.ndarray | None = None
+        self.silent = np.zeros(self.C.shape[0], np.int64)
+        self._need: np.ndarray | None = None
         self._assignment: np.ndarray | None = None   # valid until observe()
         self._loads: np.ndarray | None = None
 
+    def dead_workers(self) -> np.ndarray:
+        """Bool (n,): workers presumed dead — nothing delivered for
+        ``dead_after`` consecutive observed rounds (all-False when crash
+        detection is off)."""
+        if self.dead_after is None:
+            return np.zeros(self.C.shape[0], bool)
+        return self.silent >= self.dead_after
+
+    def _effective_est(self) -> np.ndarray | None:
+        """Feedback estimates with presumed-dead workers censored to +inf
+        (ranked slowest: they pick rows last and shed load first)."""
+        dead = self.dead_workers()
+        if not dead.any():
+            return self.est
+        base = (np.ones(self.C.shape[0], np.float64) if self.est is None
+                else self.est)
+        return np.where(dead, np.inf, base)
+
+    def set_need(self, need) -> None:
+        """Mark tasks to re-gather first next round (reissue policy):
+        ``need`` is a length-n bool over tasks (or None to clear)."""
+        nd = None if need is None else np.asarray(need, bool)
+        if nd is not None and nd.shape != (self.C.shape[0],):
+            raise ValueError(f"need must have shape ({self.C.shape[0]},), "
+                             f"got {nd.shape}")
+        self._need = nd if nd is not None and nd.any() else None
+        self._assignment = None
+
     def worker_of_row(self) -> np.ndarray:
         if self._assignment is None:
-            self._assignment = greedy_row_assignment(self.C, self.est,
-                                                     gamma=self.gamma)
+            self._assignment = greedy_row_assignment(
+                self.C, self._effective_est(), gamma=self.gamma,
+                need=self._need)
         return self._assignment
 
     def row_of_worker(self) -> np.ndarray:
@@ -583,7 +680,7 @@ class AdaptiveScheduler:
         if not self.rebalance:
             return self.base_loads[self.row_of_worker()]
         if self._loads is None:
-            est = self.est
+            est = self._effective_est()
             if est is None:
                 est = np.full(self.C.shape[0], np.inf)
             self._loads = greedy_load_rebalance(
@@ -593,10 +690,31 @@ class AdaptiveScheduler:
 
     def matrix(self) -> np.ndarray:
         """The effective TO matrix for the coming round: row ``w`` is what
-        worker ``w`` executes (``MASKED`` beyond worker ``w``'s load)."""
+        worker ``w`` executes (``MASKED`` beyond worker ``w``'s load).
+
+        With crash detection on (``dead_after`` + ``target_k``), verifies
+        the rows held by surviving workers still span >= ``target_k``
+        distinct tasks — the greedy repair (dead workers rank slowest, so
+        survivors picked the high-coverage rows first) usually guarantees
+        this, but when too many workers died for any assignment to cover
+        k tasks, degradation cannot be graceful and this raises instead
+        of letting a round hang forever."""
         M = self.C[self.row_of_worker()]
         if self.rebalance:
-            return mask_matrix_loads(M, self.loads())
+            M = mask_matrix_loads(M, self.loads())
+        dead = self.dead_workers()
+        if self.target_k is not None and dead.any():
+            alive_rows = M[~dead]
+            act = alive_rows[alive_rows != MASKED]
+            covered = int(np.unique(act).size)
+            if covered < self.target_k:
+                raise ValueError(
+                    f"graceful degradation impossible: {int(dead.sum())} of "
+                    f"{self.C.shape[0]} workers presumed dead (no delivery "
+                    f"for {self.dead_after} consecutive rounds) and the "
+                    f"surviving assignment covers only {covered} distinct "
+                    f"tasks < k={self.target_k}; lower k, raise the "
+                    f"per-worker load, or raise dead_after")
         return M
 
     def observe(self, t1, *, arrivals=None, t_done=None) -> None:
@@ -619,23 +737,36 @@ class AdaptiveScheduler:
             self.est = np.asarray(censored_feedback_update(
                 jnp.asarray(est, jnp.float32), obs, arr, float(t_done),
                 beta=self.beta), np.float64)
+            delivered = (np.isfinite(arr) & (arr <= float(t_done))).any(-1)
+            self.silent = np.where(delivered, 0, self.silent + 1)
             self._assignment = None
             self._loads = None
             return
         if obs.ndim == 2:
-            obs = obs.mean(-1)
+            # +inf slot delays (fault-censored) must not drag the row mean
+            # to inf — average the finite slots only
+            fin = np.isfinite(obs)
+            cnt = fin.sum(-1)
+            obs = np.where(cnt > 0,
+                           np.where(fin, obs, 0.0).sum(-1)
+                           / np.maximum(cnt, 1), np.inf)
         if obs.shape != (n,):
             raise ValueError(f"feedback must be (n,) or (n, r) for "
                              f"n={n}; got {obs.shape}")
+        delivered = np.isfinite(obs)
         if self.est is None:
-            self.est = obs
+            # never-delivering workers start at the +inf censored sentinel
+            self.est = np.where(delivered, obs, np.inf)
         else:
             # replace-on-first for workers still at the +inf never-observed
             # sentinel (left there by earlier censored rounds) — EMAing the
-            # sentinel would pin them at +inf forever.
+            # sentinel would pin them at +inf forever.  A +inf observation
+            # (dead worker this round) keeps the previous estimate.
             seen = np.isfinite(self.est)
-            self.est = np.where(seen,
-                                self.beta * self.est + (1.0 - self.beta) * obs,
-                                obs)
+            upd = np.where(seen,
+                           self.beta * self.est + (1.0 - self.beta) * obs,
+                           obs)
+            self.est = np.where(delivered, upd, self.est)
+        self.silent = np.where(delivered, 0, self.silent + 1)
         self._assignment = None
         self._loads = None

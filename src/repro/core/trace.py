@@ -66,7 +66,7 @@ __all__ = [
     "calibrate_trace",
 ]
 
-TRACE_FORMAT_VERSION = 1
+TRACE_FORMAT_VERSION = 2       # v2: +inf delay cells (fault censoring)
 
 _PAD_ROUNDS = ("error", "cycle", "hold")
 _PAD_AXES = ("error", "cycle")
@@ -104,8 +104,11 @@ class DelayTrace:
                              f"{T2.shape}")
         if 0 in T1.shape:
             raise ValueError(f"empty trace: shape {T1.shape}")
-        if not (np.isfinite(T1).all() and np.isfinite(T2).all()):
-            raise ValueError("trace delays must be finite")
+        # +inf is a legal cell value — fault censoring (a preempted /
+        # partitioned worker's result never arrives); NaN and non-positive
+        # (including -inf) delays are corrupt.
+        if np.isnan(T1).any() or np.isnan(T2).any():
+            raise ValueError("trace delays must not be NaN")
         if (T1 <= 0).any() or (T2 <= 0).any():
             raise ValueError("trace delays must be positive")
         T1.setflags(write=False)
@@ -151,13 +154,25 @@ class DelayTrace:
     def r(self) -> int:
         return self.T1.shape[3]
 
+    @property
+    def has_faults(self) -> bool:
+        """True when any cell is +inf (fault-censored arrivals)."""
+        return bool(np.isinf(self.T1).any() or np.isinf(self.T2).any())
+
     def header(self) -> dict:
-        """The JSON header written by ``save_trace``."""
-        return {"format": "repro.delay_trace",
-                "version": TRACE_FORMAT_VERSION,
-                "rounds": self.rounds, "trials": self.trials,
-                "n": self.n, "r": self.r, "dtype": "float32",
-                "digest": self._digest, "meta": self.meta}
+        """The JSON header written by ``save_trace``.  Fault-free traces
+        keep writing format version 1, so files produced without fault
+        injection stay readable by pre-fault readers; +inf cells bump the
+        header to version 2 (which those readers correctly reject)."""
+        faulty = self.has_faults
+        hdr = {"format": "repro.delay_trace",
+               "version": 2 if faulty else 1,
+               "rounds": self.rounds, "trials": self.trials,
+               "n": self.n, "r": self.r, "dtype": "float32",
+               "digest": self._digest, "meta": self.meta}
+        if faulty:
+            hdr["faults"] = True
+        return hdr
 
 
 # --------------------------- on-disk format ----------------------------------
@@ -406,7 +421,10 @@ def _lag1(m: np.ndarray) -> float:
     if m.shape[0] < 2:
         return 0.0
     a, b = m[:-1].reshape(-1), m[1:].reshape(-1)
-    if a.std() == 0 or b.std() == 0:
+    ok = np.isfinite(a) & np.isfinite(b)     # drop fault-censored pairs
+    if not ok.all():
+        a, b = a[ok], b[ok]
+    if a.size < 2 or a.std() == 0 or b.std() == 0:
         return 0.0
     return float(np.corrcoef(a, b)[0, 1])
 
@@ -440,43 +458,72 @@ def calibrate_trace(trace: DelayTrace, *, min_slow_factor: float = 1.5,
     T1 = np.asarray(trace.T1, np.float64)            # (R, t, n, r)
     T2 = np.asarray(trace.T2, np.float64)
     R, _, n, r = T1.shape
-    m1 = T1.mean(axis=3)                             # (R, t, n) round means
+    # fault censoring: +inf cells are "never arrived", not delays — mask
+    # them out of every estimator (a cell is valid when it has at least
+    # one finite slot; its round mean uses the finite slots only).  For a
+    # finite trace cnt == r everywhere and this is the plain slot mean.
+    fin1 = np.isfinite(T1)                           # (R, t, n, r)
+    cnt = fin1.sum(axis=3)                           # (R, t, n)
+    if not cnt.any():
+        raise ValueError("cannot calibrate: every cell of the trace is "
+                         "fault-censored (+inf)")
+    m1 = np.where(cnt > 0,
+                  np.where(fin1, T1, 0.0).sum(axis=3) / np.maximum(cnt, 1),
+                  np.nan)                            # (R, t, n) round means
+    valid = cnt > 0                                  # (R, t, n)
     X = np.log(m1)
-    Xc = X - np.median(X, axis=(0, 1), keepdims=True)    # de-heterogenize
+    Xc = X - np.nanmedian(X, axis=(0, 1), keepdims=True)  # de-heterogenize
 
-    thr = _otsu_threshold(Xc.reshape(-1))
-    slow_mask = Xc > thr                             # (R, t, n)
-    frac = float(slow_mask.mean())
-    sep = (np.exp(Xc[slow_mask].mean() - Xc[~slow_mask].mean())
+    thr = _otsu_threshold(Xc[valid].reshape(-1))
+    slow_mask = valid & (Xc > thr)                   # (R, t, n)
+    fast = valid & ~slow_mask
+    n_valid = int(valid.sum())
+    frac = float(slow_mask.sum() / n_valid)
+    sep = (np.exp(Xc[slow_mask].mean() - Xc[fast].mean())
            if 0.0 < frac < 1.0 else 1.0)
 
     if not 0.0 < frac < 1.0 or sep < min_slow_factor:
         # no credible slow regime: pure heterogeneous scales
         slow_mask = np.zeros_like(slow_mask)
+        fast = valid
         p_slow, slow, persistence = 0.0, 1.0, 0.0
     else:
         p_slow = frac
         slow = float(sep)
-        n_fast = int((~slow_mask[:-1]).sum())
-        n_slow = int(slow_mask[:-1].sum())
-        p_fs = (float((~slow_mask[:-1] & slow_mask[1:]).sum()) / n_fast
-                if n_fast else 0.0)
-        p_sf = (float((slow_mask[:-1] & ~slow_mask[1:]).sum()) / n_slow
-                if n_slow else 0.0)
+        # regime transitions counted on valid consecutive cell pairs only
+        pair = valid[:-1] & valid[1:]
+        n_fast = int((~slow_mask[:-1] & pair).sum())
+        n_slow = int((slow_mask[:-1] & pair).sum())
+        p_fs = (float((~slow_mask[:-1] & slow_mask[1:] & pair).sum())
+                / n_fast if n_fast else 0.0)
+        p_sf = (float((slow_mask[:-1] & ~slow_mask[1:] & pair).sum())
+                / n_slow if n_slow else 0.0)
         persistence = float(np.clip(1.0 - p_fs - p_sf, 0.0, 1.0))
 
-    fast = ~slow_mask                                # (R, t, n)
     # per-worker scale MLE on the fast regime (mean ratio), geometric mean 1
-    wm = np.array([m1[..., i][fast[..., i]].mean() if fast[..., i].any()
-                   else m1[..., i].mean() for i in range(n)])
+    glob = m1[fast].mean() if fast.any() else m1[valid].mean()
+
+    def _wmean(i):
+        if fast[..., i].any():
+            return m1[..., i][fast[..., i]].mean()
+        if valid[..., i].any():
+            return m1[..., i][valid[..., i]].mean()
+        return glob          # worker never delivered: neutral scale source
+
+    wm = np.array([_wmean(i) for i in range(n)])
     scale = wm / np.exp(np.log(wm).mean())
     scale = tuple(float(v) for v in scale)
 
-    # de-scaled fast-cell samples -> truncated-Gaussian base refit
+    # de-scaled fast-cell samples -> truncated-Gaussian base refit (slot
+    # level: drop individually censored slots, e.g. message-loss T2 cells)
     f1 = T1 / np.asarray(scale)[None, None, :, None]
     f2 = T2 / np.asarray(scale)[None, None, :, None]
     sel = np.broadcast_to(fast[..., None], T1.shape)
-    s1, s2 = f1[sel], f2[sel]
+    s1 = f1[sel & np.isfinite(f1)]
+    s2 = f2[sel & np.isfinite(f2)]
+    if s1.size == 0 or s2.size == 0:
+        raise ValueError("cannot calibrate: no finite fast-regime delay "
+                         "samples survive the fault masking")
 
     def _tg(s):
         mu, sd = float(s.mean()), float(max(s.std(), 1e-12 * s.mean()))
@@ -500,13 +547,18 @@ def calibrate_trace(trace: DelayTrace, *, min_slow_factor: float = 1.5,
     def rel(a, b):
         return float(abs(a - b) / max(abs(b), 1e-30))
 
-    worker_err = max(rel(F1[..., i, :].mean(), T1[..., i, :].mean())
-                     for i in range(n))
+    def fmean(x):                    # finite-cell mean (fault-censor safe)
+        f = x[np.isfinite(x)]
+        return f.mean() if f.size else np.nan
+
+    worker_err = max(rel(F1[..., i, :].mean(), fmean(T1[..., i, :]))
+                     for i in range(n)
+                     if np.isfinite(T1[..., i, :]).any())
     report = CalibrationReport(
         process=process, worker_scale=scale, p_slow=float(p_slow),
         persistence=float(persistence), slow=float(slow),
-        mean_rel_err=rel(F1.mean(), T1.mean()),
-        comm_mean_rel_err=rel(F2.mean(), T2.mean()),
+        mean_rel_err=rel(F1.mean(), fmean(T1)),
+        comm_mean_rel_err=rel(F2.mean(), fmean(T2)),
         worker_mean_rel_err=worker_err,
         lag1_trace=_lag1(m1), lag1_fit=_lag1(F1.mean(axis=3)))
     return report

@@ -29,8 +29,9 @@ import numpy as np
 
 from ..configs import ARCH_IDS, get_config
 from ..core import (AR1Process, AdaptiveScheduler, BimodalStragglerDelays,
-                    DelayTrace, RoundSpec, TraceProcess, ec2_cluster,
-                    heterogeneous_scales, load_trace, save_trace, scenario1)
+                    DelayTrace, FAULT_SCENARIOS, RoundSpec, TraceProcess,
+                    ec2_cluster, heterogeneous_scales, load_trace,
+                    make_scenario, save_trace, scenario1)
 from ..data import TaskPartition, lm_task_batches
 from ..models import num_params
 from ..optim import adamw, cosine_schedule
@@ -62,26 +63,37 @@ def build_cluster(args, seeds):
     """The round delay source: an i.i.d. model, a stateful process, or a
     recorded trace replay.  ``--straggle`` layers i.i.d. bimodal slowdowns
     on the base model in the parametric modes (stateful processes add
-    their own regime chain on top)."""
+    their own regime chain on top); ``--scenario`` overlays a named fault
+    scenario (spot preemption, partition, ...) on whatever source was
+    built."""
     if args.cluster == "trace":
         if not args.trace:
             raise SystemExit("--cluster trace needs --trace PATH "
                              "(a file written by --log-delays or "
                              "repro.core.save_trace)")
-        return TraceProcess(load_trace(args.trace),
-                            pad_rounds=args.trace_pad)
+        delay = TraceProcess(load_trace(args.trace),
+                             pad_rounds=args.trace_pad)
+        if getattr(args, "scenario", "none") != "none":
+            raise SystemExit("--scenario cannot overlay a trace replay: "
+                             "the recording already realized its faults")
+        return delay
     base = (BimodalStragglerDelays(p_straggle=0.3, slow=8.0)
             if args.straggle else scenario1())
     if args.cluster == "iid":
-        return base
-    if args.cluster == "markov":
-        return ec2_cluster(args.n, spread=args.spread, p_slow=args.p_slow,
-                           persistence=args.persistence, slow=args.slow,
-                           base=base, seed=seeds["cluster_seed"])
-    return AR1Process(base=base,
-                      worker_scale=heterogeneous_scales(
-                          args.n, args.spread, seed=seeds["cluster_seed"]),
-                      rho=args.persistence, sigma=0.4)
+        delay = base
+    elif args.cluster == "markov":
+        delay = ec2_cluster(args.n, spread=args.spread, p_slow=args.p_slow,
+                            persistence=args.persistence, slow=args.slow,
+                            base=base, seed=seeds["cluster_seed"])
+    else:
+        delay = AR1Process(base=base,
+                           worker_scale=heterogeneous_scales(
+                               args.n, args.spread,
+                               seed=seeds["cluster_seed"]),
+                           rho=args.persistence, sigma=0.4)
+    if getattr(args, "scenario", "none") != "none":
+        delay = make_scenario(args.scenario, delay, args.n)
+    return delay
 
 
 def main(argv=None):
@@ -137,6 +149,25 @@ def main(argv=None):
                          "slot) compute/comm delays and write them to "
                          "PATH as a versioned delay trace (replayable "
                          "via --cluster trace)")
+    ap.add_argument("--scenario", default="none",
+                    choices=("none",) + FAULT_SCENARIOS,
+                    help="overlay a named fault scenario (workers die / "
+                         "partition / drop messages) on the parametric "
+                         "cluster modes")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-round wall-clock cap (seconds, virtual); "
+                         "under faults a round may otherwise never reach "
+                         "k results")
+    ap.add_argument("--deadline-policy", default="wait",
+                    choices=("wait", "close_partial", "reissue"),
+                    help="fallback at the deadline: report+flag the miss, "
+                         "close with whatever arrived, or close partial "
+                         "and re-gather undelivered tasks next round "
+                         "(reissue needs --adaptive)")
+    ap.add_argument("--dead-after", type=int, default=None,
+                    help="adaptive crash detection: presume a worker dead "
+                         "(shed its load) after this many consecutive "
+                         "rounds with no delivery")
     ap.add_argument("--persistence", type=float, default=0.9,
                     help="straggler persistence (markov) / AR(1) rho")
     ap.add_argument("--spread", type=float, default=2.0,
@@ -175,10 +206,18 @@ def main(argv=None):
         os.makedirs(out_dir, exist_ok=True)
         if not os.access(out_dir, os.W_OK):
             raise SystemExit(f"--log-delays: cannot write to {out_dir}")
+    if args.deadline_policy == "reissue" and not args.adaptive:
+        raise SystemExit("--deadline-policy reissue needs --adaptive "
+                         "(re-gathering undelivered tasks is a scheduling "
+                         "decision)")
+    if args.dead_after is not None and not args.adaptive:
+        raise SystemExit("--dead-after needs --adaptive (crash detection "
+                         "feeds the adaptive scheduler)")
     seeds = derive_seeds(args.seed)
     spec = RoundSpec(n=args.n, r=args.n if args.schedule == "ra" else args.r,
                      k=args.k, schedule=args.schedule, loads=loads,
-                     seed=seeds["schedule_seed"])
+                     seed=seeds["schedule_seed"], deadline=args.deadline,
+                     deadline_policy=args.deadline_policy)
     delay = build_cluster(args, seeds)
     part = TaskPartition(n=args.n, global_batch=args.batch,
                          seq_len=args.seq, vocab=cfg.vocab_size,
@@ -198,7 +237,9 @@ def main(argv=None):
               f"round n={spec.n} r={spec.r} k={spec.k} {args.schedule}"
               f"{'+adaptive' if args.adaptive else ''}"
               f"{' loads=' + ','.join(map(str, loads)) if loads else ''} | "
-              f"cluster {args.cluster}")
+              f"cluster {args.cluster}"
+              f"{' +' + args.scenario if args.scenario != 'none' else ''}"
+              f"{f' deadline={args.deadline:g}/{args.deadline_policy}' if args.deadline is not None else ''}")
         if isinstance(delay, TraceProcess) and start:
             # resumed runs keep their remaining steps aligned with the
             # trace rounds those steps originally consumed
@@ -208,9 +249,14 @@ def main(argv=None):
             delay.check_rounds(args.steps - start)
         step_fn = jax.jit(make_straggler_train_step(cfg, opt, spec, delay))
         base_C = spec.to_matrix()
-        sched = AdaptiveScheduler(base_C) if args.adaptive else None
+        sched_kw = ({} if args.dead_after is None
+                    else {"dead_after": args.dead_after, "target_k": spec.k})
+        sched = (AdaptiveScheduler(base_C, **sched_kw)
+                 if args.adaptive else None)
         cluster = None
         vclock = 0.0
+        missed = 0
+        realized_sum = 0.0
         logged_t1, logged_t2 = [], []
         t0 = time.time()
         for i in range(start, args.steps):
@@ -223,16 +269,26 @@ def main(argv=None):
                 jax.random.fold_in(seeds["delay_root"], i), cluster, row)
             if sched is not None:
                 sched.observe(np.asarray(m["worker_t1"]))
+                if args.deadline_policy == "reissue":
+                    # undelivered tasks get re-gather priority next round
+                    sched.set_need(~np.asarray(m["delivered_tasks"]))
             if args.log_delays:
                 logged_t1.append(np.asarray(m["slot_t1"]))
                 logged_t2.append(np.asarray(m["slot_t2"]))
             vclock += float(m["completion_time"])
+            missed += int(bool(m["deadline_missed"]))
+            realized_sum += float(m["realized_k"])
             if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
                 print(f"step {i:5d}  loss {float(m['loss']):.4f}  "
                       f"gnorm {float(m['grad_norm']):.3f}  "
                       f"vclock {vclock * 1e3:.2f} ms")
-        print(f"done: {args.steps - start} rounds in "
+        rounds_run = args.steps - start
+        print(f"done: {rounds_run} rounds in "
               f"{time.time() - t0:.1f}s wall, {vclock * 1e3:.2f} ms virtual")
+        if args.deadline is not None and rounds_run:
+            print(f"deadline {args.deadline:g}s/{args.deadline_policy}: "
+                  f"{missed}/{rounds_run} rounds missed, mean realized k "
+                  f"{realized_sum / rounds_run:.2f}/{spec.k}")
         if args.log_delays and logged_t1:
             trace = DelayTrace(
                 np.stack(logged_t1), np.stack(logged_t2),

@@ -36,7 +36,7 @@ from ..core.cluster import as_process
 from ..core.completion import (apply_row_layout, message_arrival_times,
                                message_slot_layout, row_layout_is_identity,
                                winner_mask_gather)
-from ..core.montecarlo import task_gather_plan
+from ..core.montecarlo import task_arrival_times_gather, task_gather_plan
 from ..core.scheduling import loads_of_matrix
 from ..models import ModelConfig, forward, init_params
 from ..optim import Optimizer, clip_by_global_norm
@@ -154,6 +154,11 @@ def make_straggler_train_step(cfg: ModelConfig, opt: Optimizer,
     process = as_process(delay)
     base_C = round_spec.to_matrix()          # ragged rows carry their loads
     plan = task_gather_plan(base_C, n)
+    # a closing deadline (close_partial / reissue) caps the winner
+    # selection at the deadline; "wait" keeps the true completion time
+    dl_close = (round_spec.deadline
+                if round_spec.deadline is not None
+                and round_spec.deadline_policy != "wait" else None)
     # static per-row message layout: closing-slot remap, per-message
     # overhead offsets, ragged-load masks.  None when it is the identity
     # (dense, per-slot sends, no overhead) — the established fast path.
@@ -183,17 +188,27 @@ def make_straggler_train_step(cfg: ModelConfig, opt: Optimizer,
         # masks are applied per row after the (optional) permutation
         s = message_arrival_times(T1, T2, r)[0]
         if row_of_worker is None:
-            weights, t_done = winner_mask_gather(base_C, plan,
-                                                 _row_arrivals(s), n, k)
+            row_arr = _row_arrivals(s)
+            weights, t_done = winner_mask_gather(base_C, plan, row_arr, n, k,
+                                                 deadline=dl_close)
         else:
             worker_of_row = jnp.argsort(row_of_worker)       # inverse perm
-            w2, t_done = winner_mask_gather(
-                base_C, plan, _row_arrivals(s[worker_of_row]), n, k)
+            row_arr = _row_arrivals(s[worker_of_row])
+            w2, t_done = winner_mask_gather(base_C, plan, row_arr, n, k,
+                                            deadline=dl_close)
             weights = w2[row_of_worker]                      # worker-major
+        # per-task delivery by the (capped) round close — feeds the
+        # reissue policy's re-gather priority in the driving loop
+        tau = task_arrival_times_gather(plan, row_arr)
+        delivered = (tau <= t_done) & jnp.isfinite(tau)
 
         # realized selected-task count: == k a.s. with per-slot sends, may
-        # exceed k when a reduced message budget delivers tasks in lumps
-        wsum = weights.sum()
+        # exceed k when a reduced message budget delivers tasks in lumps —
+        # or fall short (even to 0) when faults/deadlines censor arrivals;
+        # guard the normalizer so an empty round yields a zero gradient,
+        # not NaN.
+        wsum_raw = weights.sum()
+        wsum = jnp.where(wsum_raw > 0, wsum_raw, 1.0)
 
         def slot_loss(p, s):
             toks = slot_tokens[s].reshape(n * b, -1)         # worker-major
@@ -228,6 +243,13 @@ def make_straggler_train_step(cfg: ModelConfig, opt: Optimizer,
         metrics = {"loss": l, "aux": aux, "grad_norm": gnorm,
                    "completion_time": t_done,
                    "winners": (weights > 0).sum(),
+                   "realized_k": wsum_raw,
+                   "delivered_tasks": delivered,
+                   "deadline_missed": (jnp.zeros((), jnp.bool_)
+                                       if round_spec.deadline is None else
+                                       (wsum_raw < k
+                                        if dl_close is not None
+                                        else t_done > round_spec.deadline)),
                    "worker_t1": T1[0].mean(axis=-1),
                    # raw per-(worker, slot) delay draws of the round —
                    # what `launch/train.py --log-delays` accumulates into

@@ -71,8 +71,15 @@ def test_trace_container_validation():
         DelayTrace(np.ones((3, 2)), np.ones((3, 2)))
     with pytest.raises(ValueError, match="mismatch"):
         DelayTrace(tr.T1, tr.T2[:, :, :2])
-    with pytest.raises(ValueError, match="finite"):
-        DelayTrace(np.full((1, 1, 2, 2), np.inf), np.ones((1, 1, 2, 2)))
+    with pytest.raises(ValueError, match="NaN"):
+        DelayTrace(np.full((1, 1, 2, 2), np.nan), np.ones((1, 1, 2, 2)))
+    # +inf cells are legal since format v2: a fault-censored result that
+    # never arrived.  -inf / non-positive delays stay rejected.
+    faulty = DelayTrace(np.full((1, 1, 2, 2), np.inf),
+                        np.ones((1, 1, 2, 2)))
+    assert faulty.has_faults and not tr.has_faults
+    with pytest.raises(ValueError, match="positive"):
+        DelayTrace(np.full((1, 1, 2, 2), -np.inf), np.ones((1, 1, 2, 2)))
     with pytest.raises(ValueError, match="positive"):
         DelayTrace(np.zeros((1, 1, 2, 2)), np.ones((1, 1, 2, 2)))
     with pytest.raises(AttributeError):
@@ -97,7 +104,9 @@ def test_save_load_roundtrip(tmp_path):
     assert back == tr
     assert back.meta["source"] == "test"
     hdr = validate_trace_file(path)
-    assert hdr["version"] == trace_mod.TRACE_FORMAT_VERSION
+    # fault-free traces keep writing version 1 so pre-fault readers still
+    # load them; only +inf cells bump the header to the current version
+    assert hdr["version"] == 1 <= trace_mod.TRACE_FORMAT_VERSION
     assert hdr["rounds"] == 3 and hdr["n"] == 4
 
 
