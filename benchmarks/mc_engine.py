@@ -13,6 +13,12 @@ Rows:
   mc_engine/fused      one engine call, same schemes, shared draws
   mc_engine/speedup    fused over legacy throughput ratio
   mc_engine/chunked1M  10^6-trial sweep streamed in 20k-trial chunks
+  mc_engine/scaling1   sharding base point: chunked sweep on ONE device
+  mc_engine/scaling    same sweep on every local device: strong speedup
+                       (fixed total trials) + weak efficiency (trials
+                       scaled with devices) + trials/sec — only emitted
+                       with > 1 device (CPU CI forces 4 via
+                       XLA_FLAGS=--xla_force_host_platform_device_count=4)
 """
 from __future__ import annotations
 
@@ -127,8 +133,53 @@ def run(trials: int = 20000):
          f"throughput={big * n_schemes / t_big:,.0f}_trials_schemes_per_s;"
          f"cs_at_k={res.at_k('cs', k) * 1e3:.5f}ms"
          f"+-{float(res.stderr['cs'][k - 1]) * 1e3:.5f}ms")
+
+    scaling = _scaling(model, n, r, trials)
     return {"legacy_s": t_legacy, "fused_s": t_fused,
-            "speedup": thr_fused / thr_legacy, "big_s": t_big}
+            "speedup": thr_fused / thr_legacy, "big_s": t_big, **scaling}
+
+
+def _scaling(model, n: int, r: int, trials: int) -> dict:
+    """Strong/weak device-sharding scaling of the chunked fused sweep.
+
+    Strong: the SAME ``trials`` on 1 device vs all ``D`` local devices
+    (identical chunk decomposition, so the sharded result is bit-exact —
+    only wall-clock changes).  Weak: ``trials * D`` on ``D`` devices vs
+    ``trials`` on one; efficiency 1.0 means per-device throughput is flat.
+    The single-device base row is always emitted; the multi-device row
+    needs > 1 local device (CPU CI forces 4 host devices via XLA_FLAGS).
+    """
+    D = len(jax.devices())
+    specs = _fused_specs(n, r, seed=0)
+    # enough chunks that every device gets several whole ones
+    chunk = max(1, trials // 16)
+
+    def run_sweep(tr: int, devices):
+        # evaluators are cached per device tuple; _time's untimed warmup
+        # call absorbs the compile either way
+        return _time(lambda: sweep(specs, model, n, trials=tr, seed=0,
+                                   chunk=chunk, devices=devices))
+
+    t1 = run_sweep(trials, 1)
+    tps1 = trials / t1
+    emit("mc_engine/scaling1", t1 * 1e6,
+         f"devices=1;trials={trials};chunk={chunk};"
+         f"trials_per_sec={tps1:,.0f}")
+    if D <= 1:
+        return {"scaling_devices": 1, "trials_per_sec_1dev": tps1}
+
+    t_strong = run_sweep(trials, D)
+    t_weak = run_sweep(trials * D, D)
+    strong = t1 / t_strong
+    weak_eff = t1 / t_weak
+    emit("mc_engine/scaling", t_strong * 1e6,
+         f"devices={D};trials={trials};chunk={chunk};"
+         f"trials_per_sec={trials / t_strong:,.0f};"
+         f"strong_speedup={strong:.2f}x;"
+         f"weak_efficiency={weak_eff:.2f}")
+    return {"scaling_devices": D, "trials_per_sec_1dev": tps1,
+            "trials_per_sec": trials / t_strong,
+            "strong_speedup": strong, "weak_efficiency": weak_eff}
 
 
 if __name__ == "__main__":

@@ -25,6 +25,18 @@ Compares the machine-readable ``BENCH_*.json`` results written by
   under spot preemption with a round deadline (``close_partial``) must
   stay positive and within ``--fault-drop`` percentage points of the
   baseline: crash-aware scheduling keeps paying under failures.
+* ``scaling`` (opt-in via ``--only``) — the device-sharded sweep's strong
+  speedup (same trials, 1 device vs all local devices) from the
+  ``mc_engine/scaling`` row must stay above ``--scaling-tol`` x the
+  baseline, and the scaling fields (``trials_per_sec``,
+  ``strong_speedup``, ``weak_efficiency``) must be present and finite.
+  Run it only where the benchmark saw real parallelism (the multi-device
+  CI leg with ``XLA_FLAGS=--xla_force_host_platform_device_count=4``);
+  like the throughput gate it is a structural guard — forced host
+  devices on oversubscribed runners never hit the ideal 4x.
+
+``--only`` selects which checks run (default: every check except
+``scaling``).
 
 Every metric the gate reads — and every numeric derived field in every
 consumed ``BENCH_*.json`` — must be finite: a NaN or inf anywhere fails
@@ -105,7 +117,21 @@ def main(argv=None) -> None:
                     help="max allowed drop (percentage points) of the fig12 "
                          "adaptive-vs-static margin under preemption vs "
                          "baseline")
+    ap.add_argument("--scaling-tol", type=float, default=0.75,
+                    help="fail if the multi-device strong speedup < tol * "
+                         "baseline (scaling check only)")
+    ap.add_argument("--only", default="mc_engine,fig8,fig10,fig11,fig12",
+                    help="comma-separated subset of checks to run; add "
+                         "'scaling' on the multi-device leg")
     args = ap.parse_args(argv)
+
+    known = {"mc_engine", "fig8", "fig10", "fig11", "fig12", "scaling"}
+    only = {s.strip() for s in args.only.split(",") if s.strip()}
+    unknown = sorted(only - known)
+    if unknown:
+        print(f"regression_gate: unknown --only check(s) {unknown}; valid: "
+              f"{sorted(known)}")
+        sys.exit(2)
 
     if not os.path.exists(args.baseline):
         print(f"regression_gate: missing baseline {args.baseline}")
@@ -116,88 +142,121 @@ def main(argv=None) -> None:
     failures = []
 
     # --- mc_engine throughput ------------------------------------------------
-    mc = _load_bench(args.results, "mc_engine")
-    _check_finite(mc)
-    thr = _row(mc, "mc_engine/fused")["derived"].get("throughput")
-    if not isinstance(thr, (int, float)):
-        print("regression_gate: mc_engine/fused row lacks a numeric "
-              "'throughput' derived field")
-        sys.exit(2)
-    floor = base["mc_engine_fused_throughput"] * args.throughput_tol
-    ok = thr >= floor
-    print(f"{'PASS' if ok else 'FAIL'} mc_engine fused throughput: "
-          f"{thr:,.0f} trials*schemes/s (floor {floor:,.0f} = "
-          f"{args.throughput_tol} x baseline "
-          f"{base['mc_engine_fused_throughput']:,.0f})")
-    if not ok:
-        failures.append("mc_engine throughput")
+    if "mc_engine" in only:
+        mc = _load_bench(args.results, "mc_engine")
+        _check_finite(mc)
+        thr = _row(mc, "mc_engine/fused")["derived"].get("throughput")
+        if not isinstance(thr, (int, float)):
+            print("regression_gate: mc_engine/fused row lacks a numeric "
+                  "'throughput' derived field")
+            sys.exit(2)
+        floor = base["mc_engine_fused_throughput"] * args.throughput_tol
+        ok = thr >= floor
+        print(f"{'PASS' if ok else 'FAIL'} mc_engine fused throughput: "
+              f"{thr:,.0f} trials*schemes/s (floor {floor:,.0f} = "
+              f"{args.throughput_tol} x baseline "
+              f"{base['mc_engine_fused_throughput']:,.0f})")
+        if not ok:
+            failures.append("mc_engine throughput")
+
+    # --- device-sharded scaling (multi-device leg only) ----------------------
+    if "scaling" in only:
+        mc = _load_bench(args.results, "mc_engine")
+        _check_finite(mc)
+        row = _row(mc, "mc_engine/scaling")["derived"]
+        missing = [f for f in ("trials_per_sec", "strong_speedup",
+                               "weak_efficiency", "devices")
+                   if not isinstance(row.get(f), (int, float))]
+        if missing:
+            print(f"regression_gate: mc_engine/scaling row lacks numeric "
+                  f"field(s) {missing} (was the benchmark run with > 1 "
+                  f"device? set XLA_FLAGS="
+                  f"--xla_force_host_platform_device_count=4)")
+            sys.exit(2)
+        floor = base["mc_engine_strong_speedup"] * args.scaling_tol
+        ok = row["strong_speedup"] >= floor
+        print(f"{'PASS' if ok else 'FAIL'} mc_engine sharded strong speedup "
+              f"({row['devices']:.0f} devices): {row['strong_speedup']:.2f}x "
+              f"(floor {floor:.2f}x = {args.scaling_tol} x baseline "
+              f"{base['mc_engine_strong_speedup']:.1f}x; weak efficiency "
+              f"{row['weak_efficiency']:.2f}, "
+              f"{row['trials_per_sec']:,.0f} trials/s)")
+        if not ok:
+            failures.append("sharded scaling")
 
     # --- fig8 adaptive-vs-static margin -------------------------------------
-    fig8 = _load_bench(args.results, "fig8")
-    _check_finite(fig8)
-    cell = base.get("fig8_cell", "fig8/p0.98_s3")
-    margin = _row(fig8, cell)["derived"].get("adapt_vs_static")
-    if not isinstance(margin, (int, float)):
-        print(f"regression_gate: {cell} row lacks a numeric "
-              f"'adapt_vs_static' derived field")
-        sys.exit(2)
-    floor = max(base["fig8_adapt_vs_static"] - args.margin_drop, 0.0)
-    ok = margin >= floor
-    print(f"{'PASS' if ok else 'FAIL'} fig8 adaptive-vs-static margin "
-          f"({cell}): {margin:+.1f}% (floor {floor:+.1f}% = baseline "
-          f"{base['fig8_adapt_vs_static']:+.1f}% - {args.margin_drop})")
-    if not ok:
-        failures.append("fig8 adaptive margin")
+    if "fig8" in only:
+        fig8 = _load_bench(args.results, "fig8")
+        _check_finite(fig8)
+        cell = base.get("fig8_cell", "fig8/p0.98_s3")
+        margin = _row(fig8, cell)["derived"].get("adapt_vs_static")
+        if not isinstance(margin, (int, float)):
+            print(f"regression_gate: {cell} row lacks a numeric "
+                  f"'adapt_vs_static' derived field")
+            sys.exit(2)
+        floor = max(base["fig8_adapt_vs_static"] - args.margin_drop, 0.0)
+        ok = margin >= floor
+        print(f"{'PASS' if ok else 'FAIL'} fig8 adaptive-vs-static margin "
+              f"({cell}): {margin:+.1f}% (floor {floor:+.1f}% = baseline "
+              f"{base['fig8_adapt_vs_static']:+.1f}% - {args.margin_drop})")
+        if not ok:
+            failures.append("fig8 adaptive margin")
 
     # --- fig10 rebalance-vs-permutation margin ------------------------------
-    fig10 = _load_bench(args.results, "fig10")
-    _check_finite(fig10)
-    margin = _row(fig10, "fig10/rebalance")["derived"].get("rebal_vs_perm")
-    if not isinstance(margin, (int, float)):
-        print("regression_gate: fig10/rebalance row lacks a numeric "
-              "'rebal_vs_perm' derived field")
-        sys.exit(2)
-    floor = max(base["fig10_rebal_vs_perm"] - args.rebal_drop, 0.0)
-    ok = margin >= floor
-    print(f"{'PASS' if ok else 'FAIL'} fig10 rebalance-vs-permutation "
-          f"margin: {margin:+.1f}% (floor {floor:+.1f}% = baseline "
-          f"{base['fig10_rebal_vs_perm']:+.1f}% - {args.rebal_drop})")
-    if not ok:
-        failures.append("fig10 rebalance margin")
+    if "fig10" in only:
+        fig10 = _load_bench(args.results, "fig10")
+        _check_finite(fig10)
+        margin = _row(fig10, "fig10/rebalance")["derived"].get(
+            "rebal_vs_perm")
+        if not isinstance(margin, (int, float)):
+            print("regression_gate: fig10/rebalance row lacks a numeric "
+                  "'rebal_vs_perm' derived field")
+            sys.exit(2)
+        floor = max(base["fig10_rebal_vs_perm"] - args.rebal_drop, 0.0)
+        ok = margin >= floor
+        print(f"{'PASS' if ok else 'FAIL'} fig10 rebalance-vs-permutation "
+              f"margin: {margin:+.1f}% (floor {floor:+.1f}% = baseline "
+              f"{base['fig10_rebal_vs_perm']:+.1f}% - {args.rebal_drop})")
+        if not ok:
+            failures.append("fig10 rebalance margin")
 
     # --- fig11 trace-replay adaptive margin ---------------------------------
-    fig11 = _load_bench(args.results, "fig11")
-    _check_finite(fig11)
-    margin = _row(fig11, "fig11/trace")["derived"].get("adapt_vs_static")
-    if not isinstance(margin, (int, float)):
-        print("regression_gate: fig11/trace row lacks a numeric "
-              "'adapt_vs_static' derived field")
-        sys.exit(2)
-    floor = max(base["fig11_trace_adapt_vs_static"] - args.trace_drop, 0.0)
-    ok = margin >= floor
-    print(f"{'PASS' if ok else 'FAIL'} fig11 trace-replay adaptive-vs-"
-          f"static margin: {margin:+.1f}% (floor {floor:+.1f}% = baseline "
-          f"{base['fig11_trace_adapt_vs_static']:+.1f}% - "
-          f"{args.trace_drop})")
-    if not ok:
-        failures.append("fig11 trace margin")
+    if "fig11" in only:
+        fig11 = _load_bench(args.results, "fig11")
+        _check_finite(fig11)
+        margin = _row(fig11, "fig11/trace")["derived"].get("adapt_vs_static")
+        if not isinstance(margin, (int, float)):
+            print("regression_gate: fig11/trace row lacks a numeric "
+                  "'adapt_vs_static' derived field")
+            sys.exit(2)
+        floor = max(base["fig11_trace_adapt_vs_static"] - args.trace_drop,
+                    0.0)
+        ok = margin >= floor
+        print(f"{'PASS' if ok else 'FAIL'} fig11 trace-replay adaptive-vs-"
+              f"static margin: {margin:+.1f}% (floor {floor:+.1f}% = "
+              f"baseline {base['fig11_trace_adapt_vs_static']:+.1f}% - "
+              f"{args.trace_drop})")
+        if not ok:
+            failures.append("fig11 trace margin")
 
     # --- fig12 fault-tolerance adaptive margin ------------------------------
-    fig12 = _load_bench(args.results, "fig12")
-    _check_finite(fig12)
-    margin = _row(fig12, "fig12/preemption")["derived"].get("adapt_vs_static")
-    if not isinstance(margin, (int, float)):
-        print("regression_gate: fig12/preemption row lacks a numeric "
-              "'adapt_vs_static' derived field")
-        sys.exit(2)
-    floor = max(base["fig12_fault_margin"] - args.fault_drop, 0.0)
-    ok = margin >= floor
-    print(f"{'PASS' if ok else 'FAIL'} fig12 fault-tolerance adaptive-vs-"
-          f"static margin (preemption, close_partial): {margin:+.1f}% "
-          f"(floor {floor:+.1f}% = baseline "
-          f"{base['fig12_fault_margin']:+.1f}% - {args.fault_drop})")
-    if not ok:
-        failures.append("fig12 fault margin")
+    if "fig12" in only:
+        fig12 = _load_bench(args.results, "fig12")
+        _check_finite(fig12)
+        margin = _row(fig12, "fig12/preemption")["derived"].get(
+            "adapt_vs_static")
+        if not isinstance(margin, (int, float)):
+            print("regression_gate: fig12/preemption row lacks a numeric "
+                  "'adapt_vs_static' derived field")
+            sys.exit(2)
+        floor = max(base["fig12_fault_margin"] - args.fault_drop, 0.0)
+        ok = margin >= floor
+        print(f"{'PASS' if ok else 'FAIL'} fig12 fault-tolerance adaptive-"
+              f"vs-static margin (preemption, close_partial): "
+              f"{margin:+.1f}% (floor {floor:+.1f}% = baseline "
+              f"{base['fig12_fault_margin']:+.1f}% - {args.fault_drop})")
+        if not ok:
+            failures.append("fig12 fault margin")
 
     if failures:
         print(f"regression_gate: FAILED checks: {failures}")

@@ -129,6 +129,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..sharding import shard_trials, trial_devices
+
 __all__ = [
     "SchemeSpec", "SweepResult", "RoundsResult", "to_spec", "lb_spec",
     "pc_spec", "pcmm_spec", "tau_spec", "adaptive_spec", "task_gather_plan",
@@ -598,8 +600,13 @@ def _build_eval(specs: Tuple[SchemeSpec, ...], n: int, r_max: int,
             win = win + jnp.asarray(off_flat[idx])
         return win
 
-    DL = None if deadline is None else jnp.float32(deadline)
-    nf = jnp.float32(n)
+    # numpy (not jnp) scalars: builders run eagerly, and plain literals
+    # fold into the traced program identically on every device, whereas a
+    # concrete jax scalar closed over here is a device-resident buffer
+    # (see the matching note in ``_build_rounds_fn``).  Both promote
+    # identically in float32 arithmetic.
+    DL = None if deadline is None else np.float32(deadline)
+    nf = np.float32(n)
 
     def eval_fn(s: Array):
         out: Dict[str, Array] = {}
@@ -694,13 +701,70 @@ def clear_cache() -> None:
     _ROUNDS_CACHE.clear()
 
 
+def _normalize_chunk(trials: int, chunk: Optional[int]) -> int:
+    """Canonical ``chunk`` normalization shared by every sweep entry point.
+    ``None`` means one chunk; anything outside ``1..trials`` is an error
+    (an oversized chunk used to be silently clamped, which hid typos and,
+    under shard padding, would burn whole padded chunks per device)."""
+    if trials < 1:
+        raise ValueError(f"trials must be >= 1, got {trials}")
+    if chunk is None:
+        return trials
+    chunk = int(chunk)
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got chunk={chunk}")
+    if chunk > trials:
+        raise ValueError(
+            f"chunk ({chunk}) exceeds trials ({trials}); pass chunk <= "
+            f"trials (or chunk=None for a single chunk)")
+    return chunk
+
+
+def _shard_layout(trials: int, chunk: int, devices):
+    """Device/padding layout of a sharded sweep.
+
+    The global trial axis is cut into ``ceil(trials / chunk)`` chunks (the
+    same decomposition for ANY device count — that is what keeps sharded
+    results bit-exact vs. the single-device path), chunks are dealt to
+    devices in contiguous blocks, and the chunk count is padded up to a
+    multiple of the devices actually used (at most ``d_eff - 1`` padded
+    chunks; padded trials repeat real keys and are masked out of every
+    statistic).  Returns ``(devs, nc_pad, padded_trials)``.
+    """
+    devs = trial_devices(devices)
+    nc = -(-trials // chunk)                    # global chunks
+    d_eff = min(len(devs), nc)
+    nc_pad = -(-nc // d_eff) * d_eff
+    return devs[:d_eff], nc_pad, nc_pad * chunk
+
+
+def _padded_keys(seed: int, trials: int, padded: int) -> Array:
+    """The per-trial CRN keys, padded to the shard layout.  The first
+    ``trials`` rows are exactly ``split(PRNGKey(seed), trials)`` whatever
+    the padding (pad rows repeat the last real key and feed masked lanes
+    only), so CRN pairing across specs survives any device count."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), trials)
+    if padded > trials:
+        pad = jnp.broadcast_to(keys[-1:], (padded - trials, 2))
+        keys = jnp.concatenate([keys, pad], axis=0)
+    return keys
+
+
 def _get_exec(specs: Tuple[SchemeSpec, ...], model, n: int, r_max: int,
-              ks: Optional[int]):
-    """Compiled (stats, sums-scan, samples-scan) triple, cached per
-    (specs, model, n, r_max, ks) so repeated sweep calls skip retracing."""
+              ks: Optional[int], devices: tuple):
+    """Compiled (sums-scan, samples-scan) pair, cached per
+    (specs, model, n, r_max, ks, devices) so repeated sweep calls skip
+    retracing (the sharded evaluator is mesh-specific, so the device
+    tuple is part of the key).
+
+    Both scans emit **per-chunk float32 partials** (masked to the valid
+    trials) instead of carrying a running sum: partials are combined on
+    the host in float64 in global chunk order, which makes the reduction
+    independent of how chunks are dealt to devices — sharded stats are
+    bit-exact vs. single-device."""
     cache_key = None
     try:
-        cache_key = (specs, model, n, r_max, ks)
+        cache_key = (specs, model, n, r_max, ks, devices)
         hit = _EXEC_CACHE.get(cache_key)
         if hit is not None:
             return hit
@@ -708,22 +772,19 @@ def _get_exec(specs: Tuple[SchemeSpec, ...], model, n: int, r_max: int,
         cache_key = None
 
     stats_fn = _build_stats_fn(specs, model, n, r_max, ks)
-    widths = {sp.name: _stat_width(sp, n, ks) for sp in specs}
 
-    def sums_scan(keys3):          # (nc, chunk, 2) -> (sum, sumsq) per name
-        zeros = {name: jnp.zeros((w,), jnp.float32)
-                 for name, w in widths.items()}
-        init = (zeros, {k2: v for k2, v in zeros.items()})
-
-        def body(carry, kc):
+    def sums_scan(keys3, valid2):  # (nc, chunk, 2), (nc, chunk) -> partials
+        def body(carry, kv):
+            kc, vd = kv
             st = stats_fn(kc)
-            s0, s1 = carry
-            s0 = {k2: s0[k2] + st[k2].sum(axis=0) for k2 in s0}
-            s1 = {k2: s1[k2] + jnp.square(st[k2]).sum(axis=0) for k2 in s1}
-            return (s0, s1), None
+            ok = vd[:, None]
+            s0 = {k2: jnp.where(ok, st[k2], 0.0).sum(axis=0) for k2 in st}
+            s1 = {k2: jnp.where(ok, jnp.square(st[k2]), 0.0).sum(axis=0)
+                  for k2 in st}
+            return carry, (s0, s1)
 
-        carry, _ = jax.lax.scan(body, init, keys3)
-        return carry
+        _, parts = jax.lax.scan(body, None, (keys3, valid2))
+        return parts               # 2 x {name: (nc, L)} per-chunk partials
 
     def samples_scan(keys3):       # (nc, chunk, 2) -> {name: (nc, chunk, L)}
         def body(carry, kc):
@@ -732,7 +793,12 @@ def _get_exec(specs: Tuple[SchemeSpec, ...], model, n: int, r_max: int,
         _, ys = jax.lax.scan(body, None, keys3)
         return ys
 
-    exec_ = (jax.jit(stats_fn), jax.jit(sums_scan), jax.jit(samples_scan))
+    if len(devices) > 1:
+        # shard_trials returns a fully-jitted callable; no outer jit.
+        exec_ = (shard_trials(sums_scan, devices),
+                 shard_trials(samples_scan, devices))
+    else:
+        exec_ = (jax.jit(sums_scan), jax.jit(samples_scan))
     if cache_key is not None:
         _EXEC_CACHE[cache_key] = exec_
     return exec_
@@ -826,7 +892,7 @@ def _check_specs(specs: Sequence[SchemeSpec], n: int) -> Tuple[SchemeSpec, ...]:
 
 def _run(specs: Sequence[SchemeSpec], model, n: int, *, trials: int,
          seed: int, chunk: Optional[int], ks: Optional[int],
-         want_samples: bool):
+         want_samples: bool, devices=None):
     specs = _check_specs(specs, n)
     for sp in specs:
         if sp.kind == "adaptive":
@@ -849,33 +915,26 @@ def _run(specs: Sequence[SchemeSpec], model, n: int, *, trials: int,
                 f"so all-k completion times are infinite beyond "
                 f"k={covered}; sweep with ks <= {covered} instead")
     r_max = max(sp.load for sp in specs)
-    chunk = trials if chunk is None else max(1, min(int(chunk), trials))
-    jstats, jsums, jsamples = _get_exec(specs, model, n, r_max, ks)
+    chunk = _normalize_chunk(trials, chunk)
+    devs, nc_pad, padded = _shard_layout(trials, chunk, devices)
+    jsums, jsamples = _get_exec(specs, model, n, r_max, ks, devs)
 
-    keys = jax.random.split(jax.random.PRNGKey(seed), trials)
-    nc = trials // chunk
-    main = nc * chunk
-    main_keys = keys[:main].reshape(nc, chunk, 2)
-    tail_keys = keys[main:]
+    keys3 = _padded_keys(seed, trials, padded).reshape(nc_pad, chunk, 2)
 
     if want_samples:
-        ys = jsamples(main_keys)
-        parts = {name: [v.reshape(main, v.shape[-1])] for name, v in ys.items()}
-        if main < trials:
-            for name, v in jstats(tail_keys).items():
-                parts[name].append(v)
-        return {name: jnp.concatenate(vs, axis=0) if len(vs) > 1 else vs[0]
-                for name, vs in parts.items()}
+        ys = jsamples(keys3)
+        return {name: v.reshape(padded, v.shape[-1])[:trials]
+                for name, v in ys.items()}
 
-    s0, s1 = jsums(main_keys)
-    if main < trials:
-        st = jstats(tail_keys)
-        s0 = {k2: s0[k2] + st[k2].sum(axis=0) for k2 in s0}
-        s1 = {k2: s1[k2] + jnp.square(st[k2]).sum(axis=0) for k2 in s1}
+    valid2 = (jnp.arange(padded) < trials).reshape(nc_pad, chunk)
+    p0, p1 = jsums(keys3, valid2)
     means, stderr = {}, {}
-    for name in s0:
-        mu = np.asarray(s0[name]) / trials
-        var = np.maximum(np.asarray(s1[name]) / trials - mu * mu, 0.0)
+    for name in p0:
+        # per-chunk float32 partials -> float64 in global chunk order: the
+        # same reduction whatever the device count (bit-exact sharding).
+        mu = np.asarray(p0[name], np.float64).sum(axis=0) / trials
+        s1 = np.asarray(p1[name], np.float64).sum(axis=0)
+        var = np.maximum(s1 / trials - mu * mu, 0.0)
         means[name] = mu
         stderr[name] = np.sqrt(var / trials)
     return means, stderr
@@ -921,7 +980,7 @@ class SweepResult:
 
 def sweep(specs: Sequence[SchemeSpec], model, n: int, *, trials: int = 20000,
           seed: int = 0, chunk: Optional[int] = None,
-          ks: Optional[int] = None) -> SweepResult:
+          ks: Optional[int] = None, devices=None) -> SweepResult:
     """Evaluate every scheme against ONE shared set of delay draws.
 
     Parameters
@@ -932,14 +991,22 @@ def sweep(specs: Sequence[SchemeSpec], model, n: int, *, trials: int = 20000,
     trials: Monte-Carlo rounds.
     chunk:  trials are streamed through ``lax.scan`` in chunks of this size
             (default: one chunk).  The per-trial draws are chunk-invariant,
-            so means agree to float32 accumulation round-off (and
-            ``completion_samples`` is bit-identical) for any chunk size;
-            memory is O(chunk * n * r_max).
+            so per-trial samples are bit-identical for any chunk size and
+            means agree to accumulation round-off; memory is
+            O(chunk * n * r_max) per device.
     ks:     ``None`` → all-k mode: one sort yields every k in 1..n.
             An int → only that order statistic, via ``lax.top_k``.
+    devices: shard the trial axis across these devices
+            (``None`` = all local devices, an int = that many, or an
+            explicit sequence).  Whole chunks are dealt to devices, so at
+            most ``min(len(devices), ceil(trials/chunk))`` devices are
+            used — pass ``chunk <= trials // len(devices)`` to engage all
+            of them.  Results are bit-exact vs. the single-device path for
+            the same (trials, seed, chunk).
     """
     means, stderr = _run(specs, model, n, trials=trials, seed=seed,
-                         chunk=chunk, ks=ks, want_samples=False)
+                         chunk=chunk, ks=ks, want_samples=False,
+                         devices=devices)
     fixed = frozenset(sp.name for sp in specs if sp.kind in ("pc", "pcmm"))
     return SweepResult(means=means, stderr=stderr, trials=trials, n=n, ks=ks,
                        fixed=fixed)
@@ -947,21 +1014,22 @@ def sweep(specs: Sequence[SchemeSpec], model, n: int, *, trials: int = 20000,
 
 def completion_samples(spec: SchemeSpec, model, n: int, *, trials: int = 10000,
                        seed: int = 0, chunk: Optional[int] = None,
-                       k: Optional[int] = None) -> Array:
+                       k: Optional[int] = None, devices=None) -> Array:
     """Per-trial completion-time samples for one scheme.
 
     Returns shape ``(trials,)`` when ``k`` is given (or for ``pcmm``), else
     ``(trials, n)`` with column ``k-1`` holding the k-th order statistic.
     """
     out = _run([spec], model, n, trials=trials, seed=seed, chunk=chunk,
-               ks=k, want_samples=True)[spec.name]
+               ks=k, want_samples=True, devices=devices)[spec.name]
     return out[:, 0] if out.shape[-1] == 1 else out
 
 
 def task_arrival_samples(C, model, *, trials: int = 10000, seed: int = 0,
                          chunk: Optional[int] = None,
                          messages: Optional[int] = None,
-                         loads=None, comm_eps: float = 0.0) -> Array:
+                         loads=None, comm_eps: float = 0.0,
+                         devices=None) -> Array:
     """Raw per-task arrival-time samples ``tau`` of shape (trials, n) for a
     TO matrix — shared-draw backing for joint-survival estimators.
     ``messages`` is the per-round message budget (default: per-slot sends);
@@ -972,7 +1040,7 @@ def task_arrival_samples(C, model, *, trials: int = 10000, seed: int = 0,
     spec = tau_spec("tau", C, messages=messages, loads=loads,
                     comm_eps=comm_eps)
     return _run([spec], model, n, trials=trials, seed=seed, chunk=chunk,
-                ks=None, want_samples=True)[spec.name]
+                ks=None, want_samples=True, devices=devices)[spec.name]
 
 
 # ----------------------------- rounds axis -----------------------------------
@@ -981,7 +1049,8 @@ def _build_rounds_fn(specs: Tuple[SchemeSpec, ...], process, n: int,
                      r_max: int, ks: int, rounds: int, beta: float,
                      gamma: float, censored: bool,
                      deadline: Optional[float] = None,
-                     policy: str = "wait"):
+                     policy: str = "wait",
+                     greedy_impl: Optional[str] = None):
     """Multi-round evaluator: (chunk, 2) per-trial keys + (chunk,) global
     trial ids -> {name: (rounds, chunk)} per-round completion times.
 
@@ -1032,10 +1101,15 @@ def _build_rounds_fn(specs: Tuple[SchemeSpec, ...], process, n: int,
     ad_specs = tuple(sp for sp in specs if sp.kind == "adaptive")
     eval_fn = (_build_eval(static_specs, n, r_max, ks, deadline)
                if static_specs else None)
-    DL = None if deadline is None else jnp.float32(deadline)
+    # numpy scalars, NOT eager jnp arrays: this builder runs outside jit,
+    # and concrete jax scalars closed over by the sharded rounds program
+    # would be device-0-resident buffers; plain literals fold into the
+    # traced program identically on every device and promote identically
+    # in float32 arithmetic.
+    DL = None if deadline is None else np.float32(deadline)
     reissue = deadline is not None and policy == "reissue"
-    kf = jnp.float32(ks)
-    nf = jnp.float32(n)
+    kf = np.float32(ks)
+    nf = np.float32(n)
 
     def _policy_close(v, by, dv):
         """Apply the fallback policy to one scheme's raw completion ``v``
@@ -1068,7 +1142,8 @@ def _build_rounds_fn(specs: Tuple[SchemeSpec, ...], process, n: int,
         sp, plan, Cb = ad_specs[i], ad_plans[i], ad_mats[i]
         # assignment uses feedback from *previous* rounds only.
         w_of_row = scheduling.greedy_row_assignment_batch(
-            Cb, est, gamma=gamma, need=need)    # (chunk, n)
+            Cb, est, gamma=gamma, need=need,
+            impl=greedy_impl)                   # (chunk, n)
         # row p's slots are executed by worker w_of_row[p]: permute the
         # worker axis, then the static gather plan applies.
         s2 = jnp.take_along_axis(s, w_of_row[..., None], axis=1)
@@ -1176,8 +1251,15 @@ def _build_rounds_fn(specs: Tuple[SchemeSpec, ...], process, n: int,
             times[sp.name] = v_eff
             return w_of_row, loads_w, v_eff
 
+        # NB: the round index rides the scan xs (an ``arange``) instead of
+        # an integer carry — numerically identical, and immune to a
+        # multi-device host-mesh miscompilation (observed under
+        # ``shard_map``, see ``repro.sharding.shard_trials``) where XLA
+        # aliases constant-initialized scalar carries across co-resident
+        # shards, so ``t == 0`` misfires on every device but the first.
         if censored:
-            def body(carry, kr):
+            def body(carry, xs):
+                kr, _ = xs
                 pstate, ests, needs, backs = carry
                 pstate, T1, T2 = process.step(pstate, kr, n, r_max)
                 s = jnp.cumsum(T1, axis=-1) + T2    # eq. (1), per round
@@ -1211,8 +1293,9 @@ def _build_rounds_fn(specs: Tuple[SchemeSpec, ...], process, n: int,
                     tuple(jnp.full((chunk, n), INF, jnp.float32)
                           for _ in ad_specs), needs0, backs0)
         else:
-            def body(carry, kr):
-                pstate, est, t, needs, backs = carry
+            def body(carry, xs):
+                kr, t = xs
+                pstate, est, needs, backs = carry
                 pstate, T1, T2 = process.step(pstate, kr, n, r_max)
                 s = jnp.cumsum(T1, axis=-1) + T2    # eq. (1), per round
                 out, cnts = _eval_static(s)
@@ -1235,13 +1318,14 @@ def _build_rounds_fn(specs: Tuple[SchemeSpec, ...], process, n: int,
                 fin = jnp.isfinite(obs)
                 upd = jnp.where(t == 0, obs, beta * est + (1.0 - beta) * obs)
                 est = jnp.where(fin, upd, est)
-                return (pstate, est, t + 1, new_needs, new_backs), (times,
-                                                                    aux)
+                return (pstate, est, new_needs, new_backs), (times, aux)
 
             init = (pstate, jnp.ones((chunk, n), jnp.float32),
-                    jnp.zeros((), jnp.int32), needs0, backs0)
+                    needs0, backs0)
 
-        _, ys = jax.lax.scan(body, init, jnp.swapaxes(allk[:, 1:], 0, 1))
+        _, ys = jax.lax.scan(body, init,
+                             (jnp.swapaxes(allk[:, 1:], 0, 1),
+                              jnp.arange(rounds, dtype=jnp.int32)))
         return ys             # ({name: (rounds, chunk)}, {name: aux dicts})
 
     return rounds_fn
@@ -1253,7 +1337,8 @@ _ROUNDS_CACHE: dict = {}
 def _get_rounds_exec(specs: Tuple[SchemeSpec, ...], process, n: int,
                      r_max: int, ks: int, rounds: int, beta: float,
                      gamma: float, censored: bool,
-                     deadline: Optional[float] = None, policy: str = "wait"):
+                     deadline: Optional[float] = None, policy: str = "wait",
+                     devices: tuple = (), greedy_impl: Optional[str] = None):
     from .trace import TraceProcess
     cache_key = None
     if isinstance(process, TraceProcess):
@@ -1264,7 +1349,7 @@ def _get_rounds_exec(specs: Tuple[SchemeSpec, ...], process, n: int,
     else:
         try:
             cache_key = (specs, process, n, r_max, ks, rounds, beta, gamma,
-                         censored, deadline, policy)
+                         censored, deadline, policy, devices, greedy_impl)
             hit = _ROUNDS_CACHE.get(cache_key)
             if hit is not None:
                 return hit
@@ -1272,48 +1357,44 @@ def _get_rounds_exec(specs: Tuple[SchemeSpec, ...], process, n: int,
             cache_key = None
 
     rounds_fn = _build_rounds_fn(specs, process, n, r_max, ks, rounds,
-                                 beta, gamma, censored, deadline, policy)
+                                 beta, gamma, censored, deadline, policy,
+                                 greedy_impl)
     has_dl = deadline is not None
 
-    def _acc_aux(ac, aux):
-        """Accumulate one chunk's degradation streams: sums over the trial
-        axis plus the realized-k histogram (one_hot over 0..k)."""
-        new_ac = {}
+    def _chunk_aux(aux, vd):
+        """One chunk's degradation partials: valid-masked sums over the
+        trial axis plus the realized-k histogram (one_hot over 0..k)."""
+        ok = vd[None, :]                              # (1, chunk) bool
+        okf = vd.astype(jnp.float32)[None, :, None]
+        out = {}
         for nm, a in aux.items():
-            hist = jax.nn.one_hot(a["realized"].astype(jnp.int32),
-                                  ks + 1).sum(axis=1)
-            d = ac[nm]
-            new_ac[nm] = {
-                "realized": d["realized"] + a["realized"].sum(axis=1),
-                "missed": d["missed"] + a["missed"].sum(axis=1),
-                "stale": d["stale"] + a["stale"].sum(axis=1),
-                "khist": d["khist"] + hist,
+            hist = (jax.nn.one_hot(a["realized"].astype(jnp.int32), ks + 1)
+                    * okf).sum(axis=1)
+            out[nm] = {
+                "realized": jnp.where(ok, a["realized"], 0.0).sum(axis=1),
+                "missed": jnp.where(ok, a["missed"], 0.0).sum(axis=1),
+                "stale": jnp.where(ok, a["stale"], 0.0).sum(axis=1),
+                "khist": hist,
             }
-        return new_ac
+        return out
 
-    def sums_scan(keys3, tids3):    # (nc, chunk, 2/-) -> per-round moments
-        zeros = {sp.name: jnp.zeros((rounds,), jnp.float32) for sp in specs}
-        init4 = tuple({k2: v for k2, v in zeros.items()} for _ in range(4))
-        ac0 = ({sp.name: {"realized": jnp.zeros((rounds,), jnp.float32),
-                          "missed": jnp.zeros((rounds,), jnp.float32),
-                          "stale": jnp.zeros((rounds,), jnp.float32),
-                          "khist": jnp.zeros((rounds, ks + 1), jnp.float32)}
-                for sp in specs} if has_dl else {})
-
+    def sums_scan(keys3, tids3, valid2):   # -> per-chunk per-round partials
         def body(carry, kt):
-            ys, aux = rounds_fn(*kt)
-            s0, s1, c0, c1, ac = carry
+            kc, tc, vd = kt
+            ys, aux = rounds_fn(kc, tc)
+            ok = vd[None, :]
             cum = {k2: jnp.cumsum(v, axis=0) for k2, v in ys.items()}
-            s0 = {k2: s0[k2] + ys[k2].sum(axis=1) for k2 in s0}
-            s1 = {k2: s1[k2] + jnp.square(ys[k2]).sum(axis=1) for k2 in s1}
-            c0 = {k2: c0[k2] + cum[k2].sum(axis=1) for k2 in c0}
-            c1 = {k2: c1[k2] + jnp.square(cum[k2]).sum(axis=1) for k2 in c1}
-            if has_dl:
-                ac = _acc_aux(ac, aux)
-            return (s0, s1, c0, c1, ac), None
+            s0 = {k2: jnp.where(ok, ys[k2], 0.0).sum(axis=1) for k2 in ys}
+            s1 = {k2: jnp.where(ok, jnp.square(ys[k2]), 0.0).sum(axis=1)
+                  for k2 in ys}
+            c0 = {k2: jnp.where(ok, cum[k2], 0.0).sum(axis=1) for k2 in cum}
+            c1 = {k2: jnp.where(ok, jnp.square(cum[k2]), 0.0).sum(axis=1)
+                  for k2 in cum}
+            ac = _chunk_aux(aux, vd) if has_dl else {}
+            return carry, (s0, s1, c0, c1, ac)
 
-        carry, _ = jax.lax.scan(body, init4 + (ac0,), (keys3, tids3))
-        return carry
+        _, parts = jax.lax.scan(body, None, (keys3, tids3, valid2))
+        return parts          # 4 x {name: (nc, rounds)} + degradation
 
     def samples_scan(keys3, tids3):  # -> {name: (nc, R, chunk)}
         def body(carry, kt):
@@ -1322,7 +1403,12 @@ def _get_rounds_exec(specs: Tuple[SchemeSpec, ...], process, n: int,
         _, ys = jax.lax.scan(body, None, (keys3, tids3))
         return ys
 
-    exec_ = (jax.jit(rounds_fn), jax.jit(sums_scan), jax.jit(samples_scan))
+    if len(devices) > 1:
+        # shard_trials returns a fully-jitted callable; no outer jit.
+        exec_ = (shard_trials(sums_scan, devices),
+                 shard_trials(samples_scan, devices))
+    else:
+        exec_ = (jax.jit(sums_scan), jax.jit(samples_scan))
     if cache_key is not None:
         _ROUNDS_CACHE[cache_key] = exec_
     return exec_
@@ -1404,8 +1490,10 @@ def _run_rounds(specs, process, n, *, rounds: int, k: int, trials: int,
                 seed: int, chunk: Optional[int], beta: float, gamma: float,
                 censored: bool, want_samples: bool, record: bool = False,
                 deadline: Optional[float] = None,
-                deadline_policy: str = "wait"):
+                deadline_policy: str = "wait", devices=None,
+                greedy_impl: Optional[str] = None):
     from .cluster import as_process
+    from .scheduling import _resolve_greedy_impl
     process = as_process(process)
     process.check_rounds(rounds)
     specs = _check_rounds_args(specs, n, k, rounds)
@@ -1419,8 +1507,9 @@ def _run_rounds(specs, process, n, *, rounds: int, k: int, trials: int,
     elif deadline_policy != "wait":
         raise ValueError(f"deadline_policy={deadline_policy!r} needs a "
                          f"deadline")
+    _resolve_greedy_impl(greedy_impl)       # validate early (clear error)
     r_max = max(sp.load for sp in specs)
-    chunk = trials if chunk is None else max(1, min(int(chunk), trials))
+    chunk = _normalize_chunk(trials, chunk)
 
     if record:
         # two-pass recording: capture the realized delay tables first,
@@ -1438,57 +1527,36 @@ def _run_rounds(specs, process, n, *, rounds: int, k: int, trials: int,
                           k=k, trials=trials, seed=seed, chunk=chunk,
                           beta=beta, gamma=gamma, censored=censored,
                           want_samples=want_samples, deadline=deadline,
-                          deadline_policy=deadline_policy)
+                          deadline_policy=deadline_policy, devices=devices,
+                          greedy_impl=greedy_impl)
         return out[:-1] + (trace,)
 
-    jrounds, jsums, jsamples = _get_rounds_exec(
+    devs, nc_pad, padded = _shard_layout(trials, chunk, devices)
+    jsums, jsamples = _get_rounds_exec(
         specs, process, n, r_max, k, rounds, beta, gamma, censored,
-        deadline, deadline_policy)
+        deadline, deadline_policy, devs, greedy_impl)
 
-    keys = jax.random.split(jax.random.PRNGKey(seed), trials)
-    tids = jnp.arange(trials, dtype=jnp.int32)
-    nc = trials // chunk
-    main = nc * chunk
-    main_keys = keys[:main].reshape(nc, chunk, 2)
-    main_tids = tids[:main].reshape(nc, chunk)
-    tail_keys, tail_tids = keys[main:], tids[main:]
+    keys3 = _padded_keys(seed, trials, padded).reshape(nc_pad, chunk, 2)
+    # padded lanes replay a valid (clamped) trial id and are masked out of
+    # every statistic below; real lanes keep their global trial id, so
+    # trace replay stays invariant to chunking AND sharding.
+    tids3 = jnp.minimum(jnp.arange(padded, dtype=jnp.int32),
+                        trials - 1).reshape(nc_pad, chunk)
 
     if want_samples:
-        ys = jsamples(main_keys, main_tids)
-        parts = {nm: [jnp.moveaxis(v, 1, -1).reshape(main, rounds)]
-                 for nm, v in ys.items()}       # (nc, R, chunk)->(trials, R)
-        if main < trials:
-            for nm, v in jrounds(tail_keys, tail_tids)[0].items():
-                parts[nm].append(v.T)           # (R, tail) -> (tail, R)
-        samples = {nm: jnp.concatenate(vs, axis=0) if len(vs) > 1 else vs[0]
-                   for nm, vs in parts.items()}
-        return samples, None
+        ys = jsamples(keys3, tids3)
+        return ({nm: jnp.moveaxis(v, 1, -1).reshape(padded, rounds)[:trials]
+                 for nm, v in ys.items()}, None)  # (nc,R,chunk)->(trials,R)
 
-    s0, s1, c0, c1, ac = jsums(main_keys, main_tids)
-    if main < trials:
-        ys, auxT = jrounds(tail_keys, tail_tids)
-        cum = {k2: jnp.cumsum(v, axis=0) for k2, v in ys.items()}
-        s0 = {k2: s0[k2] + ys[k2].sum(axis=1) for k2 in s0}
-        s1 = {k2: s1[k2] + jnp.square(ys[k2]).sum(axis=1) for k2 in s1}
-        c0 = {k2: c0[k2] + cum[k2].sum(axis=1) for k2 in c0}
-        c1 = {k2: c1[k2] + jnp.square(cum[k2]).sum(axis=1) for k2 in c1}
-        if deadline is not None:
-            for nm, a in auxT.items():
-                r = np.asarray(a["realized"])             # (rounds, tail)
-                hist = np.stack([np.bincount(row.astype(np.int64),
-                                             minlength=k + 1)
-                                 for row in np.minimum(r, k)])
-                d = {k2: np.asarray(v) for k2, v in ac[nm].items()}
-                d["realized"] = d["realized"] + r.sum(axis=1)
-                d["missed"] = d["missed"] + np.asarray(
-                    a["missed"]).sum(axis=1)
-                d["stale"] = d["stale"] + np.asarray(a["stale"]).sum(axis=1)
-                d["khist"] = d["khist"] + hist
-                ac[nm] = d
+    valid2 = (jnp.arange(padded) < trials).reshape(nc_pad, chunk)
+    s0, s1, c0, c1, ac = jsums(keys3, tids3, valid2)
 
-    def moments(sum_, sumsq):
-        mu = np.asarray(sum_) / trials
-        var = np.maximum(np.asarray(sumsq) / trials - mu * mu, 0.0)
+    def moments(parts0, parts1):
+        # per-chunk float32 partials -> float64 in global chunk order: the
+        # same reduction whatever the device count (bit-exact sharding).
+        mu = np.asarray(parts0, np.float64).sum(axis=0) / trials
+        sq = np.asarray(parts1, np.float64).sum(axis=0)
+        var = np.maximum(sq / trials - mu * mu, 0.0)
         return mu, np.sqrt(var / trials)
 
     per_round, stderr, wallclock, wc_stderr = {}, {}, {}, {}
@@ -1497,10 +1565,14 @@ def _run_rounds(specs, process, n, *, rounds: int, k: int, trials: int,
         wallclock[nm], wc_stderr[nm] = moments(c0[nm], c1[nm])
     degr = None
     if deadline is not None:
-        degr = {nm: {"realized_k": np.asarray(d["realized"]) / trials,
-                     "missed": np.asarray(d["missed"]) / trials,
-                     "stale": np.asarray(d["stale"]) / trials,
-                     "khist": np.asarray(d["khist"]) / trials}
+        degr = {nm: {"realized_k": np.asarray(d["realized"],
+                                              np.float64).sum(0) / trials,
+                     "missed": np.asarray(d["missed"],
+                                          np.float64).sum(0) / trials,
+                     "stale": np.asarray(d["stale"],
+                                         np.float64).sum(0) / trials,
+                     "khist": np.asarray(d["khist"],
+                                         np.float64).sum(0) / trials}
                 for nm, d in ac.items()}
     return per_round, stderr, wallclock, wc_stderr, degr, None
 
@@ -1583,7 +1655,8 @@ def sweep_rounds(specs: Sequence[SchemeSpec], process, n: int, *,
                  censored_feedback: bool = False,
                  record_trace: bool = False,
                  deadline: Optional[float] = None,
-                 deadline_policy: str = "wait") -> RoundsResult:
+                 deadline_policy: str = "wait", devices=None,
+                 greedy_impl: Optional[str] = None) -> RoundsResult:
     """Evaluate every scheme over ``rounds`` consecutive rounds of ONE
     shared ``DelayProcess`` realization per trial.
 
@@ -1622,13 +1695,21 @@ def sweep_rounds(specs: Sequence[SchemeSpec], process, n: int, *,
              (close the round with whatever arrived), or ``"reissue"``
              (close partial + adaptive schemes re-gather the undelivered
              tasks first next round).
+    devices: shard the trial axis across devices (as in ``sweep``) —
+             bit-exact vs. single-device for the same (trials, seed,
+             chunk); pass ``chunk <= trials // len(devices)`` to engage
+             every device.
+    greedy_impl: how adaptive specs run the greedy pick loop —
+             ``None``/``"auto"`` (Pallas kernel on compiled backends, jnp
+             scan on CPU), ``"kernel"``, or ``"scan"``.
     """
     per_round, stderr, wallclock, wc_stderr, degr, trace = _run_rounds(
         specs, process, n, rounds=rounds, k=k, trials=trials, seed=seed,
         chunk=chunk, beta=feedback_beta, gamma=coverage_gamma,
         censored=censored_feedback, want_samples=False,
         record=record_trace, deadline=deadline,
-        deadline_policy=deadline_policy)
+        deadline_policy=deadline_policy, devices=devices,
+        greedy_impl=greedy_impl)
     return RoundsResult(per_round=per_round, stderr=stderr,
                         wallclock=wallclock, wallclock_stderr=wc_stderr,
                         trials=trials, rounds=rounds, n=n, k=k, trace=trace,
@@ -1644,7 +1725,8 @@ def trajectory_samples(spec: SchemeSpec, process, n: int, *, rounds: int,
                        censored_feedback: bool = False,
                        record_trace: bool = False,
                        deadline: Optional[float] = None,
-                       deadline_policy: str = "wait"):
+                       deadline_policy: str = "wait", devices=None,
+                       greedy_impl: Optional[str] = None):
     """Per-trial completion-time trajectories for one scheme: shape
     ``(trials, rounds)``; ``jnp.cumsum(..., axis=1)`` gives per-trial
     wall-clock curves.  With ``record_trace=True`` returns
@@ -1658,7 +1740,8 @@ def trajectory_samples(spec: SchemeSpec, process, n: int, *, rounds: int,
                                  censored=censored_feedback,
                                  want_samples=True, record=record_trace,
                                  deadline=deadline,
-                                 deadline_policy=deadline_policy)
+                                 deadline_policy=deadline_policy,
+                                 devices=devices, greedy_impl=greedy_impl)
     if record_trace:
         return samples[spec.name], trace
     return samples[spec.name]

@@ -348,65 +348,88 @@ def _jitted_greedy_need(C_tup: tuple, gamma: float):
         C, est, gamma=gamma, need=need))
 
 
+GREEDY_IMPLS = ("auto", "scan", "kernel")
+
+
+def _resolve_greedy_impl(impl: str | None) -> str:
+    """``None``/``"auto"`` -> the Pallas kernel on compiled backends
+    (TPU/GPU), the pure-jnp scan on CPU (where Pallas only interprets);
+    explicit ``"scan"``/``"kernel"`` forces one path (tests, debugging)."""
+    if impl in (None, "auto"):
+        from ..kernels.gram_matvec import default_interpret
+        return "scan" if default_interpret() else "kernel"
+    if impl not in ("scan", "kernel"):
+        raise ValueError(f"unknown greedy impl {impl!r}; choose from "
+                         f"{GREEDY_IMPLS}")
+    return impl
+
+
+@functools.lru_cache(maxsize=None)
+def _greedy_matrices(C_tup: tuple, gamma: float):
+    """Static pick-loop matrices of a TO matrix: the coverage-weight
+    matrix ``W[p, t] = sum_j gamma**j * [C[p, j] == t]`` (active slots
+    only) and the 0/1 row-covers-task incidence ``A[p, t]``.  With these,
+    greedy scores are ``cov @ W.T`` and the reissue row-priority is
+    ``need @ A.T > 0`` — no gathers in the pick loop.  Rows with distinct
+    active tasks (what ``validate_to_matrix`` enforces) make the matvec
+    arithmetic term-for-term identical to the per-slot gather form."""
+    C = np.asarray(C_tup)
+    n, r = C.shape
+    active = C != MASKED
+    disc = gamma ** np.arange(r)
+    W = np.zeros((n, n), np.float32)
+    A = np.zeros((n, n), np.float32)
+    for p in range(n):
+        for j in range(r):
+            if active[p, j]:
+                W[p, C[p, j]] += np.float32(disc[j])
+                A[p, C[p, j]] = 1.0
+    return W, A
+
+
 def greedy_row_assignment_batch(C: np.ndarray, est: jax.Array, *,
                                 gamma: float = 0.5,
-                                need: jax.Array | None = None) -> jax.Array:
+                                need: jax.Array | None = None,
+                                impl: str | None = None) -> jax.Array:
     """Batched JAX twin of ``greedy_row_assignment``: ``est`` has shape
     (..., n); returns ``worker_of_row`` of the same shape (int32).  Pure and
     jit/scan-friendly (``C`` is baked in at trace time); used per-trial
     inside the fused rounds engine.  ``C`` may be ragged: ``MASKED`` slots
-    contribute no coverage (their discount is statically zeroed).
+    contribute no coverage (their weight is statically zeroed).
+
+    The pick loop runs as dense per-step matmuls against the static
+    coverage-weight matrix of ``C`` (see ``_greedy_matrices``), either as
+    a pure-jnp scan (``repro.kernels.ref.greedy_assign_ref``) or as the
+    Pallas kernel (``repro.kernels.ops.greedy_assign``); ``impl`` selects
+    (``None``/``"auto"`` = kernel on compiled backends, scan on CPU).
 
     ``need`` (traced, (..., n) or (n,) over tasks, nonzero = needed) is the
     reissue priority: while any un-taken row still holds a needed task, the
     picker's argmin runs over those rows only.  ``need=None`` (and an
     all-zero ``need``) keeps the established pick order bit-exactly."""
+    from ..kernels import ops as kernel_ops
+    from ..kernels.ref import greedy_assign_ref
     C = np.asarray(C)
     n, r = C.shape
-    # ragged rows: masked slots neither score nor add coverage.  For dense
-    # matrices ``disc_rows`` broadcasts the same per-slot discounts as
-    # before (bit-identical arithmetic).
-    active = C != MASKED
-    Cj = jnp.asarray(np.where(active, C, 0))
-    act_f = jnp.asarray(active, jnp.float32)
-    disc_np = (gamma ** np.arange(r))[None, :] * active
-    disc_rows = jnp.asarray(disc_np, jnp.float32)            # (n, r)
-    big = jnp.float32(np.finfo(np.float32).max)
-
-    def one(e, nd):                                  # e (n,), nd (n,) | None
-        order = jnp.argsort(e)                       # stable; fastest first
-        row_need = (None if nd is None
-                    else (nd[Cj] * act_f).max(-1) > 0)       # (n,) rows
-
-        def pick(carry, w):
-            cov, taken, w_of_row = carry
-            scores = (disc_rows * cov[Cj]).sum(-1)
-            scores = jnp.where(taken, big, scores)
-            if row_need is None:
-                p = jnp.argmin(scores)               # ties -> lowest row
-            else:
-                pref = jnp.where(row_need & ~taken, scores, big)
-                p = jnp.where((pref < big).any(),
-                              jnp.argmin(pref), jnp.argmin(scores))
-            w_of_row = w_of_row.at[p].set(w.astype(jnp.int32))
-            taken = taken.at[p].set(True)
-            add = disc_rows[p] / jnp.maximum(e[w], 1e-30)
-            cov = cov.at[Cj[p]].add(add)
-            return (cov, taken, w_of_row), None
-
-        init = (jnp.zeros(n, jnp.float32), jnp.zeros(n, bool),
-                jnp.zeros(n, jnp.int32))
-        (_, _, w_of_row), _ = jax.lax.scan(pick, init, order)
-        return w_of_row
+    C_tup = tuple(tuple(int(v) for v in row) for row in C)
+    W, A = _greedy_matrices(C_tup, float(gamma))
+    Wj = jnp.asarray(W)
 
     batch = est.shape[:-1]
     flat = est.reshape((-1, n))
-    if need is None:
-        out = jax.vmap(lambda e: one(e, None))(flat)
-    else:
+    order = jnp.argsort(flat, axis=-1).astype(jnp.int32)  # stable; fast 1st
+    epick = jnp.maximum(jnp.take_along_axis(flat, order, axis=-1),
+                        jnp.float32(1e-30))
+    need_row = None
+    if need is not None:
         ndf = jnp.broadcast_to(jnp.asarray(need, jnp.float32),
                                est.shape).reshape((-1, n))
-        out = jax.vmap(one)(flat, ndf)
+        need_row = (ndf > 0).astype(jnp.float32) @ jnp.asarray(A).T
+
+    if _resolve_greedy_impl(impl) == "kernel":
+        out = kernel_ops.greedy_assign(Wj, order, epick, need_row)
+    else:
+        out = greedy_assign_ref(Wj, order, epick, need_row)
     return out.reshape(batch + (n,))
 
 

@@ -1,0 +1,109 @@
+"""Pallas kernel for the adaptive greedy row assignment (paper Sec. V +
+Egger et al., arXiv:2304.08589), batched over Monte-Carlo trials.
+
+The greedy is a sequential pick loop — n pickers (fastest worker first),
+each taking the row with the least discounted task coverage — that the
+rounds engine runs per trial per round.  The pick loop is inherently
+sequential, but with the static coverage-weight matrix
+``W[p, t] = sum_j gamma**j * [C[p, j] == t]`` each step collapses to
+dense lane-parallel ops over a block of trials:
+
+  scores  = cov @ W^T                 (one MXU matmul per step)
+  p       = argmin over rows          (min + iota trick, ties -> lowest)
+  cov    += (onehot_p @ W) / e_pick   (one more matmul)
+
+so the whole O(n^2 * r) scan becomes n small matmuls on a (block, n)
+trial block held in VMEM — no gathers, no per-trial control flow.
+
+``greedy_assign_pallas`` is the raw kernel (grid over trial blocks,
+interpret-mode fallback on CPU); ``repro.kernels.ref.greedy_assign_ref``
+is the pure-jnp oracle twin; ``repro.kernels.ops.greedy_assign`` the
+jitted public wrapper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .gram_matvec import resolve_interpret
+
+DEFAULT_BLOCK_TRIALS = 128
+
+
+def _greedy_kernel(w_ref, order_ref, epick_ref, need_ref, out_ref):
+    """One (block, n) trial block: run all n picks to completion.
+
+    Refs: ``w_ref`` (n, n) f32 coverage weights; ``order_ref`` (bt, n)
+    i32 pickers fastest-first; ``epick_ref`` (bt, n) f32 sorted delay
+    estimates (pre-clamped away from zero); ``need_ref`` (bt, n) f32
+    reissue priorities (all-zero = none); ``out_ref`` (bt, n) i32
+    worker-of-row."""
+    W = w_ref[...]
+    order = order_ref[...]
+    epick = epick_ref[...]
+    need = need_ref[...]
+    bt, n = order.shape
+    wt = W.T
+    big = jnp.float32(jnp.finfo(jnp.float32).max)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (bt, n), 1)
+
+    def pick(t, carry):
+        cov, taken, wout = carry
+        scores = jnp.where(taken, big, jnp.dot(cov, wt))
+        pref = jnp.where((need > 0) & ~taken, scores, big)
+        has = jnp.min(pref, axis=-1, keepdims=True) < big
+        sel = jnp.where(has, pref, scores)
+        m = jnp.min(sel, axis=-1, keepdims=True)
+        p = jnp.min(jnp.where(sel == m, lanes, n), axis=-1, keepdims=True)
+        hit = lanes == p                                   # ties -> lowest
+        wid = jax.lax.dynamic_slice_in_dim(order, t, 1, axis=1)
+        wout = jnp.where(hit, wid, wout)
+        taken = taken | hit
+        e_t = jax.lax.dynamic_slice_in_dim(epick, t, 1, axis=1)
+        cov = cov + jnp.dot(hit.astype(jnp.float32), W) / e_t
+        return cov, taken, wout
+
+    init = (jnp.zeros((bt, n), jnp.float32), jnp.zeros((bt, n), jnp.bool_),
+            jnp.zeros((bt, n), jnp.int32))
+    _, _, wout = jax.lax.fori_loop(0, n, pick, init)
+    out_ref[...] = wout
+
+
+def greedy_assign_pallas(W: jax.Array, order: jax.Array, epick: jax.Array,
+                         need_row: jax.Array | None = None, *,
+                         block_trials: int = DEFAULT_BLOCK_TRIALS,
+                         interpret: bool | None = None) -> jax.Array:
+    """Batched greedy row assignment.  ``W`` (n, n) f32 static coverage
+    weights, ``order``/``epick``/``need_row`` (B, n) per-trial pick data
+    (see ``repro.kernels.ref.greedy_assign_ref`` for semantics) ->
+    ``worker_of_row`` (B, n) int32.  ``interpret`` defaults to
+    backend-aware: compiled on TPU/GPU, interpreted on CPU."""
+    interpret = resolve_interpret(interpret)
+    B, n = order.shape
+    if need_row is None:
+        need_row = jnp.zeros((B, n), jnp.float32)
+    bt = min(block_trials, B)
+    pad = (-B) % bt
+    if pad:
+        # edge-pad: padded trials recompute the last real trial's picks and
+        # are sliced off — rows are independent, so real lanes are exact.
+        order = jnp.pad(order, ((0, pad), (0, 0)), mode="edge")
+        epick = jnp.pad(epick, ((0, pad), (0, 0)), mode="edge")
+        need_row = jnp.pad(need_row, ((0, pad), (0, 0)), mode="edge")
+    Bp = B + pad
+
+    out = pl.pallas_call(
+        _greedy_kernel,
+        grid=(Bp // bt,),
+        in_specs=[pl.BlockSpec((n, n), lambda i: (0, 0)),
+                  pl.BlockSpec((bt, n), lambda i: (i, 0)),
+                  pl.BlockSpec((bt, n), lambda i: (i, 0)),
+                  pl.BlockSpec((bt, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bt, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, n), jnp.int32),
+        interpret=interpret,
+    )(W.astype(jnp.float32), order.astype(jnp.int32),
+      epick.astype(jnp.float32), need_row.astype(jnp.float32))
+
+    return out[:B]

@@ -12,9 +12,11 @@ from functools import partial
 import jax
 
 from .gram_matvec import gram_matvec_pallas
+from .greedy_assign import greedy_assign_pallas
 from .swa_attention import swa_attention_pallas
 
-__all__ = ["gram_matvec", "swa_attention", "batched_gram_matvec"]
+__all__ = ["gram_matvec", "swa_attention", "batched_gram_matvec",
+           "greedy_assign"]
 
 
 @partial(jax.jit, static_argnames=("interpret", "block_d", "block_b"))
@@ -42,3 +44,16 @@ def swa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, window: int,
     """Causal sliding-window flash attention. q/k/v (T, H, dh)."""
     return swa_attention_pallas(q, k, v, window=window, interpret=interpret,
                                 block_q=block_q, block_k=block_k)
+
+
+@partial(jax.jit, static_argnames=("interpret", "block_trials"))
+def greedy_assign(W: jax.Array, order: jax.Array, epick: jax.Array,
+                  need_row: jax.Array | None = None, *,
+                  interpret: bool | None = None,
+                  block_trials: int = 128) -> jax.Array:
+    """Batched greedy row assignment via the Pallas kernel.  ``W`` (n, n)
+    coverage weights, ``order``/``epick``/``need_row`` (B, n) ->
+    worker-of-row (B, n) int32 (see ``ref.greedy_assign_ref``)."""
+    return greedy_assign_pallas(W, order, epick, need_row,
+                                interpret=interpret,
+                                block_trials=block_trials)

@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["gram_matvec_ref", "swa_attention_ref"]
+__all__ = ["gram_matvec_ref", "swa_attention_ref", "greedy_assign_ref"]
 
 
 def gram_matvec_ref(X: jax.Array, theta: jax.Array) -> jax.Array:
@@ -31,3 +31,49 @@ def swa_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("hqk,khd->qhd", p, v.astype(jnp.float32)
                       ).astype(q.dtype)
+
+
+def greedy_assign_ref(W: jax.Array, order: jax.Array, epick: jax.Array,
+                      need_row: jax.Array | None = None) -> jax.Array:
+    """Greedy row-assignment pick loop (oracle twin of the
+    ``greedy_assign`` Pallas kernel; shared math with
+    ``repro.core.scheduling.greedy_row_assignment_batch``).
+
+    ``W`` is the static (n, n) float32 coverage-weight matrix of a TO
+    matrix ``C``: ``W[p, t] = sum_j gamma**j * [C[p, j] == t]`` over the
+    active slots of row ``p`` — so a row's greedy score is the single
+    matvec ``cov @ W[p]`` and picking row ``p`` adds ``W[p] / e`` to the
+    per-task coverage.  ``order`` (B, n) int32 lists each trial's pickers
+    fastest-first; ``epick`` (B, n) float32 the matching sorted delay
+    estimates (pre-clamped away from zero); ``need_row`` (B, n), when
+    given, marks rows holding backlogged tasks — while any un-taken row is
+    needed, the argmin runs over those rows only (reissue priority).
+
+    Returns ``worker_of_row`` (B, n) int32.  Ties break to the lowest row
+    index (argmin semantics), matching the per-trial scan this replaces.
+    """
+    B, n = order.shape
+    W = W.astype(jnp.float32)
+    big = jnp.float32(jnp.finfo(jnp.float32).max)
+    lanes = jnp.arange(n)[None, :]
+
+    def pick(carry, t):
+        cov, taken, wout = carry
+        scores = jnp.where(taken, big, cov @ W.T)
+        if need_row is None:
+            sel = scores
+        else:
+            pref = jnp.where((need_row > 0) & ~taken, scores, big)
+            has = jnp.min(pref, axis=-1, keepdims=True) < big
+            sel = jnp.where(has, pref, scores)
+        p = jnp.argmin(sel, axis=-1)                 # ties -> lowest row
+        hit = lanes == p[:, None]
+        wout = jnp.where(hit, order[:, t][:, None], wout)
+        taken = taken | hit
+        cov = cov + jnp.take(W, p, axis=0) / epick[:, t][:, None]
+        return (cov, taken, wout), None
+
+    init = (jnp.zeros((B, n), jnp.float32), jnp.zeros((B, n), bool),
+            jnp.zeros((B, n), jnp.int32))
+    (_, _, wout), _ = jax.lax.scan(pick, init, jnp.arange(n))
+    return wout

@@ -13,13 +13,16 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import threading
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["MeshCtx", "current_mesh_ctx", "mesh_context", "shard", "axis_size",
-           "DATA", "MODEL", "BOTH"]
+           "DATA", "MODEL", "BOTH", "TRIAL_AXIS", "trial_devices",
+           "trial_mesh", "shard_trials"]
 
 DATA = "__data__"    # placeholder resolved to the ctx's (possibly stacked) data axes
 MODEL = "__model__"  # placeholder resolved to the ctx's model axis
@@ -113,3 +116,74 @@ def shard(x: jax.Array, *entries, note: str = "") -> jax.Array:
             resolved.append(ax)
     sh = NamedSharding(ctx.mesh, P(*resolved))
     return jax.lax.with_sharding_constraint(x, sh)
+
+
+# --------------------------------------------------------------------------
+# trial-axis sharding (Monte-Carlo sweeps)
+# --------------------------------------------------------------------------
+
+TRIAL_AXIS = "trials"
+
+
+def trial_devices(devices=None) -> Tuple[jax.Device, ...]:
+    """Resolve the ``devices`` argument of ``sweep``/``sweep_rounds``.
+
+    ``None`` means every local device; an int means the first that many
+    local devices; a sequence of ``jax.Device`` is taken as-is."""
+    if devices is None:
+        return tuple(jax.devices())
+    if isinstance(devices, int):
+        ds = jax.devices()
+        if not 1 <= devices <= len(ds):
+            raise ValueError(f"devices must be in 1..{len(ds)} (local "
+                             f"device count), got {devices}")
+        return tuple(ds[:devices])
+    ds = tuple(devices)
+    if not ds:
+        raise ValueError("devices must name at least one device")
+    return ds
+
+
+def trial_mesh(devices: Sequence[jax.Device]) -> Mesh:
+    """1-D mesh over the Monte-Carlo trial axis."""
+    return Mesh(np.asarray(devices, dtype=object), (TRIAL_AXIS,))
+
+
+def shard_trials(fn, devices: Sequence[jax.Device]):
+    """Shard ``fn`` over a 1-D trial mesh: every argument and every output
+    is split along its leading (chunk) axis across ``devices`` in contiguous
+    blocks, each device runs ``fn`` on its block, and outputs come back
+    concatenated in global chunk order.  ``fn`` must be collective-free —
+    the Monte-Carlo scans qualify because trials are independent.
+
+    Mechanism: the leading axis is reshaped to ``(d, per_device, ...)``,
+    ``fn`` is ``vmap``-ed over the device axis, and the whole thing is
+    jitted with ``NamedSharding(mesh, P(TRIAL_AXIS))`` on inputs and
+    outputs, so the GSPMD partitioner splits every per-iteration tensor of
+    the chunk scan across devices while the scan itself stays sequential
+    per shard.  This deliberately does NOT use ``shard_map``: on forced
+    multi-device host meshes (jax 0.4.x CPU) ``shard_map``-wrapped scan
+    programs miscompile — constant-initialized loop carries are aliased
+    across co-resident shards and fusion-dependent partial sums come out
+    wrong on every device but the first — while the identical program
+    partitioned via ``jit``/``NamedSharding`` (and via ``pmap``) is
+    bit-exact vs. the eager single-device result.
+
+    The returned callable is fully jitted — callers must NOT wrap it in
+    another ``jax.jit`` (the reshapes below are free layout changes and the
+    inner jit caches per input shape)."""
+    devs = tuple(devices)
+    d = len(devs)
+    mesh = trial_mesh(devs)
+    sh = NamedSharding(mesh, P(TRIAL_AXIS))
+    vfn = jax.jit(jax.vmap(fn), in_shardings=sh, out_shardings=sh)
+
+    def sharded(*args):
+        parts = [jax.device_put(
+            jnp.reshape(a, (d, a.shape[0] // d) + a.shape[1:]), sh)
+            for a in args]
+        out = vfn(*parts)
+        return jax.tree_util.tree_map(
+            lambda x: jnp.reshape(x, (-1,) + x.shape[2:]), out)
+
+    return sharded

@@ -7,7 +7,12 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref
-from repro.kernels.ops import gram_matvec, batched_gram_matvec, swa_attention
+from repro.kernels.ops import (gram_matvec, batched_gram_matvec,
+                               greedy_assign, swa_attention)
+from repro.core.scheduling import (cyclic_to_matrix,
+                                   greedy_row_assignment_batch,
+                                   random_assignment_to_matrix,
+                                   staircase_to_matrix)
 
 
 class TestGramMatvec:
@@ -125,3 +130,100 @@ class TestSWAAttention:
         out = swa_attention(q, k, v, window=W, block_q=32, block_k=32)
         want = ref.swa_attention_ref(q, k, v, W)
         assert np.abs(np.asarray(out) - np.asarray(want)).max() < 3e-4
+
+
+def _greedy_inputs(C, B, seed, gamma=0.5, with_need=False):
+    """Kernel-shaped greedy inputs for a TO matrix: the coverage-weight
+    matrix plus per-trial (order, epick, need_row) exactly as
+    ``greedy_row_assignment_batch`` builds them."""
+    from repro.core.scheduling import _greedy_matrices
+    C = np.asarray(C)
+    n = C.shape[0]
+    C_tup = tuple(tuple(int(v) for v in row) for row in C)
+    W, A = _greedy_matrices(C_tup, float(gamma))
+    est = jax.random.uniform(jax.random.PRNGKey(seed), (B, n),
+                             minval=0.01, maxval=1.0)
+    order = jnp.argsort(est, axis=-1).astype(jnp.int32)
+    epick = jnp.maximum(jnp.take_along_axis(est, order, axis=-1),
+                        jnp.float32(1e-30))
+    need_row = None
+    if with_need:
+        need = (jax.random.uniform(jax.random.PRNGKey(seed + 1), (B, n))
+                < 0.3).astype(jnp.float32)
+        need_row = need @ jnp.asarray(A).T
+    return jnp.asarray(W), order, epick, need_row
+
+
+class TestGreedyAssign:
+    """Pallas greedy row-assignment kernel vs the pure-jnp oracle.  The
+    pick loop is integer-valued, so every comparison is bitwise."""
+
+    @pytest.mark.parametrize("n,r,B,bt", [
+        (8, 3, 64, 128),     # single partial block
+        (8, 3, 128, 128),    # exactly one block
+        (8, 3, 300, 128),    # multi-block with a ragged edge
+        (4, 1, 17, 8),       # tiny blocks, many grid steps
+        (12, 12, 50, 32),    # full load r = n
+    ])
+    def test_matches_oracle(self, n, r, B, bt):
+        C = cyclic_to_matrix(n, r)
+        W, order, epick, need_row = _greedy_inputs(C, B, seed=n * B)
+        out = greedy_assign(W, order, epick, need_row, block_trials=bt)
+        want = ref.greedy_assign_ref(W, order, epick, need_row)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+    def test_need_vector_reissue_priority(self):
+        C = staircase_to_matrix(8, 3)
+        W, order, epick, need_row = _greedy_inputs(C, 90, seed=5,
+                                                   with_need=True)
+        out = greedy_assign(W, order, epick, need_row, block_trials=32)
+        want = ref.greedy_assign_ref(W, order, epick, need_row)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+    def test_tied_scores_break_to_lowest_row(self):
+        """Identical estimates everywhere -> maximal score ties; the kernel
+        must reproduce the oracle's lowest-row argmin tie-break."""
+        n, B = 8, 40
+        C = cyclic_to_matrix(n, 3)
+        W, _, _, _ = _greedy_inputs(C, B, seed=0)
+        est = jnp.full((B, n), 0.25, jnp.float32)
+        order = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (B, n))
+        out = greedy_assign(W, order, est, block_trials=16)
+        want = ref.greedy_assign_ref(W, order, est)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+    def test_ragged_loads(self):
+        loads = [3, 1, 2, 3, 1, 3]
+        C = cyclic_to_matrix(6, loads=loads)
+        W, order, epick, need_row = _greedy_inputs(C, 70, seed=11,
+                                                   with_need=True)
+        out = greedy_assign(W, order, epick, need_row, block_trials=64)
+        want = ref.greedy_assign_ref(W, order, epick, need_row)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+    @pytest.mark.parametrize("with_need", [False, True])
+    def test_batch_entry_point_impls_agree(self, with_need):
+        """``greedy_row_assignment_batch(impl=...)`` is bitwise identical
+        between the scan and the kernel, including leading batch dims."""
+        n, r = 8, 3
+        C = random_assignment_to_matrix(n, seed=3)
+        est = jax.random.uniform(jax.random.PRNGKey(2), (5, 13, n),
+                                 minval=0.01, maxval=1.0)
+        need = ((jax.random.uniform(jax.random.PRNGKey(3), (5, 13, n)) < 0.4)
+                .astype(jnp.float32) if with_need else None)
+        a = greedy_row_assignment_batch(C, est, need=need, impl="scan")
+        b = greedy_row_assignment_batch(C, est, need=need, impl="kernel")
+        assert a.shape == est.shape
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @settings(deadline=None, max_examples=25)
+    @given(st.integers(3, 10), st.integers(1, 6), st.integers(1, 150),
+           st.booleans(), st.integers(0, 2**16))
+    def test_property_matches_oracle(self, n, r, B, with_need, seed):
+        r = min(r, n)
+        C = cyclic_to_matrix(n, r) if seed % 2 else staircase_to_matrix(n, r)
+        W, order, epick, need_row = _greedy_inputs(C, B, seed=seed,
+                                                   with_need=with_need)
+        out = greedy_assign(W, order, epick, need_row, block_trials=32)
+        want = ref.greedy_assign_ref(W, order, epick, need_row)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
