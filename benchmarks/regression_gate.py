@@ -25,6 +25,12 @@ Compares the machine-readable ``BENCH_*.json`` results written by
   under spot preemption with a round deadline (``close_partial``) must
   stay positive and within ``--fault-drop`` percentage points of the
   baseline: crash-aware scheduling keeps paying under failures.
+* ``fig13`` — the live execution layer must keep agreeing with the
+  simulator: the bit-exact legs (live vs engine record/replay evaluation,
+  deadline degradation streams) must report PASS, and the live-vs-MC
+  relative mean error must stay below ``fig13_live_rel_err_max`` (a
+  sampling-noise bound — the live run is one realization — not a timing
+  gate, so it is machine-independent).
 * ``scaling`` (opt-in via ``--only``) — the device-sharded sweep's strong
   speedup (same trials, 1 device vs all local devices) from the
   ``mc_engine/scaling`` row must stay above ``--scaling-tol`` x the
@@ -47,7 +53,7 @@ Exit codes: 0 all checks pass, 1 regression detected, 2 missing inputs.
 
 Usage (CI)::
 
-    python -m benchmarks.run --quick --only mc_engine,fig8,fig10,fig11,fig12 --out bench_out
+    python -m benchmarks.run --quick --only mc_engine,fig8,fig10,fig11,fig12,fig13 --out bench_out
     python -m benchmarks.regression_gate --results bench_out
 """
 from __future__ import annotations
@@ -120,12 +126,18 @@ def main(argv=None) -> None:
     ap.add_argument("--scaling-tol", type=float, default=0.75,
                     help="fail if the multi-device strong speedup < tol * "
                          "baseline (scaling check only)")
-    ap.add_argument("--only", default="mc_engine,fig8,fig10,fig11,fig12",
+    ap.add_argument("--live-tol", type=float, default=None,
+                    help="max allowed live-vs-MC relative mean error for "
+                         "the fig13 check (default: the baseline's "
+                         "fig13_live_rel_err_max)")
+    ap.add_argument("--only",
+                    default="mc_engine,fig8,fig10,fig11,fig12,fig13",
                     help="comma-separated subset of checks to run; add "
                          "'scaling' on the multi-device leg")
     args = ap.parse_args(argv)
 
-    known = {"mc_engine", "fig8", "fig10", "fig11", "fig12", "scaling"}
+    known = {"mc_engine", "fig8", "fig10", "fig11", "fig12", "fig13",
+             "scaling"}
     only = {s.strip() for s in args.only.split(",") if s.strip()}
     unknown = sorted(only - known)
     if unknown:
@@ -257,6 +269,29 @@ def main(argv=None) -> None:
               f"{base['fig12_fault_margin']:+.1f}% - {args.fault_drop})")
         if not ok:
             failures.append("fig12 fault margin")
+
+    # --- fig13 live-vs-simulator agreement ----------------------------------
+    if "fig13" in only:
+        fig13 = _load_bench(args.results, "fig13")
+        _check_finite(fig13)
+        exact = _row(fig13, "fig13/exact")["derived"]
+        dl = _row(fig13, "fig13/deadline")["derived"]
+        acc = _row(fig13, "fig13/accuracy")["derived"]
+        rel = acc.get("rel_err")
+        if not isinstance(rel, (int, float)):
+            print("regression_gate: fig13/accuracy row lacks a numeric "
+                  "'rel_err' derived field")
+            sys.exit(2)
+        tol = (args.live_tol if args.live_tol is not None
+               else base["fig13_live_rel_err_max"])
+        bit_ok = (exact.get("status") == "PASS"
+                  and dl.get("status") == "PASS")
+        ok = bit_ok and rel <= tol
+        print(f"{'PASS' if ok else 'FAIL'} fig13 live-vs-simulator: "
+              f"exact={exact.get('status')} deadline={dl.get('status')} "
+              f"rel_err={rel:.4f} (max {tol:g})")
+        if not ok:
+            failures.append("fig13 live agreement")
 
     if failures:
         print(f"regression_gate: FAILED checks: {failures}")

@@ -25,6 +25,13 @@ Prints ``name,us_per_call,derived`` CSV rows:
          zoo under round deadlines (exits non-zero unless adaptive +
          close_partial beats static under preemption, every scenario
          stays finite, and the fault-bearing trace replays bit-exactly)
+  fig13  live execution layer vs the simulator: an async in-process
+         master-worker run must match ``sweep_rounds`` bit-exactly
+         (shared-seed tables + the engine's fused scorer), its recorded
+         trace must replay bit-exactly, its mean must sit inside the MC
+         prediction's sampling tolerance, and deadline degradation
+         accounting must match the engine's streams (non-zero exit on
+         any violation)
   mc_engine  fused sweep-engine throughput vs the seed per-scheme path
   table1 end-to-end DGD iteration per scheme incl. real PC/PCMM decode
   roofline  per-(mesh, arch, shape) terms from saved dry-run artifacts
@@ -74,8 +81,8 @@ def main(argv=None) -> None:
     from . import (common, fig3_delays, fig4_vs_load, fig5_ec2,
                    fig6_vs_workers, fig7_vs_target, fig8_convergence,
                    fig9_multimessage, fig10_load_rebalance,
-                   fig11_trace_replay, fig12_faults, mc_engine,
-                   table1_e2e, roofline_report)
+                   fig11_trace_replay, fig12_faults, fig13_live,
+                   mc_engine, table1_e2e, roofline_report)
 
     jobs = {
         "fig3": lambda: fig3_delays.run(trials),
@@ -90,6 +97,7 @@ def main(argv=None) -> None:
                                                 out=args.out or "bench_out"),
         "fig12": lambda: fig12_faults.run(trials,
                                           out=args.out or "bench_out"),
+        "fig13": lambda: fig13_live.run(trials),
         "mc_engine": lambda: mc_engine.run(trials),
         "table1": table1_e2e.run,
         "roofline": roofline_report.run,

@@ -1,5 +1,11 @@
 """repro.core — the paper's contribution: straggler-tolerant computation
-scheduling for distributed SGD (Amiri & Gündüz, IEEE TSP 2019)."""
+scheduling for distributed SGD (Amiri & Gündüz, IEEE TSP 2019).
+
+``RoundConfig`` is the canonical round configuration (one validator shared
+by the simulator, the trainer, and the live layer); the live execution
+types (``run_live``, ``Master``, ``run_worker``, ...) are re-exported
+lazily from ``repro.live`` so ``import repro.core`` stays light."""
+from .spec import (RoundConfig, DEADLINE_POLICIES, validate_deadline)
 from .scheduling import (MASKED, cyclic_to_matrix, staircase_to_matrix,
                          random_assignment_to_matrix, to_matrix,
                          validate_to_matrix, loads_of_matrix,
@@ -43,3 +49,21 @@ from .coded import (pc_threshold, pcmm_threshold, pc_encode, pc_decode,
                     pcmm_worker_compute, simulate_pc_completion,
                     simulate_pcmm_completion)
 from .aggregator import RoundSpec, StragglerAggregator
+
+# ------------------- live-layer facade (lazy re-exports) ---------------------
+# repro.live imports from repro.core's submodules, so importing it eagerly
+# here would be circular; PEP 562 resolves the names on first access.
+_LIVE_EXPORTS = ("run_live", "Master", "LiveResult", "RoundReport",
+                 "run_worker", "sample_delay_tables", "Comm", "Listener",
+                 "CommClosedError", "connect", "listen")
+
+
+def __getattr__(name):
+    if name in _LIVE_EXPORTS:
+        from .. import live
+        return getattr(live, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_LIVE_EXPORTS))

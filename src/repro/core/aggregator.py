@@ -58,7 +58,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import montecarlo, scheduling
+from . import spec as spec_mod
 from .cluster import IIDProcess, as_process
+from .spec import RoundConfig
 from .completion import (apply_row_layout, message_arrival_times,
                          message_slot_layout, row_layout_is_identity,
                          winner_mask_gather)
@@ -101,46 +103,23 @@ class RoundSpec:
     deadline_policy: str = "wait"      # wait | close_partial | reissue
 
     def __post_init__(self):
-        if not (1 <= self.k <= self.n):
-            raise ValueError(f"need 1 <= k <= n; got k={self.k}, n={self.n}")
-        if not (1 <= self.r <= self.n):
-            raise ValueError(f"need 1 <= r <= n; got r={self.r}, n={self.n}")
-        if self.messages is not None and not 1 <= self.messages <= self.r:
-            raise ValueError(f"need 1 <= messages <= r={self.r}; got "
-                             f"messages={self.messages}")
-        if self.comm_eps < 0:
-            raise ValueError(f"comm_eps must be >= 0, got {self.comm_eps}")
-        if self.deadline_policy not in ("wait", "close_partial", "reissue"):
-            raise ValueError(f"deadline_policy must be wait | close_partial "
-                             f"| reissue; got {self.deadline_policy!r}")
-        if self.deadline is not None and not self.deadline > 0:
-            raise ValueError(f"deadline must be > 0, got {self.deadline}")
-        if self.deadline is None and self.deadline_policy != "wait":
-            raise ValueError(f"deadline_policy="
-                             f"{self.deadline_policy!r} needs a deadline")
+        spec_mod._legacy_warning(
+            "RoundSpec", "call .to_round_spec() (field map: schedule→kind; "
+            "adaptive / censored_feedback / rebalance / dead_after now live "
+            "on RoundConfig)")
         if self.loads is not None:
             object.__setattr__(self, "loads",
                                tuple(int(v) for v in self.loads))
-            lv = np.asarray(self.loads, np.int64)
-            if lv.shape != (self.n,) or lv.min() < 1 or lv.max() > self.r:
-                raise ValueError(f"loads must be ({self.n},) with 1 <= load "
-                                 f"<= r={self.r}; got {self.loads}")
-            if self.schedule not in ("cs", "ss", "ra"):
-                raise ValueError(
-                    f"ragged loads need a slot-0-diagonal schedule (cs / ss "
-                    f"/ ra) so every task stays covered; got "
-                    f"{self.schedule!r}")
-        # the masked assignment must still be able to deliver k distinct
-        # results — catch impossible rounds up front instead of letting the
-        # engine report +inf completions (or hang a waiting master).
-        C = self.to_matrix()
-        covered = int(np.unique(C[C >= 0]).size)
-        if covered < self.k:
-            raise ValueError(
-                f"schedule {self.schedule!r} with loads={self.loads} covers "
-                f"only {covered} distinct tasks < k={self.k} "
-                f"({self.k - covered} short): no round can ever complete; "
-                f"lower k or raise the per-worker loads")
+        # one canonical validator (repro.core.spec.RoundConfig) — a bare
+        # RoundSpec carries no adaptivity, so only the schedule-shape checks
+        # apply (``reissue`` stands alone here: its adaptive requirement is
+        # enforced where the scheduler is built, as before).
+        RoundConfig(n=self.n, k=self.k, kind=self.schedule, r=self.r,
+                    loads=self.loads, messages=self.messages,
+                    comm_eps=self.comm_eps, deadline=self.deadline,
+                    deadline_policy=self.deadline_policy,
+                    adaptive=self.deadline_policy == "reissue",
+                    seed=self.seed)
 
     @property
     def n_messages(self) -> int:
@@ -207,30 +186,16 @@ class StragglerAggregator:
                  censored_feedback: bool = False,
                  rebalance: bool = False,
                  dead_after: int | None = None):
-        if censored_feedback and not adaptive:
-            raise ValueError("censored_feedback requires adaptive=True — "
-                             "static schedules take no feedback to censor")
-        if rebalance and not adaptive:
-            raise ValueError("rebalance requires adaptive=True — load "
-                             "re-allocation is feedback-driven")
-        if dead_after is not None and not adaptive:
-            raise ValueError("dead_after requires adaptive=True — crash "
-                             "detection feeds the adaptive scheduler")
-        if spec.deadline_policy == "reissue" and not adaptive:
-            raise ValueError("deadline_policy='reissue' requires "
-                             "adaptive=True — re-gathering undelivered "
-                             "tasks is a scheduling decision")
-        if rebalance and spec.loads is None:
-            raise ValueError("rebalance needs RoundSpec.loads as the "
-                             "initial budget below the cap r")
-        if rebalance and spec.messages is not None:
-            raise ValueError("rebalance supports per-slot messages only")
-        if rebalance and spec.comm_eps:
-            raise ValueError("rebalance does not support comm_eps yet")
-        if adaptive and spec.comm_eps:
-            raise ValueError("comm_eps with adaptive scheduling is not "
-                             "supported yet (expected_completion could not "
-                             "estimate the policy actually run)")
+        # the adaptive-family cross-field rules live in the one canonical
+        # validator: re-validate the spec WITH the adaptivity flags attached.
+        RoundConfig(n=spec.n, k=spec.k, kind=spec.schedule, r=spec.r,
+                    loads=spec.loads, messages=spec.messages,
+                    comm_eps=spec.comm_eps, deadline=spec.deadline,
+                    deadline_policy=spec.deadline_policy,
+                    adaptive=adaptive, rebalance=rebalance,
+                    censored_feedback=censored_feedback,
+                    dead_after=dead_after, feedback_beta=feedback_beta,
+                    coverage_gamma=coverage_gamma, seed=spec.seed)
         self.spec = spec
         self.process = as_process(delay)
         self.rebalance = bool(rebalance)

@@ -130,6 +130,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..sharding import shard_trials, trial_devices
+from .spec import (DEADLINE_POLICIES, _internal, _legacy_warning,
+                   validate_deadline)
 
 __all__ = [
     "SchemeSpec", "SweepResult", "RoundsResult", "to_spec", "lb_spec",
@@ -163,6 +165,16 @@ class SchemeSpec:
     comm_eps: float = 0.0           # per-message protocol overhead: a
                                     # worker's l-th message lands (l+1)*eps
                                     # late (serialized uplink)
+
+    def __post_init__(self):
+        # no validation here — invalid specs are (and stay) rejected at
+        # sweep time by ``_check_specs`` with engine-level context; direct
+        # construction is merely deprecated in favor of the factories /
+        # ``RoundConfig.to_scheme_spec()``.
+        _legacy_warning(
+            "SchemeSpec", "call .to_scheme_spec() (or use the to_spec / "
+            "tau_spec / adaptive_spec / lb_spec / pc_spec / pcmm_spec "
+            "factories)")
 
     @property
     def load(self) -> int:
@@ -230,16 +242,18 @@ def to_spec(name: str, C, messages: Optional[int] = None, *,
     equivalently encoded as trailing -1 sentinels in ``C``); ``comm_eps``
     is the per-message protocol overhead."""
     Cf, lt = _freeze_ragged(C, loads)
-    return SchemeSpec(name=name, kind="to", C=Cf, messages=messages,
-                      loads=lt, comm_eps=float(comm_eps))
+    with _internal():
+        return SchemeSpec(name=name, kind="to", C=Cf, messages=messages,
+                          loads=lt, comm_eps=float(comm_eps))
 
 
 def tau_spec(name: str, C, messages: Optional[int] = None, *,
              loads=None, comm_eps: float = 0.0) -> SchemeSpec:
     """Raw task-arrival samples for a TO matrix (no order statistics)."""
     Cf, lt = _freeze_ragged(C, loads)
-    return SchemeSpec(name=name, kind="tau", C=Cf, messages=messages,
-                      loads=lt, comm_eps=float(comm_eps))
+    with _internal():
+        return SchemeSpec(name=name, kind="tau", C=Cf, messages=messages,
+                          loads=lt, comm_eps=float(comm_eps))
 
 
 def adaptive_spec(name: str, C, messages: Optional[int] = None, *,
@@ -256,11 +270,14 @@ def adaptive_spec(name: str, C, messages: Optional[int] = None, *,
         # the budget stays a budget — do NOT fold it into row masks
         lt = (None if loads is None
               else tuple(int(v) for v in np.asarray(loads, np.int64)))
-        return SchemeSpec(name=name, kind="adaptive", C=_freeze_matrix(C),
-                          messages=messages, loads=lt, rebalance=True)
+        with _internal():
+            return SchemeSpec(name=name, kind="adaptive",
+                              C=_freeze_matrix(C), messages=messages,
+                              loads=lt, rebalance=True)
     Cf, lt = _freeze_ragged(C, loads)
-    return SchemeSpec(name=name, kind="adaptive", C=Cf, messages=messages,
-                      loads=lt)
+    with _internal():
+        return SchemeSpec(name=name, kind="adaptive", C=Cf,
+                          messages=messages, loads=lt)
 
 
 def lb_spec(r: Optional[int] = None, name: str = "lb",
@@ -284,15 +301,17 @@ def lb_spec(r: Optional[int] = None, name: str = "lb",
             lt = tuple(int(v) for v in lv)
     elif r is None:
         raise ValueError("need a load r (or a loads vector)")
-    return SchemeSpec(name=name, kind="lb", r=int(r), messages=messages,
-                      loads=lt, comm_eps=float(comm_eps))
+    with _internal():
+        return SchemeSpec(name=name, kind="lb", r=int(r), messages=messages,
+                          loads=lt, comm_eps=float(comm_eps))
 
 
 def pc_spec(r: int, name: str = "pc") -> SchemeSpec:
     """Polynomially-coded scheme at load ``r`` — one-shot by construction
     (the PC decoder needs a worker's full sum, eqs. 51-52); use ``pcmm_spec``
     for coded rounds with an intra-round message budget."""
-    return SchemeSpec(name=name, kind="pc", r=int(r))
+    with _internal():
+        return SchemeSpec(name=name, kind="pc", r=int(r))
 
 
 def pcmm_spec(r: int, name: str = "pcmm",
@@ -300,7 +319,9 @@ def pcmm_spec(r: int, name: str = "pcmm",
     """Polynomially-coded multi-message scheme at load ``r``; ``messages``
     bundles its per-slot partials into fewer messages (eqs. 56-57 keep
     counting partials, they just arrive in lumps)."""
-    return SchemeSpec(name=name, kind="pcmm", r=int(r), messages=messages)
+    with _internal():
+        return SchemeSpec(name=name, kind="pcmm", r=int(r),
+                          messages=messages)
 
 
 def _pc_threshold(n: int, r: int) -> int:
@@ -978,9 +999,20 @@ class SweepResult:
         return float(v[0])
 
 
+def _reject_single_round_trace(record_trace: bool, fn: str) -> None:
+    """Canonical rejection of ``record_trace=`` on the single-round entry
+    points (accepted for signature uniformity with the rounds axis)."""
+    if record_trace:
+        raise ValueError(f"record_trace is only available on the rounds "
+                         f"axis (sweep_rounds / trajectory_samples); "
+                         f"{fn} evaluates a single round and has no "
+                         f"per-round delay tables to record")
+
+
 def sweep(specs: Sequence[SchemeSpec], model, n: int, *, trials: int = 20000,
           seed: int = 0, chunk: Optional[int] = None,
-          ks: Optional[int] = None, devices=None) -> SweepResult:
+          ks: Optional[int] = None, record_trace: bool = False,
+          devices=None, greedy_impl: Optional[str] = None) -> SweepResult:
     """Evaluate every scheme against ONE shared set of delay draws.
 
     Parameters
@@ -996,6 +1028,9 @@ def sweep(specs: Sequence[SchemeSpec], model, n: int, *, trials: int = 20000,
             O(chunk * n * r_max) per device.
     ks:     ``None`` → all-k mode: one sort yields every k in 1..n.
             An int → only that order statistic, via ``lax.top_k``.
+    record_trace: accepted for signature uniformity with ``sweep_rounds``;
+            single-round sweeps have nothing to record, so ``True`` raises
+            a ValueError pointing at the rounds axis.
     devices: shard the trial axis across these devices
             (``None`` = all local devices, an int = that many, or an
             explicit sequence).  Whole chunks are dealt to devices, so at
@@ -1003,7 +1038,13 @@ def sweep(specs: Sequence[SchemeSpec], model, n: int, *, trials: int = 20000,
             used — pass ``chunk <= trials // len(devices)`` to engage all
             of them.  Results are bit-exact vs. the single-device path for
             the same (trials, seed, chunk).
+    greedy_impl: accepted (and validated) for signature uniformity with
+            ``sweep_rounds``; single-round sweeps reject adaptive specs,
+            so there is no greedy pick loop to route.
     """
+    from .scheduling import _resolve_greedy_impl
+    _reject_single_round_trace(record_trace, "sweep")
+    _resolve_greedy_impl(greedy_impl)
     means, stderr = _run(specs, model, n, trials=trials, seed=seed,
                          chunk=chunk, ks=ks, want_samples=False,
                          devices=devices)
@@ -1014,12 +1055,19 @@ def sweep(specs: Sequence[SchemeSpec], model, n: int, *, trials: int = 20000,
 
 def completion_samples(spec: SchemeSpec, model, n: int, *, trials: int = 10000,
                        seed: int = 0, chunk: Optional[int] = None,
-                       k: Optional[int] = None, devices=None) -> Array:
+                       k: Optional[int] = None, record_trace: bool = False,
+                       devices=None,
+                       greedy_impl: Optional[str] = None) -> Array:
     """Per-trial completion-time samples for one scheme.
 
     Returns shape ``(trials,)`` when ``k`` is given (or for ``pcmm``), else
     ``(trials, n)`` with column ``k-1`` holding the k-th order statistic.
+    ``record_trace`` / ``greedy_impl`` are accepted for signature
+    uniformity with the rounds axis (see ``sweep``).
     """
+    from .scheduling import _resolve_greedy_impl
+    _reject_single_round_trace(record_trace, "completion_samples")
+    _resolve_greedy_impl(greedy_impl)
     out = _run([spec], model, n, trials=trials, seed=seed, chunk=chunk,
                ks=k, want_samples=True, devices=devices)[spec.name]
     return out[:, 0] if out.shape[-1] == 1 else out
@@ -1029,13 +1077,18 @@ def task_arrival_samples(C, model, *, trials: int = 10000, seed: int = 0,
                          chunk: Optional[int] = None,
                          messages: Optional[int] = None,
                          loads=None, comm_eps: float = 0.0,
-                         devices=None) -> Array:
+                         record_trace: bool = False, devices=None,
+                         greedy_impl: Optional[str] = None) -> Array:
     """Raw per-task arrival-time samples ``tau`` of shape (trials, n) for a
     TO matrix — shared-draw backing for joint-survival estimators.
     ``messages`` is the per-round message budget (default: per-slot sends);
     ``loads`` masks each row's trailing slots (ragged per-worker loads —
     tasks with no active copy come out +inf); ``comm_eps`` the per-message
-    overhead."""
+    overhead.  ``record_trace`` / ``greedy_impl`` are accepted for
+    signature uniformity with the rounds axis (see ``sweep``)."""
+    from .scheduling import _resolve_greedy_impl
+    _reject_single_round_trace(record_trace, "task_arrival_samples")
+    _resolve_greedy_impl(greedy_impl)
     n = np.asarray(C).shape[0]
     spec = tau_spec("tau", C, messages=messages, loads=loads,
                     comm_eps=comm_eps)
@@ -1483,7 +1536,7 @@ def _check_rounds_args(specs, n, ks, rounds):
     return specs
 
 
-_POLICIES = ("wait", "close_partial", "reissue")
+_POLICIES = DEADLINE_POLICIES        # canonical tuple lives in repro.core.spec
 
 
 def _run_rounds(specs, process, n, *, rounds: int, k: int, trials: int,
@@ -1497,16 +1550,7 @@ def _run_rounds(specs, process, n, *, rounds: int, k: int, trials: int,
     process = as_process(process)
     process.check_rounds(rounds)
     specs = _check_rounds_args(specs, n, k, rounds)
-    if deadline_policy not in _POLICIES:
-        raise ValueError(f"unknown deadline policy {deadline_policy!r}; "
-                         f"choose from {_POLICIES}")
-    if deadline is not None:
-        deadline = float(deadline)
-        if not deadline > 0:
-            raise ValueError(f"deadline must be > 0, got {deadline}")
-    elif deadline_policy != "wait":
-        raise ValueError(f"deadline_policy={deadline_policy!r} needs a "
-                         f"deadline")
+    deadline = validate_deadline(deadline, deadline_policy)
     _resolve_greedy_impl(greedy_impl)       # validate early (clear error)
     r_max = max(sp.load for sp in specs)
     chunk = _normalize_chunk(trials, chunk)

@@ -39,7 +39,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import (ARCH_IDS, SHAPES, get_config, input_specs, resolve,
                        shape_supported)
-from ..core import RoundSpec, scenario1
+from ..core import RoundConfig, scenario1
 from ..models import active_params, forward, init_cache, init_params
 from ..optim import adamw
 from ..sharding import MeshCtx, mesh_context
@@ -129,7 +129,7 @@ def build_train(cfg, shape: str, ctx: MeshCtx, *, r: int, k_frac: float,
                 schedule: str, zero1: bool = False):
     n = ctx.data_size
     k = max(1, int(round(k_frac * n)))
-    spec = RoundSpec(n=n, r=r, k=k, schedule=schedule)
+    spec = RoundConfig(n=n, k=k, kind=schedule, r=r).to_round_spec()
     opt = adamw(1e-4)
     step = make_straggler_train_step(cfg, opt, spec, scenario1(),
                                      scan_slots=False)

@@ -29,7 +29,7 @@ import numpy as np
 
 from ..configs import ARCH_IDS, get_config
 from ..core import (AR1Process, AdaptiveScheduler, BimodalStragglerDelays,
-                    DelayTrace, FAULT_SCENARIOS, RoundSpec, TraceProcess,
+                    DelayTrace, FAULT_SCENARIOS, RoundConfig, TraceProcess,
                     ec2_cluster, heterogeneous_scales, load_trace,
                     make_scenario, save_trace, scenario1)
 from ..data import TaskPartition, lm_task_batches
@@ -107,6 +107,12 @@ def main(argv=None):
                "trace make the delay stream itself recordable and "
                "replayable.")
     ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--config", default=None, metavar="PATH",
+                    help="load the round configuration from a serialized "
+                         "repro.core.RoundConfig JSON document "
+                         "(RoundConfig.save / to_json); overrides --n/--r/"
+                         "--k/--schedule/--loads/--adaptive/--deadline/"
+                         "--deadline-policy/--dead-after")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-runnable)")
     ap.add_argument("--steps", type=int, default=50)
@@ -193,12 +199,6 @@ def main(argv=None):
         raise SystemExit("use text archs for this launcher; whisper/llava "
                          "training is exercised via tests + dryrun")
 
-    loads = None
-    if args.loads:
-        loads = tuple(int(v) for v in args.loads.split(","))
-        if len(loads) != args.n:
-            raise SystemExit(f"--loads needs {args.n} entries, got "
-                             f"{len(loads)}")
     if args.log_delays:
         # fail fast on an unwritable destination instead of after the
         # whole run has been spent recording
@@ -206,18 +206,32 @@ def main(argv=None):
         os.makedirs(out_dir, exist_ok=True)
         if not os.access(out_dir, os.W_OK):
             raise SystemExit(f"--log-delays: cannot write to {out_dir}")
-    if args.deadline_policy == "reissue" and not args.adaptive:
-        raise SystemExit("--deadline-policy reissue needs --adaptive "
-                         "(re-gathering undelivered tasks is a scheduling "
-                         "decision)")
-    if args.dead_after is not None and not args.adaptive:
-        raise SystemExit("--dead-after needs --adaptive (crash detection "
-                         "feeds the adaptive scheduler)")
     seeds = derive_seeds(args.seed)
-    spec = RoundSpec(n=args.n, r=args.n if args.schedule == "ra" else args.r,
-                     k=args.k, schedule=args.schedule, loads=loads,
-                     seed=seeds["schedule_seed"], deadline=args.deadline,
-                     deadline_policy=args.deadline_policy)
+    # ONE validation path: every round field funnels through RoundConfig
+    # (k/r ranges, ragged coverage, deadline/policy pairing, the adaptive-
+    # family cross-field rules) whether it came from flags or --config.
+    try:
+        if args.config:
+            rc = RoundConfig.load(args.config)
+            args.n, args.k, args.schedule = rc.n, rc.k, rc.kind
+            args.r = rc.width
+            args.adaptive = rc.adaptive
+            args.deadline = rc.deadline
+            args.deadline_policy = rc.deadline_policy
+            args.dead_after = rc.dead_after
+            loads = rc.loads
+        else:
+            loads = (tuple(int(v) for v in args.loads.split(","))
+                     if args.loads else None)
+            rc = RoundConfig(
+                n=args.n, k=args.k, kind=args.schedule,
+                r=args.n if args.schedule == "ra" else args.r, loads=loads,
+                deadline=args.deadline, deadline_policy=args.deadline_policy,
+                adaptive=args.adaptive, dead_after=args.dead_after,
+                seed=seeds["schedule_seed"])
+    except ValueError as e:
+        raise SystemExit(str(e))
+    spec = rc.to_round_spec()
     delay = build_cluster(args, seeds)
     part = TaskPartition(n=args.n, global_batch=args.batch,
                          seq_len=args.seq, vocab=cfg.vocab_size,

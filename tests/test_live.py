@@ -1,0 +1,155 @@
+"""Live execution layer: async master-worker rounds over inproc/TCP must
+be *the same experiment* as the Monte Carlo engine — shared-seed delay
+tables, rounds closing at ``k`` distinct results, deadline accounting, and
+a recorded trace that replays bit-exactly through ``sweep_rounds``."""
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core import (RoundConfig, TraceProcess, ec2_cluster,
+                        sweep_rounds)
+from repro.live import run_live, sample_delay_tables
+
+ROUNDS = 5
+
+
+@pytest.fixture(scope="module")
+def process():
+    return ec2_cluster(4, spread=3.0, persistence=0.9, seed=1)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return RoundConfig(n=4, k=3, kind="cs", r=2, seed=42)
+
+
+@pytest.fixture(scope="module")
+def live(cfg, process):
+    """One shared live run (jit warm-up dominates; results are pure)."""
+    return run_live(cfg, process, ROUNDS)
+
+
+class TestInprocRun:
+    def test_reaches_k_each_round(self, cfg, live):
+        assert live.per_round.shape == (ROUNDS,)
+        assert np.isfinite(live.per_round).all()
+        assert (live.per_round > 0).all()
+        # no deadline: every round waits for the full k distinct results
+        assert live.realized.tolist() == [cfg.k] * ROUNDS
+        assert not live.missed.any()
+        assert live.config == cfg
+
+    def test_round_reports(self, cfg, live):
+        assert len(live.reports) == ROUNDS
+        for rep in live.reports:
+            assert rep.results >= cfg.k        # k distinct needs >= k msgs
+            assert not rep.dead and not rep.stalled
+            assert rep.t_done == pytest.approx(live.per_round[rep.round])
+
+    def test_worker_tables_match_engine_recording(self, cfg, process):
+        """Workers must draw delays with the engine's own jitted recording
+        program — the whole bit-exactness contract rests on this."""
+        T1, T2 = sample_delay_tables(process, cfg.seed, ROUNDS, cfg.n,
+                                     cfg.width)
+        eng = sweep_rounds([cfg.to_scheme_spec("s")], process, cfg.n,
+                           rounds=ROUNDS, trials=1, k=cfg.k, seed=cfg.seed,
+                           record_trace=True)
+        np.testing.assert_array_equal(T1, eng.trace.T1[:, 0])
+        np.testing.assert_array_equal(T2, eng.trace.T2[:, 0])
+
+
+class TestEngineAgreement:
+    def test_matches_engine_run(self, cfg, process, live):
+        """Live per-round completions == the engine's bit-exactly-
+        reproducible (record -> replay) evaluation of the same seed."""
+        eng = sweep_rounds([cfg.to_scheme_spec("s")], process, cfg.n,
+                           rounds=ROUNDS, trials=1, k=cfg.k, seed=cfg.seed,
+                           record_trace=True)
+        np.testing.assert_array_equal(
+            live.per_round.astype(np.float32),
+            eng.per_round["s"].astype(np.float32))
+
+    def test_trace_replays_bit_exact(self, cfg, live):
+        trace = live.trace
+        assert trace.rounds == ROUNDS and trace.n == cfg.n
+        # dense at time_scale=0 (workers run synchronously) -> v1 header;
+        # +inf-censored tables would promote the header to v2
+        assert trace.header()["version"] <= core.TRACE_FORMAT_VERSION
+        assert trace.meta["source"] == "live"
+        rep = sweep_rounds([cfg.to_scheme_spec("s")], TraceProcess(trace),
+                           cfg.n, rounds=ROUNDS, trials=1, k=cfg.k,
+                           seed=cfg.seed)
+        np.testing.assert_array_equal(
+            live.per_round.astype(np.float32),
+            rep.per_round["s"].astype(np.float32))
+
+    def test_trace_file_round_trip(self, cfg, live, tmp_path):
+        path = core.save_trace(str(tmp_path / "live.npz"), live.trace)
+        back = core.load_trace(path)
+        assert back.header()["digest"] == live.trace.header()["digest"]
+
+
+class TestDeadline:
+    def test_close_partial_matches_engine(self, cfg, process, live):
+        dl = float(np.quantile(live.per_round, 0.5))
+        cfg_dl = RoundConfig(n=4, k=3, kind="cs", r=2, seed=42, deadline=dl,
+                             deadline_policy="close_partial")
+        res = run_live(cfg_dl, process, ROUNDS)
+        eng = sweep_rounds([cfg.to_scheme_spec("s")], process, cfg.n,
+                           rounds=ROUNDS, trials=1, k=cfg.k, seed=cfg.seed,
+                           deadline=dl, deadline_policy="close_partial",
+                           record_trace=True)
+        deg = eng.degradation["s"]
+        np.testing.assert_array_equal(
+            res.per_round.astype(np.float32),
+            eng.per_round["s"].astype(np.float32))
+        np.testing.assert_array_equal(res.realized.astype(np.float64),
+                                      np.asarray(deg["realized_k"]))
+        np.testing.assert_array_equal(res.missed.astype(np.float64),
+                                      np.asarray(deg["missed"]))
+        # a median-of-run deadline must actually bite
+        assert 0 < int(res.missed.sum()) < ROUNDS
+        assert (res.per_round <= dl + 1e-6).all()
+        assert (res.realized <= cfg.k).all()
+        # the deadline run's own trace also replays bit-exactly
+        rep = sweep_rounds([cfg.to_scheme_spec("s")],
+                           TraceProcess(res.trace), cfg.n, rounds=ROUNDS,
+                           trials=1, k=cfg.k, seed=cfg.seed, deadline=dl,
+                           deadline_policy="close_partial")
+        np.testing.assert_array_equal(
+            res.per_round.astype(np.float32),
+            rep.per_round["s"].astype(np.float32))
+
+    def test_adaptive_reissue_completes(self, process):
+        cfg = RoundConfig(n=4, k=3, kind="cs", r=2, seed=7, adaptive=True,
+                          censored_feedback=True, deadline=5e-4,
+                          deadline_policy="reissue")
+        res = run_live(cfg, process, ROUNDS)
+        assert res.per_round.shape == (ROUNDS,)
+        assert np.isfinite(res.per_round).all()
+        assert (res.realized <= cfg.k).all()
+
+
+class TestTransports:
+    def test_tcp_parity(self, cfg, process, live):
+        res = run_live(cfg, process, ROUNDS, address="tcp://127.0.0.1:0")
+        np.testing.assert_array_equal(res.per_round, live.per_round)
+        np.testing.assert_array_equal(res.trace.T1, live.trace.T1)
+
+    def test_bad_address_scheme(self, cfg, process):
+        with pytest.raises(ValueError):
+            run_live(cfg, process, 2, address="carrier-pigeon://x")
+
+
+class TestFacade:
+    def test_core_reexports_live(self):
+        # PEP 562 lazy exports: available without importing repro.live first
+        assert core.run_live is run_live
+        for name in ("Master", "LiveResult", "RoundReport", "run_worker",
+                     "sample_delay_tables", "Comm", "Listener",
+                     "CommClosedError", "connect", "listen"):
+            assert getattr(core, name) is not None
+        assert "run_live" in dir(core)
+
+    def test_round_config_exported(self):
+        assert core.RoundConfig is RoundConfig
