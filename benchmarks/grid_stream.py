@@ -1,0 +1,119 @@
+"""Streaming grid-sweep throughput: ``stream_grid`` vs the naive
+loop-of-``sweep`` baseline (the pre-grid workflow: one sweep call per grid
+cell, each tracing and compiling its own executor).
+
+The grid is the full feasible (family × load × message budget × comm_eps)
+product at n = 16 — ≥64 cells sharing 4 shape buckets (one per load).
+``stream_grid`` fuses the cells at each load into one multi-spec dispatch
+over shared delay draws and pipelines the dispatches, so the whole grid
+costs 4 compiles + 4 device passes; the naive loop pays one compile AND
+one full sampling pass per cell.  The naive baseline is timed on a
+stratified subset of the cells (with ``clear_cache()`` before each, the
+seed-style retrace-per-cell behavior) — per-cell cost has no cross-cell
+amortization there, so the subset rate extrapolates; the row records the
+subset size.
+
+Rows:
+  grid/stream   full-grid streaming run: cells/s, shape buckets, compiles,
+                fused dispatches
+  grid/naive    loop-of-sweep baseline on the subset: cells/s
+  grid/speedup  stream over naive cells-per-second ratio (gated in CI via
+                the ``grid_cells_per_sec`` / ``grid_speedup_min`` baseline
+                entries in benchmarks/regression_gate.py)
+
+Exits non-zero if the streamed stats are not bit-exact with the per-cell
+path under CRN, or if the grid retraced more than once per shape bucket.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import stream_grid, sweep
+from repro.core.grid import GridSpec
+from repro.core.montecarlo import cache_stats, clear_cache
+from repro.core.delays import scenario1
+from .common import emit
+
+
+def _grid(trials: int) -> GridSpec:
+    return GridSpec(n=16, families=("cs", "ss", "ra", "lb", "pc", "pcmm"),
+                    loads=(2, 4, 8, 16), messages=(None, 2),
+                    comm_eps=(0.0, 0.02), trials=trials, seed=0)
+
+
+def run(trials: int = 20000, out: str = "bench_out"):
+    model = scenario1()
+    cells = _grid(trials).cells(model)
+
+    # ---- streamed full grid (one compile per shape bucket) ----
+    clear_cache()
+    s0 = cache_stats()
+    t0 = time.perf_counter()
+    res = stream_grid(cells, pipeline=2)
+    t_stream = time.perf_counter() - t0
+    s1 = cache_stats()
+    compiles = s1["exec"]["misses"] - s0["exec"]["misses"]
+    traces = s1["traces"] - s0["traces"]
+    cps_stream = len(cells) / t_stream
+    emit("grid/stream", t_stream * 1e6,
+         f"cells={len(cells)};trials={trials};"
+         f"cells_per_sec={cps_stream:.2f};"
+         f"buckets={res.meta['buckets']};compiles={compiles};"
+         f"fused_dispatches={res.meta['fused_dispatches']}")
+    if traces > res.meta["buckets"]:
+        raise SystemExit(
+            f"grid_stream: {traces} executor retraces for "
+            f"{res.meta['buckets']} shape buckets — the bucketed cache is "
+            f"not holding (one compile per bucket is the contract)")
+
+    # ---- naive baseline: per-cell sweep, retrace per cell ----
+    # stratified subset: first + last cell of every load group covers every
+    # bucket and both ends of each fused spec stack
+    by_load = {}
+    for c in cells:
+        by_load.setdefault(c.r_max, []).append(c)
+    subset = [c for grp in by_load.values() for c in (grp[0], grp[-1])]
+    t0 = time.perf_counter()
+    naive = {}
+    for c in subset:
+        clear_cache()                  # the pre-grid per-cell retrace cost
+        naive[c.name] = sweep(c.specs, c.model, c.n, trials=c.trials,
+                              seed=c.seed, chunk=c.chunk, ks=c.ks)
+    t_naive = time.perf_counter() - t0
+    cps_naive = len(subset) / t_naive
+    emit("grid/naive", t_naive * 1e6,
+         f"cells={len(subset)};subset_of={len(cells)};trials={trials};"
+         f"cells_per_sec={cps_naive:.2f}")
+
+    # ---- CRN bit-exactness of the streamed stats vs the per-cell path ----
+    exact = all(
+        np.array_equal(res.cell(c.name)["means"][sp.name],
+                       np.atleast_1d(naive[c.name].means[sp.name]))
+        and np.array_equal(res.cell(c.name)["stderr"][sp.name],
+                           np.atleast_1d(naive[c.name].stderr[sp.name]))
+        for c in subset for sp in c.specs)
+    speedup = cps_stream / cps_naive
+    emit("grid/speedup", 0.0,
+         f"stream_over_naive={speedup:.2f}x;"
+         f"bitexact={'PASS' if exact else 'FAIL'}")
+    if not exact:
+        raise SystemExit(
+            "grid_stream: streamed grid stats are NOT bit-exact with the "
+            "per-cell sweep path under CRN — fusion changed the draws or "
+            "the combine order")
+
+    if out:
+        os.makedirs(out, exist_ok=True)
+        res.meta["cache"] = cache_stats()
+        res.save(os.path.join(out, "GRID_result.json"))
+
+    return {"cells": len(cells), "cells_per_sec": cps_stream,
+            "naive_cells_per_sec": cps_naive, "speedup": speedup,
+            "buckets": res.meta["buckets"], "compiles": compiles}
+
+
+if __name__ == "__main__":
+    run()

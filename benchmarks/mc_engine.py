@@ -12,6 +12,10 @@ Rows:
   mc_engine/legacy     seed-style per-scheme evaluation
   mc_engine/fused      one engine call, same schemes, shared draws
   mc_engine/speedup    fused over legacy throughput ratio
+  mc_engine/scan_overhead  the fused sweep streamed in 8 chunks: the
+                       chunked-over-fused throughput ratio isolates
+                       per-chunk scan cost (device-side fold_in keys +
+                       masked partial sums)
   mc_engine/chunked1M  10^6-trial sweep streamed in 20k-trial chunks
   mc_engine/scaling1   sharding base point: chunked sweep on ONE device
   mc_engine/scaling    same sweep on every local device: strong speedup
@@ -122,6 +126,19 @@ def run(trials: int = 20000):
     emit("mc_engine/speedup", 0.0,
          f"fused_over_legacy={thr_fused / thr_legacy:.2f}x")
 
+    # scan overhead: the SAME sweep as the fused row, streamed in 8 chunks.
+    # The chunked scan adds only device-side work per chunk (fold_in key
+    # derivation, masked partial sums) — no host key tables — so the
+    # throughput ratio vs the single-chunk fused row isolates the
+    # remaining per-chunk cost and keeps the chunked/fused gap tracked.
+    t_chunk = _time(lambda: sweep(specs, model, n, trials=trials, seed=0,
+                                  chunk=max(1, trials // 8)))
+    thr_chunk = trials * n_schemes / t_chunk
+    emit("mc_engine/scan_overhead", t_chunk * 1e6,
+         f"trials={trials};chunks=8;"
+         f"throughput={thr_chunk:,.0f}_trials_schemes_per_s;"
+         f"chunked_over_fused={thr_chunk / thr_fused:.2f}")
+
     # chunked large sweep: memory stays O(chunk * n * r) regardless of trials
     big = 1_000_000 if trials >= 20000 else 50 * trials
     chunk = 20000
@@ -136,7 +153,8 @@ def run(trials: int = 20000):
 
     scaling = _scaling(model, n, r, trials)
     return {"legacy_s": t_legacy, "fused_s": t_fused,
-            "speedup": thr_fused / thr_legacy, "big_s": t_big, **scaling}
+            "speedup": thr_fused / thr_legacy, "big_s": t_big,
+            "scan_overhead": thr_chunk / thr_fused, **scaling}
 
 
 def _scaling(model, n: int, r: int, trials: int) -> dict:

@@ -31,6 +31,13 @@ Compares the machine-readable ``BENCH_*.json`` results written by
   relative mean error must stay below ``fig13_live_rel_err_max`` (a
   sampling-noise bound — the live run is one realization — not a timing
   gate, so it is machine-independent).
+* ``grid`` — the streaming grid-sweep engine (``repro.core.grid``) must
+  keep its structural wins: cells-per-second above ``--grid-tol`` x the
+  ``grid_cells_per_sec`` baseline (machine-dependent low-water mark, like
+  the throughput gate), the stream-over-naive speedup at or above
+  ``grid_speedup_min`` (the acceptance floor — losing executor bucketing
+  or cell fusion collapses it), no more compiles than shape buckets, and
+  the benchmark's own CRN bit-exactness leg reporting PASS.
 * ``scaling`` (opt-in via ``--only``) — the device-sharded sweep's strong
   speedup (same trials, 1 device vs all local devices) from the
   ``mc_engine/scaling`` row must stay above ``--scaling-tol`` x the
@@ -53,7 +60,7 @@ Exit codes: 0 all checks pass, 1 regression detected, 2 missing inputs.
 
 Usage (CI)::
 
-    python -m benchmarks.run --quick --only mc_engine,fig8,fig10,fig11,fig12,fig13 --out bench_out
+    python -m benchmarks.run --quick --only mc_engine,grid,fig8,fig10,fig11,fig12,fig13 --out bench_out
     python -m benchmarks.regression_gate --results bench_out
 """
 from __future__ import annotations
@@ -126,18 +133,20 @@ def main(argv=None) -> None:
     ap.add_argument("--scaling-tol", type=float, default=0.75,
                     help="fail if the multi-device strong speedup < tol * "
                          "baseline (scaling check only)")
+    ap.add_argument("--grid-tol", type=float, default=0.25,
+                    help="fail if grid cells-per-second < tol * baseline")
     ap.add_argument("--live-tol", type=float, default=None,
                     help="max allowed live-vs-MC relative mean error for "
                          "the fig13 check (default: the baseline's "
                          "fig13_live_rel_err_max)")
     ap.add_argument("--only",
-                    default="mc_engine,fig8,fig10,fig11,fig12,fig13",
+                    default="mc_engine,grid,fig8,fig10,fig11,fig12,fig13",
                     help="comma-separated subset of checks to run; add "
                          "'scaling' on the multi-device leg")
     args = ap.parse_args(argv)
 
-    known = {"mc_engine", "fig8", "fig10", "fig11", "fig12", "fig13",
-             "scaling"}
+    known = {"mc_engine", "grid", "fig8", "fig10", "fig11", "fig12",
+             "fig13", "scaling"}
     only = {s.strip() for s in args.only.split(",") if s.strip()}
     unknown = sorted(only - known)
     if unknown:
@@ -170,6 +179,36 @@ def main(argv=None) -> None:
               f"{base['mc_engine_fused_throughput']:,.0f})")
         if not ok:
             failures.append("mc_engine throughput")
+
+    # --- streaming grid-sweep engine -----------------------------------------
+    if "grid" in only:
+        grid = _load_bench(args.results, "grid")
+        _check_finite(grid)
+        stream = _row(grid, "grid/stream")["derived"]
+        spd = _row(grid, "grid/speedup")["derived"]
+        cps = stream.get("cells_per_sec")
+        if not isinstance(cps, (int, float)):
+            print("regression_gate: grid/stream row lacks a numeric "
+                  "'cells_per_sec' derived field")
+            sys.exit(2)
+        floor = base["grid_cells_per_sec"] * args.grid_tol
+        speedup = spd.get("stream_over_naive")
+        spd_floor = base["grid_speedup_min"]
+        compiles, buckets = stream.get("compiles"), stream.get("buckets")
+        ok = (cps >= floor
+              and isinstance(speedup, (int, float))
+              and speedup >= spd_floor
+              and isinstance(compiles, (int, float))
+              and isinstance(buckets, (int, float))
+              and compiles <= buckets
+              and spd.get("bitexact") == "PASS")
+        print(f"{'PASS' if ok else 'FAIL'} grid streaming engine: "
+              f"{cps:.2f} cells/s (floor {floor:.2f} = {args.grid_tol} x "
+              f"baseline {base['grid_cells_per_sec']:.1f}), speedup "
+              f"{speedup}x (floor {spd_floor}x), compiles={compiles} for "
+              f"buckets={buckets}, bitexact={spd.get('bitexact')}")
+        if not ok:
+            failures.append("grid streaming engine")
 
     # --- device-sharded scaling (multi-device leg only) ----------------------
     if "scaling" in only:

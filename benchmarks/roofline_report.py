@@ -1,6 +1,21 @@
 """Roofline table from saved dry-run JSONs (deliverable (g) reader).
-Reads experiments/dryrun/*.json and prints one CSV row per (mesh, arch,
-shape): the three terms, dominant bottleneck, and useful-FLOPs ratio."""
+
+Reads ``experiments/dryrun/*.json`` and prints one CSV row per (mesh,
+arch, shape): the three roofline terms, the dominant bottleneck, and the
+useful-FLOPs ratio.
+
+The artifacts are PRODUCED by ``repro.launch.dryrun`` — e.g.::
+
+    python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+    python -m repro.launch.dryrun --all        # every (arch, shape) combo
+
+which compiles each jitted step against ShapeDtypeStruct inputs (no
+allocation) and writes one JSON per combination into
+``experiments/dryrun/``.  The directory is not checked in: dry-run
+artifacts are machine/version-dependent compile measurements.  When it is
+absent this reader emits a single ``roofline/skipped`` row saying exactly
+that (and how to produce the inputs) instead of silently reporting an
+empty table."""
 import glob
 import json
 import os
@@ -11,7 +26,13 @@ from .common import emit
 def run(dryrun_dir: str = "experiments/dryrun"):
     files = sorted(glob.glob(os.path.join(dryrun_dir, "*.json")))
     if not files:
-        emit("roofline/none", 0.0, "no_dryrun_artifacts_yet=true")
+        emit("roofline/skipped", 0.0,
+             f"status=SKIP;reason=no_dryrun_artifacts_in_{dryrun_dir};"
+             f"produce_with=python_-m_repro.launch.dryrun_--all")
+        print(f"roofline_report: skipped — no dry-run artifacts under "
+              f"{dryrun_dir!r}; produce them with "
+              f"`python -m repro.launch.dryrun --all` (or a single "
+              f"--arch/--shape combination) first")
         return
     for f in files:
         with open(f) as fh:

@@ -33,6 +33,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
          accounting must match the engine's streams (non-zero exit on
          any violation)
   mc_engine  fused sweep-engine throughput vs the seed per-scheme path
+  grid   streaming grid-sweep engine (repro.core.grid) vs the naive
+         loop-of-sweeps baseline: cells/sec, one-compile-per-bucket, and
+         CRN bit-exactness (non-zero exit on a retrace or stats mismatch);
+         also writes the GRID_result.json artifact into --out
   table1 end-to-end DGD iteration per scheme incl. real PC/PCMM decode
   roofline  per-(mesh, arch, shape) terms from saved dry-run artifacts
 
@@ -82,7 +86,7 @@ def main(argv=None) -> None:
                    fig6_vs_workers, fig7_vs_target, fig8_convergence,
                    fig9_multimessage, fig10_load_rebalance,
                    fig11_trace_replay, fig12_faults, fig13_live,
-                   mc_engine, table1_e2e, roofline_report)
+                   grid_stream, mc_engine, table1_e2e, roofline_report)
 
     jobs = {
         "fig3": lambda: fig3_delays.run(trials),
@@ -99,6 +103,8 @@ def main(argv=None) -> None:
                                           out=args.out or "bench_out"),
         "fig13": lambda: fig13_live.run(trials),
         "mc_engine": lambda: mc_engine.run(trials),
+        "grid": lambda: grid_stream.run(trials,
+                                        out=args.out or "bench_out"),
         "table1": table1_e2e.run,
         "roofline": roofline_report.run,
     }

@@ -32,7 +32,10 @@ from .montecarlo import (SchemeSpec, SweepResult, RoundsResult, to_spec,
                          message_slot_map, message_group_sizes, sweep,
                          sweep_rounds, completion_samples,
                          trajectory_samples, task_arrival_samples,
-                         clear_cache)
+                         clear_cache, cache_stats, set_cache_capacity,
+                         trial_keys)
+from .grid import (GridCell, GridSpec, GridResult, stream_grid,
+                   GRID_FORMAT_VERSION)
 from .completion import (slot_arrival_times, message_arrival_times,
                          message_slot_layout, task_arrival_times,
                          completion_time, lower_bound_time,

@@ -121,8 +121,10 @@ adaptive decisions bit-exactly.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
+import time
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
@@ -139,7 +141,7 @@ __all__ = [
     "task_arrival_times_gather", "message_boundaries", "message_slot_map",
     "message_group_sizes", "sweep", "sweep_rounds",
     "completion_samples", "trajectory_samples", "task_arrival_samples",
-    "clear_cache",
+    "trial_keys", "clear_cache", "cache_stats", "set_cache_capacity",
 ]
 
 Array = jax.Array
@@ -695,31 +697,303 @@ def _build_eval(specs: Tuple[SchemeSpec, ...], n: int, r_max: int,
     return eval_fn
 
 
-def _build_stats_fn(specs: Tuple[SchemeSpec, ...], model, n: int, r_max: int,
-                    ks: Optional[int]):
-    """Per-chunk evaluator: (chunk, 2) per-trial keys -> {name: (chunk, L)}.
-    Samples one round of delays per trial and scores every static scheme."""
-    eval_fn = _build_eval(specs, n, r_max, ks)
+# --------------------- shape-bucketed runtime evaluator ----------------------
+#
+# ``_build_eval`` above bakes every gather plan into the traced program, so
+# its compile cache key is the full frozen spec tuple — fine for a handful
+# of figures, hopeless for a grid sweep where hundreds of cells differ only
+# in their TO matrices / budgets / overheads.  The single-round hot path
+# therefore uses the *bucketed* twin below: all static structure (gather
+# plans, flat-window indices, message offsets, decode thresholds) becomes
+# runtime int32/float32 arrays with shapes padded to a small signature
+# ``(n, r_max, ks, per-group counts, padded widths)``, so every cell in the
+# same shape bucket shares one executable.  Padding is value-exact: padded
+# plan entries read the +inf sentinel (transparent to min / top_k), padded
+# offsets are 0.0 (``x + 0.0`` is bitwise ``x`` for delays), and the pc
+# order statistic is taken from a full sort at a runtime index — so the
+# bucketed path is bit-exact with the per-spec path under CRN.
+# (``_build_eval`` stays as-is for the rounds axis, whose adaptive scan
+# re-evaluates baked static specs every round.)
 
-    def stats_fn(keys: Array) -> Dict[str, Array]:
+_GROUPS = ("to", "tau", "lb", "pcmm", "pc")
+
+
+def _next_pow2(x: int) -> int:
+    return 1 if x <= 1 else 2 ** (x - 1).bit_length()
+
+
+def _flat_indices_of(sp: SchemeSpec, n: int, r_max: int):
+    """Flat indices of the spec's active (message-remapped) slots in the
+    row-major ``(n, r_max)`` grid — the runtime form of ``_build_eval``'s
+    lb/pcmm flat window — plus their static ``comm_eps`` offsets (None when
+    the spec has no overhead)."""
+    r = sp.load
+    lv = sp.load_vector(n)
+    smap = _slot_map_of(sp)
+    if smap is None:
+        smap = np.broadcast_to(np.arange(r), (n, r))
+    elif smap.ndim == 1:
+        smap = np.broadcast_to(smap, (n, r))
+    idx = np.asarray([i * r_max + int(smap[i, j])
+                      for i in range(n) for j in range(int(lv[i]))],
+                     np.int32)
+    off_flat = _offsets_flat_of(sp, n, r_max)
+    if off_flat is None:
+        return idx, None
+    return idx, off_flat[idx].astype(np.float32)
+
+
+def _eval_layout(specs: Tuple[SchemeSpec, ...], n: int, r_max: int,
+                 ks: Optional[int]):
+    """Split one sweep's specs into the fixed evaluator groups and
+    materialize every per-spec static structure as *runtime* numpy arrays
+    padded to the bucket signature.  Returns ``(sig, params, slots)``:
+
+    * ``sig``    — the hashable shape bucket ``("v1", n, r_max, ks,
+      S_to, M_to, S_tau, M_tau, F_lb, F_pcmm, P_pc)``; the compiled
+      program depends only on this (plus model and devices).
+    * ``params`` — ``{name: numpy array}`` fed to the jitted scans at call
+      time (gather plans + offsets per group, flat windows, pc slots /
+      thresholds / overheads).
+    * ``slots``  — ``{scheme name: (group, index)}``: where each scheme's
+      columns live in the group-stacked outputs.  Group-keyed (not
+      name-keyed) outputs keep the scan's pytree structure independent of
+      scheme names, so renamed cells never retrace.
+    """
+    W = n * r_max                     # flat slot-grid width; sentinel = W
+    by: Dict[str, list] = {g: [] for g in _GROUPS}
+    slots: Dict[str, Tuple[str, int]] = {}
+    for sp in specs:
+        slots[sp.name] = (sp.kind, len(by[sp.kind]))
+        by[sp.kind].append(sp)
+
+    params: Dict[str, np.ndarray] = {}
+
+    def _plan_group(group):
+        gspecs = by[group]
+        if not gspecs:
+            return 0, 1
+        plans = [_plan_of(sp, n, r_max) for sp in gspecs]
+        m = _next_pow2(max(p.shape[1] for p in plans))
+        plan = np.full((len(gspecs), n, m), W, np.int32)
+        offs = np.zeros((len(gspecs), n, m), np.float32)
+        for i, (sp, p) in enumerate(zip(gspecs, plans)):
+            plan[i, :, :p.shape[1]] = p
+            o = _plan_offsets_of(sp, p, n, r_max)
+            if o is not None:
+                offs[i, :, :p.shape[1]] = o
+        params[group + "_plan"] = plan
+        params[group + "_off"] = offs
+        return len(gspecs), m
+
+    S_to, M_to = _plan_group("to")
+    S_tau, M_tau = _plan_group("tau")
+
+    def _flat_group(group):
+        gspecs = by[group]
+        if not gspecs:
+            return 0
+        idx = np.full((len(gspecs), W), W, np.int32)   # sentinel -> +inf
+        offs = np.zeros((len(gspecs), W), np.float32)
+        for i, sp in enumerate(gspecs):
+            fi, fo = _flat_indices_of(sp, n, r_max)
+            idx[i, :len(fi)] = fi
+            if fo is not None:
+                offs[i, :len(fi)] = fo
+        params[group + "_idx"] = idx
+        params[group + "_off"] = offs
+        return len(gspecs)
+
+    F_lb = _flat_group("lb")
+    F_pcmm = _flat_group("pcmm")
+
+    pc = by["pc"]
+    if pc:
+        params["pc_slot"] = np.asarray([sp.load - 1 for sp in pc], np.int32)
+        params["pc_th"] = np.asarray(
+            [_pc_threshold(n, sp.load) - 1 for sp in pc], np.int32)
+        params["pc_eps"] = np.asarray([sp.comm_eps for sp in pc], np.float32)
+
+    sig = ("v1", n, r_max, ks, S_to, M_to, S_tau, M_tau, F_lb, F_pcmm,
+           len(pc))
+    return sig, params, slots
+
+
+def _build_bucket_eval(sig):
+    """Runtime-parameterized evaluator for one shape bucket: slot arrivals
+    ``s`` (chunk, n, r_max) + ``params`` -> {group: (chunk, S_g, L_g)}.
+    Value-exact with ``_build_eval`` spec-by-spec (see the bucketing note
+    above)."""
+    _, n, r_max, ks, S_to, M_to, S_tau, M_tau, F_lb, F_pcmm, P_pc = sig
+
+    def eval_fn(s: Array, params) -> Dict[str, Array]:
+        out: Dict[str, Array] = {}
+        if F_lb or F_pcmm:
+            sf = s.reshape(s.shape[0], -1)
+            s_pad = jnp.concatenate(
+                [sf, jnp.full(sf.shape[:-1] + (1,), INF, s.dtype)], axis=-1)
+        if S_to:
+            tau = task_arrival_times_gather(
+                params["to_plan"], s, params["to_off"])
+            out["to"] = (jnp.sort(tau, axis=-1) if ks is None
+                         else _smallest(tau, ks)[..., -1:])
+        if S_tau:
+            out["tau"] = task_arrival_times_gather(
+                params["tau_plan"], s, params["tau_off"])
+        if F_lb:
+            win = s_pad[:, params["lb_idx"]] + params["lb_off"]
+            w = n if ks is None else ks
+            fs = _smallest(win, w)
+            out["lb"] = fs if ks is None else fs[..., -1:]
+        if F_pcmm:
+            th = _pcmm_threshold(n)
+            win = s_pad[:, params["pcmm_idx"]] + params["pcmm_off"]
+            out["pcmm"] = _smallest(win, th)[..., -1:]
+        if P_pc:
+            # per-worker one-shot times at each pc spec's own closing slot,
+            # ranked by a full sort so the decode threshold (which varies
+            # with the runtime load) can be a runtime gather index — the
+            # th-th order statistic is the same value either way.
+            tw = jnp.moveaxis(s[..., params["pc_slot"]], -1, -2)
+            tw = tw + params["pc_eps"][:, None]            # (chunk, P, n)
+            srt = jnp.sort(tw, axis=-1)
+            idx = jnp.broadcast_to(params["pc_th"][:, None],
+                                   (srt.shape[0], P_pc, 1))
+            out["pc"] = jnp.take_along_axis(srt, idx, axis=-1)
+        return out
+
+    return eval_fn
+
+
+def _build_stats_fn(sig, model):
+    """Per-chunk bucketed evaluator: (chunk, 2) per-trial keys + runtime
+    ``params`` -> {group: (chunk, S, L)}.  Samples one round of delays per
+    trial and scores every scheme of the bucket."""
+    n, r_max = sig[1], sig[2]
+    eval_fn = _build_bucket_eval(sig)
+
+    def stats_fn(keys: Array, params) -> Dict[str, Array]:
         def one(kk):
             T1, T2 = model.sample(kk, 1, n, r_max)
             return T1[0], T2[0]
 
         T1, T2 = jax.vmap(one)(keys)                 # (chunk, n, r_max)
         s = jnp.cumsum(T1, axis=-1) + T2             # slot arrivals, eq. (1)
-        return eval_fn(s)
+        return eval_fn(s, params)
 
     return stats_fn
 
 
-_EXEC_CACHE: dict = {}
+# ----------------------- executor caches + observability ----------------------
+
+class _LRUCache:
+    """Least-recently-used bound on the compiled-executor caches.  Once a
+    grid sweeps many ``(n, r_max)`` buckets (or many device tuples) an
+    unbounded dict would pin every executable ever compiled; the default
+    capacity comfortably holds a full grid's buckets while letting one-off
+    shapes age out.  Also the home of the cache observability counters
+    surfaced by ``cache_stats()``."""
+
+    def __init__(self, capacity: int = 128):
+        self.capacity = int(capacity)
+        self._d: "collections.OrderedDict" = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.compile_s = 0.0
+
+    def get(self, key):
+        hit = self._d.get(key)
+        if hit is None:
+            self.misses += 1
+            return None
+        self._d.move_to_end(key)
+        self.hits += 1
+        return hit
+
+    def put(self, key, value) -> None:
+        self._d[key] = value
+        self._d.move_to_end(key)
+        self._trim()
+
+    def set_capacity(self, capacity: int) -> None:
+        capacity = int(capacity)
+        if capacity < 1:
+            raise ValueError(f"cache capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._trim()
+
+    def _trim(self) -> None:
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)            # evict least recent
+            self.evictions += 1
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def clear(self) -> None:
+        self._d.clear()
+
+    def stats(self) -> dict:
+        return {"size": len(self._d), "capacity": self.capacity,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "compile_s": round(self.compile_s, 6)}
+
+
+_EXEC_CACHE = _LRUCache()
+_TRACE_COUNT = 0
+
+
+def _count_trace() -> None:
+    """Called at the top of every scan function: the call executes during
+    tracing only, i.e. once per jit specialization, so the counter measures
+    (re)traces — exactly one per shape bucket when the bucketed cache is
+    doing its job (pinned by the grid retrace test)."""
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1
+
+
+def _timed_first(fn, cache: _LRUCache):
+    """Attribute the first call's wall time to ``cache.compile_s``: tracing
+    and compilation happen synchronously inside the first call while the
+    actual execution is dispatched asynchronously, so first-call wall time
+    is a faithful (slightly conservative) compile-seconds estimate."""
+    done = False
+
+    def wrapped(*args):
+        nonlocal done
+        if done:
+            return fn(*args)
+        t0 = time.perf_counter()
+        out = fn(*args)
+        cache.compile_s += time.perf_counter() - t0
+        done = True
+        return out
+
+    return wrapped
 
 
 def clear_cache() -> None:
     """Drop compiled evaluators (mainly for benchmarking cold starts)."""
     _EXEC_CACHE.clear()
     _ROUNDS_CACHE.clear()
+
+
+def set_cache_capacity(capacity: int) -> None:
+    """Bound both compiled-executor LRU caches to ``capacity`` entries
+    (evicting the least-recently-used immediately if already over)."""
+    _EXEC_CACHE.set_capacity(capacity)
+    _ROUNDS_CACHE.set_capacity(capacity)
+
+
+def cache_stats() -> dict:
+    """Observability for the compiled-executor caches: sizes, hit / miss /
+    eviction counts, cumulative compile seconds, and ``traces`` — the
+    number of executor (re)traces since import (one per shape bucket when
+    the bucketed cache works; see ``_count_trace``)."""
+    return {"exec": _EXEC_CACHE.stats(), "rounds": _ROUNDS_CACHE.stats(),
+            "traces": _TRACE_COUNT}
 
 
 def _normalize_chunk(trials: int, chunk: Optional[int]) -> int:
@@ -759,69 +1033,150 @@ def _shard_layout(trials: int, chunk: int, devices):
     return devs[:d_eff], nc_pad, nc_pad * chunk
 
 
+def trial_keys(seed: int, trials: int) -> Array:
+    """The engine's per-trial CRN keys: key ``t`` is
+    ``fold_in(PRNGKey(seed), t)`` — a pure function of ``(seed, t)``, so
+    every chunk of the trial axis re-derives its own keys *device-side*
+    from ``(seed, global trial id)`` inside the scans instead of
+    materializing a ``(trials, 2)`` key table on the host (800 MB at 10^8
+    trials).  This helper is the materialized reference twin the tests pin
+    the in-scan derivation against."""
+    return _fold_keys(jax.random.PRNGKey(seed),
+                      jnp.arange(trials, dtype=jnp.int32))
+
+
+def _fold_keys(base_key: Array, tids: Array) -> Array:
+    """(chunk,) global trial ids -> (chunk, 2) per-trial CRN keys."""
+    return jax.vmap(jax.random.fold_in, in_axes=(None, 0))(base_key, tids)
+
+
 def _padded_keys(seed: int, trials: int, padded: int) -> Array:
-    """The per-trial CRN keys, padded to the shard layout.  The first
-    ``trials`` rows are exactly ``split(PRNGKey(seed), trials)`` whatever
-    the padding (pad rows repeat the last real key and feed masked lanes
-    only), so CRN pairing across specs survives any device count."""
-    keys = jax.random.split(jax.random.PRNGKey(seed), trials)
+    """``trial_keys`` padded to the shard layout.  Pad rows repeat the last
+    real key — exactly what the scans' clamped trial ids derive — and feed
+    masked lanes only, so CRN pairing across specs survives any device
+    count.  Kept as the tests' reference twin of the scans' in-body
+    ``min(start + offs, trials - 1)`` derivation."""
+    keys = trial_keys(seed, trials)
     if padded > trials:
         pad = jnp.broadcast_to(keys[-1:], (padded - trials, 2))
         keys = jnp.concatenate([keys, pad], axis=0)
     return keys
 
 
-def _get_exec(specs: Tuple[SchemeSpec, ...], model, n: int, r_max: int,
-              ks: Optional[int], devices: tuple):
-    """Compiled (sums-scan, samples-scan) pair, cached per
-    (specs, model, n, r_max, ks, devices) so repeated sweep calls skip
-    retracing (the sharded evaluator is mesh-specific, so the device
-    tuple is part of the key).
+def _register_barrier_batching() -> None:
+    """``jax.lax.optimization_barrier`` (used below to pin the within-chunk
+    reduction order) has no vmap batching rule in the jax versions this repo
+    pins, and the device-sharded path vmaps the chunk scan over a leading
+    device axis (``repro.sharding.shard_trials``).  The rule is trivially
+    dimension-preserving — the barrier is a semantic identity — so register
+    it when missing rather than forking the single- and multi-device
+    programs (which would itself break cross-device-count bit-exactness)."""
+    try:
+        from jax.interpreters import batching
+        p = getattr(jax.lax, "optimization_barrier_p", None)
+        if p is not None and p not in batching.primitive_batchers:
+            def rule(args, dims):
+                return p.bind(*args), dims
+            batching.primitive_batchers[p] = rule
+    except Exception:  # pragma: no cover — future-jax defensive
+        pass
 
-    Both scans emit **per-chunk float32 partials** (masked to the valid
-    trials) instead of carrying a running sum: partials are combined on
-    the host in float64 in global chunk order, which makes the reduction
-    independent of how chunks are dealt to devices — sharded stats are
-    bit-exact vs. single-device."""
+
+_register_barrier_batching()
+
+
+def _tree_sum(v: Array) -> Array:
+    """Sum over axis 0 through an explicit balanced pairwise tree (zero-pad
+    to a power of two, then halve): every add is elementwise, so the f32
+    association order is a function of the axis length ALONE — the same
+    trial chunk reduces bit-identically whatever the width of the spec
+    stack around it (see the bit-exactness note in ``sums_scan``)."""
+    m = v.shape[0]
+    p = _next_pow2(m)
+    if p != m:
+        v = jnp.concatenate(
+            [v, jnp.zeros((p - m,) + v.shape[1:], v.dtype)], axis=0)
+    while v.shape[0] > 1:
+        v = v[0::2] + v[1::2]
+    return v[0]
+
+
+def _get_exec(sig: tuple, model, devices: tuple):
+    """Compiled (sums-scan, samples-scan) pair for one shape bucket, cached
+    per (sig, model, devices) — the signature carries only counts and
+    padded widths (see ``_eval_layout``), so every sweep with the same
+    scheme-kind structure reuses one executable with its own runtime
+    params (the sharded evaluator is mesh-specific, so the device tuple is
+    part of the key).
+
+    Both scans derive their per-trial CRN keys device-side from (base key,
+    global trial id) via ``fold_in`` — the validity mask folds into the
+    same integer arithmetic (``start + offs`` vs ``limit``), so no key
+    table or mask is materialized on the host — and emit **per-chunk
+    float32 partials** combined on the host in float64 in global chunk
+    order, which makes the reduction independent of how chunks are dealt
+    to devices: sharded stats are bit-exact vs. single-device."""
     cache_key = None
     try:
-        cache_key = (specs, model, n, r_max, ks, devices)
+        cache_key = (sig, model, devices)
         hit = _EXEC_CACHE.get(cache_key)
         if hit is not None:
             return hit
     except TypeError:              # unhashable custom model: build uncached
         cache_key = None
 
-    stats_fn = _build_stats_fn(specs, model, n, r_max, ks)
+    stats_fn = _build_stats_fn(sig, model)
 
-    def sums_scan(keys3, valid2):  # (nc, chunk, 2), (nc, chunk) -> partials
-        def body(carry, kv):
-            kc, vd = kv
-            st = stats_fn(kc)
-            ok = vd[:, None]
-            s0 = {k2: jnp.where(ok, st[k2], 0.0).sum(axis=0) for k2 in st}
-            s1 = {k2: jnp.where(ok, jnp.square(st[k2]), 0.0).sum(axis=0)
-                  for k2 in st}
+    def sums_scan(base_key, starts, offs, limit, params):
+        _count_trace()
+
+        def body(carry, start):
+            tids_raw = start + offs
+            kc = _fold_keys(base_key, jnp.minimum(tids_raw, limit - 1))
+            st = stats_fn(kc, params)
+            ok = (tids_raw < limit)[:, None, None]
+            # the barrier pins the f32 rounding of the masked values and
+            # squares BEFORE the trial reduction, and ``_tree_sum`` fixes
+            # the reduction's association order as a function of the chunk
+            # length alone: a native ``sum(axis=0)`` lets XLA pick a
+            # stack-width-dependent lane decomposition (and fuse the
+            # square in as an FMA), so the same cell evaluated in two
+            # different spec stacks could differ in the last ulp of its
+            # partial sums — breaking the grid engine's bit-exactness
+            # contract between fused and per-cell sweeps.
+            s0 = {g: jnp.where(ok, v, 0.0) for g, v in st.items()}
+            s1 = {g: jnp.where(ok, jnp.square(v), 0.0)
+                  for g, v in st.items()}
+            s0, s1 = jax.lax.optimization_barrier((s0, s1))
+            s0 = {g: _tree_sum(v) for g, v in s0.items()}
+            s1 = {g: _tree_sum(v) for g, v in s1.items()}
             return carry, (s0, s1)
 
-        _, parts = jax.lax.scan(body, None, (keys3, valid2))
-        return parts               # 2 x {name: (nc, L)} per-chunk partials
+        _, parts = jax.lax.scan(body, None, starts)
+        return parts               # 2 x {group: (nc, S, L)} partials
 
-    def samples_scan(keys3):       # (nc, chunk, 2) -> {name: (nc, chunk, L)}
-        def body(carry, kc):
-            return carry, stats_fn(kc)
+    def samples_scan(base_key, starts, offs, limit, params):
+        _count_trace()
 
-        _, ys = jax.lax.scan(body, None, keys3)
-        return ys
+        def body(carry, start):
+            tids = jnp.minimum(start + offs, limit - 1)
+            return carry, stats_fn(_fold_keys(base_key, tids), params)
+
+        _, ys = jax.lax.scan(body, None, starts)
+        return ys                  # {group: (nc, chunk, S, L)}
 
     if len(devices) > 1:
         # shard_trials returns a fully-jitted callable; no outer jit.
-        exec_ = (shard_trials(sums_scan, devices),
-                 shard_trials(samples_scan, devices))
+        # Only the per-chunk starts are sharded — the base key, offset
+        # vector, trial limit, and runtime eval params replicate.
+        exec_ = (shard_trials(sums_scan, devices, replicated=(0, 2, 3, 4)),
+                 shard_trials(samples_scan, devices, replicated=(0, 2, 3, 4)))
     else:
         exec_ = (jax.jit(sums_scan), jax.jit(samples_scan))
+    exec_ = (_timed_first(exec_[0], _EXEC_CACHE),
+             _timed_first(exec_[1], _EXEC_CACHE))
     if cache_key is not None:
-        _EXEC_CACHE[cache_key] = exec_
+        _EXEC_CACHE.put(cache_key, exec_)
     return exec_
 
 
@@ -911,9 +1266,42 @@ def _check_specs(specs: Sequence[SchemeSpec], n: int) -> Tuple[SchemeSpec, ...]:
     return specs
 
 
-def _run(specs: Sequence[SchemeSpec], model, n: int, *, trials: int,
-         seed: int, chunk: Optional[int], ks: Optional[int],
-         want_samples: bool, devices=None):
+class _Pending:
+    """A dispatched (in-flight) sweep.  The device work was launched
+    asynchronously (JAX async dispatch); ``resolve()`` blocks on the
+    transfers and finishes the float64 host combine.  ``stream_grid``
+    keeps a small window of these in flight so cell ``j+1``'s compute
+    overlaps cell ``j``'s device->host transfer and combine."""
+
+    __slots__ = ("_resolve", "_out", "_done")
+
+    def __init__(self, resolve_fn):
+        self._resolve = resolve_fn
+        self._out = None
+        self._done = False
+
+    def resolve(self):
+        if not self._done:
+            self._out = self._resolve()
+            self._done = True
+            self._resolve = None
+        return self._out
+
+
+def _scan_coords(trials: int, chunk: int, nc_pad: int):
+    """The scans' runtime trial-axis coordinates: per-chunk global start
+    ids (the sharded axis), the in-chunk offset vector (its length carries
+    the chunk size into the compiled shape), and the valid-trial limit."""
+    starts = jnp.arange(nc_pad, dtype=jnp.int32) * jnp.int32(chunk)
+    offs = jnp.arange(chunk, dtype=jnp.int32)
+    return starts, offs, jnp.int32(trials)
+
+
+def _dispatch_run(specs: Sequence[SchemeSpec], model, n: int, *, trials: int,
+                  seed: int, chunk: Optional[int], ks: Optional[int],
+                  want_samples: bool, devices=None) -> _Pending:
+    """Validate + launch one sweep without blocking on its results; the
+    returned ``_Pending`` resolves to ``_run``'s output."""
     specs = _check_specs(specs, n)
     for sp in specs:
         if sp.kind == "adaptive":
@@ -938,27 +1326,52 @@ def _run(specs: Sequence[SchemeSpec], model, n: int, *, trials: int,
     r_max = max(sp.load for sp in specs)
     chunk = _normalize_chunk(trials, chunk)
     devs, nc_pad, padded = _shard_layout(trials, chunk, devices)
-    jsums, jsamples = _get_exec(specs, model, n, r_max, ks, devs)
+    sig, params, slots = _eval_layout(specs, n, r_max, ks)
+    jsums, jsamples = _get_exec(sig, model, devs)
 
-    keys3 = _padded_keys(seed, trials, padded).reshape(nc_pad, chunk, 2)
+    base_key = jax.random.PRNGKey(seed)
+    starts, offs, limit = _scan_coords(trials, chunk, nc_pad)
+    pj = {k2: jnp.asarray(v) for k2, v in params.items()}
 
     if want_samples:
-        ys = jsamples(keys3)
-        return {name: v.reshape(padded, v.shape[-1])[:trials]
-                for name, v in ys.items()}
+        ys = jsamples(base_key, starts, offs, limit, pj)
 
-    valid2 = (jnp.arange(padded) < trials).reshape(nc_pad, chunk)
-    p0, p1 = jsums(keys3, valid2)
-    means, stderr = {}, {}
-    for name in p0:
+        def resolve_samples():
+            out = {}
+            for name, (g, i) in slots.items():
+                v = ys[g]                        # (nc, chunk, S, L)
+                out[name] = v[:, :, i, :].reshape(padded,
+                                                  v.shape[-1])[:trials]
+            return out
+
+        return _Pending(resolve_samples)
+
+    p0, p1 = jsums(base_key, starts, offs, limit, pj)
+
+    def resolve_sums():
         # per-chunk float32 partials -> float64 in global chunk order: the
         # same reduction whatever the device count (bit-exact sharding).
-        mu = np.asarray(p0[name], np.float64).sum(axis=0) / trials
-        s1 = np.asarray(p1[name], np.float64).sum(axis=0)
-        var = np.maximum(s1 / trials - mu * mu, 0.0)
-        means[name] = mu
-        stderr[name] = np.sqrt(var / trials)
-    return means, stderr
+        mu_g = {g: np.asarray(v, np.float64).sum(axis=0) / trials
+                for g, v in p0.items()}
+        sq_g = {g: np.asarray(v, np.float64).sum(axis=0)
+                for g, v in p1.items()}
+        means, stderr = {}, {}
+        for name, (g, i) in slots.items():
+            mu = mu_g[g][i]
+            var = np.maximum(sq_g[g][i] / trials - mu * mu, 0.0)
+            means[name] = mu
+            stderr[name] = np.sqrt(var / trials)
+        return means, stderr
+
+    return _Pending(resolve_sums)
+
+
+def _run(specs: Sequence[SchemeSpec], model, n: int, *, trials: int,
+         seed: int, chunk: Optional[int], ks: Optional[int],
+         want_samples: bool, devices=None):
+    return _dispatch_run(specs, model, n, trials=trials, seed=seed,
+                         chunk=chunk, ks=ks, want_samples=want_samples,
+                         devices=devices).resolve()
 
 
 # ------------------------------- public API ----------------------------------
@@ -1384,7 +1797,7 @@ def _build_rounds_fn(specs: Tuple[SchemeSpec, ...], process, n: int,
     return rounds_fn
 
 
-_ROUNDS_CACHE: dict = {}
+_ROUNDS_CACHE = _LRUCache()
 
 
 def _get_rounds_exec(specs: Tuple[SchemeSpec, ...], process, n: int,
@@ -1431,10 +1844,14 @@ def _get_rounds_exec(specs: Tuple[SchemeSpec, ...], process, n: int,
             }
         return out
 
-    def sums_scan(keys3, tids3, valid2):   # -> per-chunk per-round partials
-        def body(carry, kt):
-            kc, tc, vd = kt
-            ys, aux = rounds_fn(kc, tc)
+    def sums_scan(base_key, starts, offs, limit):
+        _count_trace()
+
+        def body(carry, start):
+            tids_raw = start + offs
+            tc = jnp.minimum(tids_raw, limit - 1)
+            ys, aux = rounds_fn(_fold_keys(base_key, tc), tc)
+            vd = tids_raw < limit
             ok = vd[None, :]
             cum = {k2: jnp.cumsum(v, axis=0) for k2, v in ys.items()}
             s0 = {k2: jnp.where(ok, ys[k2], 0.0).sum(axis=1) for k2 in ys}
@@ -1446,24 +1863,30 @@ def _get_rounds_exec(specs: Tuple[SchemeSpec, ...], process, n: int,
             ac = _chunk_aux(aux, vd) if has_dl else {}
             return carry, (s0, s1, c0, c1, ac)
 
-        _, parts = jax.lax.scan(body, None, (keys3, tids3, valid2))
+        _, parts = jax.lax.scan(body, None, starts)
         return parts          # 4 x {name: (nc, rounds)} + degradation
 
-    def samples_scan(keys3, tids3):  # -> {name: (nc, R, chunk)}
-        def body(carry, kt):
-            return carry, rounds_fn(*kt)[0]    # times only (aux is DCE'd)
+    def samples_scan(base_key, starts, offs, limit):
+        _count_trace()
 
-        _, ys = jax.lax.scan(body, None, (keys3, tids3))
-        return ys
+        def body(carry, start):
+            tc = jnp.minimum(start + offs, limit - 1)
+            # times only (aux is DCE'd)
+            return carry, rounds_fn(_fold_keys(base_key, tc), tc)[0]
+
+        _, ys = jax.lax.scan(body, None, starts)
+        return ys             # {name: (nc, R, chunk)}
 
     if len(devices) > 1:
         # shard_trials returns a fully-jitted callable; no outer jit.
-        exec_ = (shard_trials(sums_scan, devices),
-                 shard_trials(samples_scan, devices))
+        exec_ = (shard_trials(sums_scan, devices, replicated=(0, 2, 3)),
+                 shard_trials(samples_scan, devices, replicated=(0, 2, 3)))
     else:
         exec_ = (jax.jit(sums_scan), jax.jit(samples_scan))
+    exec_ = (_timed_first(exec_[0], _ROUNDS_CACHE),
+             _timed_first(exec_[1], _ROUNDS_CACHE))
     if cache_key is not None:
-        _ROUNDS_CACHE[cache_key] = exec_
+        _ROUNDS_CACHE.put(cache_key, exec_)
     return exec_
 
 
@@ -1505,7 +1928,7 @@ def _record_trace(process, n, r_max, *, rounds, trials, seed, chunk,
     """
     from .trace import DelayTrace
     capture = jax.jit(_capture_rounds_fn(process, n, r_max, rounds))
-    keys = jax.random.split(jax.random.PRNGKey(seed), trials)
+    keys = trial_keys(seed, trials)
     tids = jnp.arange(trials, dtype=jnp.int32)
     parts1, parts2 = [], []
     for lo in range(0, trials, chunk):
@@ -1580,20 +2003,21 @@ def _run_rounds(specs, process, n, *, rounds: int, k: int, trials: int,
         specs, process, n, r_max, k, rounds, beta, gamma, censored,
         deadline, deadline_policy, devs, greedy_impl)
 
-    keys3 = _padded_keys(seed, trials, padded).reshape(nc_pad, chunk, 2)
-    # padded lanes replay a valid (clamped) trial id and are masked out of
-    # every statistic below; real lanes keep their global trial id, so
-    # trace replay stays invariant to chunking AND sharding.
-    tids3 = jnp.minimum(jnp.arange(padded, dtype=jnp.int32),
-                        trials - 1).reshape(nc_pad, chunk)
+    # the scans derive per-trial keys AND trial ids device-side from the
+    # (base key, per-chunk start) coordinates: padded lanes replay a valid
+    # (clamped) trial id — deriving the last real trial's key, exactly the
+    # ``_padded_keys`` reference twin — and are masked out of every
+    # statistic below, so trace replay stays invariant to chunking AND
+    # sharding without a host key table.
+    base_key = jax.random.PRNGKey(seed)
+    starts, offs, limit = _scan_coords(trials, chunk, nc_pad)
 
     if want_samples:
-        ys = jsamples(keys3, tids3)
+        ys = jsamples(base_key, starts, offs, limit)
         return ({nm: jnp.moveaxis(v, 1, -1).reshape(padded, rounds)[:trials]
                  for nm, v in ys.items()}, None)  # (nc,R,chunk)->(trials,R)
 
-    valid2 = (jnp.arange(padded) < trials).reshape(nc_pad, chunk)
-    s0, s1, c0, c1, ac = jsums(keys3, tids3, valid2)
+    s0, s1, c0, c1, ac = jsums(base_key, starts, offs, limit)
 
     def moments(parts0, parts1):
         # per-chunk float32 partials -> float64 in global chunk order: the

@@ -47,12 +47,12 @@ def sample_delay_tables(process, seed: int, rounds: int, n: int,
     import jax.numpy as jnp
 
     from ..core.cluster import as_process
-    from ..core.montecarlo import _capture_rounds_fn
+    from ..core.montecarlo import _capture_rounds_fn, trial_keys
 
     process = as_process(process)
     process.check_rounds(rounds)
     capture = jax.jit(_capture_rounds_fn(process, n, r, rounds))
-    keys = jax.random.split(jax.random.PRNGKey(seed), 1)
+    keys = trial_keys(seed, 1)          # the engine's trial-0 CRN key
     tids = jnp.zeros((1,), jnp.int32)
     T1, T2 = capture(keys, tids)        # (rounds, 1, n, r) each
     return (np.asarray(T1[:, 0], np.float32),

@@ -149,12 +149,18 @@ def trial_mesh(devices: Sequence[jax.Device]) -> Mesh:
     return Mesh(np.asarray(devices, dtype=object), (TRIAL_AXIS,))
 
 
-def shard_trials(fn, devices: Sequence[jax.Device]):
+def shard_trials(fn, devices: Sequence[jax.Device], replicated: Tuple[int, ...] = ()):
     """Shard ``fn`` over a 1-D trial mesh: every argument and every output
     is split along its leading (chunk) axis across ``devices`` in contiguous
     blocks, each device runs ``fn`` on its block, and outputs come back
     concatenated in global chunk order.  ``fn`` must be collective-free —
     the Monte-Carlo scans qualify because trials are independent.
+
+    ``replicated`` names positional argnums that every device sees whole
+    (broadcast, not split): small runtime parameters like PRNG base keys,
+    per-chunk offset vectors, and the bucketed evaluators' gather plans.
+    Replicated arguments skip the leading-axis reshape and ride into the
+    vmap with ``in_axes=None`` under a fully-replicated ``P()`` sharding.
 
     Mechanism: the leading axis is reshaped to ``(d, per_device, ...)``,
     ``fn`` is ``vmap``-ed over the device axis, and the whole thing is
@@ -176,12 +182,25 @@ def shard_trials(fn, devices: Sequence[jax.Device]):
     d = len(devs)
     mesh = trial_mesh(devs)
     sh = NamedSharding(mesh, P(TRIAL_AXIS))
-    vfn = jax.jit(jax.vmap(fn), in_shardings=sh, out_shardings=sh)
+    rep = NamedSharding(mesh, P())
+    repl = frozenset(replicated)
+    # the vmapped/jitted callable is built lazily on first use: in_axes /
+    # in_shardings are per-argument, and the argument count is only known
+    # at call time (jit caches per pytree structure after that).
+    cache: dict = {}
 
     def sharded(*args):
-        parts = [jax.device_put(
+        nargs = len(args)
+        vfn = cache.get(nargs)
+        if vfn is None:
+            axes = tuple(None if i in repl else 0 for i in range(nargs))
+            shard_in = tuple(rep if i in repl else sh for i in range(nargs))
+            vfn = jax.jit(jax.vmap(fn, in_axes=axes),
+                          in_shardings=shard_in, out_shardings=sh)
+            cache[nargs] = vfn
+        parts = [jax.device_put(a, rep) if i in repl else jax.device_put(
             jnp.reshape(a, (d, a.shape[0] // d) + a.shape[1:]), sh)
-            for a in args]
+            for i, a in enumerate(args)]
         out = vfn(*parts)
         return jax.tree_util.tree_map(
             lambda x: jnp.reshape(x, (-1,) + x.shape[2:]), out)

@@ -1,0 +1,324 @@
+"""Streaming grid-sweep engine (repro.core.grid): CRN bit-exactness of
+``stream_grid`` vs the per-cell ``sweep``/``sweep_rounds`` path, one
+compile per shape bucket, the LRU executor cache, the versioned artifact,
+and the ``repro.launch.grid`` CLI.
+
+The multi-device legs need >= 4 devices; CI forces them on CPU with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (GridCell, GridResult, GridSpec, cache_stats,
+                        clear_cache, cyclic_to_matrix, lb_spec,
+                        scenario1, set_cache_capacity, staircase_to_matrix,
+                        stream_grid, sweep, sweep_rounds, to_spec,
+                        trial_keys)
+from repro.core import montecarlo as mc
+from repro.core.grid import _family_spec
+from repro.launch import grid as grid_cli
+
+multidev = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs 4 devices (XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+
+MODEL = scenario1()
+
+
+# ---------------------------------------------------------------------------
+# GridSpec enumeration
+# ---------------------------------------------------------------------------
+
+class TestGridSpec:
+    def test_cells_skip_infeasible_combinations(self):
+        gs = GridSpec(n=8, families=("cs", "ra", "pc", "pcmm"),
+                      loads=(1, 2, 8), messages=(None, 4),
+                      comm_eps=(0.0, 0.1), trials=100)
+        names = [c.name for c in gs.cells(MODEL)]
+        assert "ra/r8" in names and "ra/r2" not in names   # RA needs r == n
+        assert "cs/r1/m4" not in names                     # budget > load
+        assert "pc/r2" in names
+        assert not any(n_.startswith("pc/") and "m4" in n_ for n_ in names)
+        assert not any(n_.startswith("pc/") and "eps" in n_ for n_ in names)
+        assert "pcmm/r1" not in names                      # below 2n-1
+        assert len(names) == len(set(names))
+
+    def test_empty_grid_rejected(self):
+        gs = GridSpec(n=8, families=("pcmm",), loads=(1,), trials=10)
+        with pytest.raises(ValueError, match="empty"):
+            gs.cells(MODEL)
+        with pytest.raises(ValueError, match="unknown families"):
+            GridSpec(n=8, families=("nope",))
+
+    def test_json_round_trip(self):
+        gs = GridSpec(n=12, families=("ss", "lb"), loads=(2, 3),
+                      messages=(None, 2), comm_eps=(0.0, 0.01), ks=(None, 4),
+                      trials=777, seed=9, chunk=100)
+        assert GridSpec.from_json(gs.to_json()) == gs
+        with pytest.raises(ValueError, match="newer"):
+            GridSpec.from_json({"version": 999, "n": 4})
+
+    def test_cell_validation(self):
+        sp = to_spec("x", cyclic_to_matrix(4, 2))
+        with pytest.raises(ValueError, match="at least one spec"):
+            GridCell("empty", (), 4, MODEL)
+        with pytest.raises(ValueError, match="rounds cells"):
+            GridCell("half", (sp,), 4, MODEL, rounds=3)   # k missing
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness vs the per-cell path (the CRN contract)
+# ---------------------------------------------------------------------------
+
+def _assert_stream_matches_per_cell(cells, devices):
+    res = stream_grid(cells, devices=devices)
+    for c in cells:
+        got = res.cell(c.name)
+        if c.is_rounds:
+            ref = sweep_rounds(c.specs, c.model, c.n, rounds=c.rounds,
+                               k=c.k, trials=c.trials, seed=c.seed,
+                               chunk=c.chunk, deadline=c.deadline,
+                               deadline_policy=c.deadline_policy,
+                               devices=devices)
+            for sp in c.specs:
+                np.testing.assert_array_equal(got["per_round"][sp.name],
+                                              ref.per_round[sp.name])
+                np.testing.assert_array_equal(got["wallclock"][sp.name],
+                                              ref.wallclock[sp.name])
+                np.testing.assert_array_equal(
+                    got["wallclock_stderr"][sp.name],
+                    ref.wallclock_stderr[sp.name])
+                if c.deadline is not None:
+                    for key in ("realized_k", "missed", "stale", "khist"):
+                        np.testing.assert_array_equal(
+                            got["degradation"][sp.name][key],
+                            ref.degradation[sp.name][key])
+        else:
+            ref = sweep(c.specs, c.model, c.n, trials=c.trials, seed=c.seed,
+                        chunk=c.chunk, ks=c.ks, devices=devices)
+            for sp in c.specs:
+                np.testing.assert_array_equal(
+                    got["means"][sp.name], np.atleast_1d(ref.means[sp.name]))
+                np.testing.assert_array_equal(
+                    got["stderr"][sp.name],
+                    np.atleast_1d(ref.stderr[sp.name]))
+    return res
+
+
+def _random_cells(data, n):
+    """A random mixed cell set: dense/ragged TO schemes x message budgets x
+    comm_eps x all-k/single-k, plus optionally a rounds cell."""
+    cells = []
+    n_cells = data.draw(st.integers(2, 4), label="n_cells")
+    for i in range(n_cells):
+        r = data.draw(st.integers(2, n), label=f"r{i}")
+        m = data.draw(st.sampled_from([None, 1, 2]), label=f"m{i}")
+        eps = data.draw(st.sampled_from([0.0, 0.02]), label=f"eps{i}")
+        ragged = data.draw(st.booleans(), label=f"ragged{i}")
+        if ragged and r >= 2:
+            loads = [data.draw(st.integers(1, r), label=f"load{i}_{w}")
+                     for w in range(n)]
+            loads[0] = r               # keep the max load at r
+            sp = to_spec("s", cyclic_to_matrix(n, r), messages=m,
+                         loads=loads, comm_eps=eps)
+            ks = 1                     # ragged coverage: k=1 always finite
+        else:
+            sp = to_spec("s", staircase_to_matrix(n, r), messages=m,
+                         comm_eps=eps)
+            ks = data.draw(st.sampled_from([None, n // 2]), label=f"k{i}")
+        cells.append(GridCell(f"cell{i}", (sp, lb_spec(r, messages=m)), n,
+                              MODEL, trials=250, seed=i % 2, ks=ks))
+    if data.draw(st.booleans(), label="rounds_cell"):
+        deadline = data.draw(st.sampled_from([None, 3.0]), label="deadline")
+        cells.append(GridCell(
+            "rcell", (to_spec("s", cyclic_to_matrix(n, 2)),), n, MODEL,
+            trials=60, seed=1, rounds=2, k=2, deadline=deadline,
+            deadline_policy="wait" if deadline is None else "close_partial"))
+    return cells
+
+
+class TestBitExact:
+    @settings(deadline=None, max_examples=8)
+    @given(st.data())
+    def test_random_cell_set_matches_per_cell_single_device(self, data):
+        _assert_stream_matches_per_cell(_random_cells(data, n=5), devices=1)
+
+    @multidev
+    @settings(deadline=None, max_examples=4)
+    @given(st.data())
+    def test_random_cell_set_matches_per_cell_four_devices(self, data):
+        _assert_stream_matches_per_cell(_random_cells(data, n=5), devices=4)
+
+    @multidev
+    def test_stream_grid_device_invariant(self):
+        cells = GridSpec(n=6, families=("cs", "ss", "lb", "pc"),
+                         loads=(2, 3), messages=(None, 2),
+                         trials=400, seed=0).cells(MODEL)
+        r1 = stream_grid(cells, devices=1)
+        r4 = stream_grid(cells, devices=4)
+        for c in cells:
+            for sp in c.specs:
+                np.testing.assert_array_equal(
+                    r1.cell(c.name)["means"][sp.name],
+                    r4.cell(c.name)["means"][sp.name])
+                np.testing.assert_array_equal(
+                    r1.cell(c.name)["stderr"][sp.name],
+                    r4.cell(c.name)["stderr"][sp.name])
+
+    def test_fusion_groups_by_draw_coordinates(self):
+        # same (n, r_max, trials, seed): one fused dispatch; different
+        # seed: its own dispatch
+        sp = to_spec("x", cyclic_to_matrix(6, 2))
+        cells = [GridCell("a", (sp,), 6, MODEL, trials=200, seed=0),
+                 GridCell("b", (lb_spec(2),), 6, MODEL, trials=200, seed=0),
+                 GridCell("c", (sp,), 6, MODEL, trials=200, seed=1)]
+        res = stream_grid(cells)
+        assert res.meta["fused_dispatches"] == 2
+        ref = sweep([sp], MODEL, 6, trials=200, seed=1)
+        np.testing.assert_array_equal(res.cell("c")["means"]["x"],
+                                      ref.means["x"])
+
+    def test_duplicate_names_and_bad_pipeline_rejected(self):
+        sp = to_spec("x", cyclic_to_matrix(4, 2))
+        cell = GridCell("a", (sp,), 4, MODEL, trials=50)
+        with pytest.raises(ValueError, match="duplicate"):
+            stream_grid([cell, cell])
+        with pytest.raises(ValueError, match="pipeline"):
+            stream_grid([cell], pipeline=0)
+        with pytest.raises(ValueError, match="at least one"):
+            stream_grid([])
+
+
+# ---------------------------------------------------------------------------
+# executor bucketing: one compile per shape bucket, LRU bounds
+# ---------------------------------------------------------------------------
+
+class TestBucketedCache:
+    def test_one_compile_per_shape_bucket(self):
+        # 8 cells, 2 shape buckets (r_max 2 and 3) — exactly 2 retraces
+        cells = []
+        for i, (r, eps) in enumerate([(2, 0.0), (2, 0.1), (3, 0.0),
+                                      (3, 0.1)]):
+            for fam, build in (("cs", cyclic_to_matrix),
+                               ("ss", staircase_to_matrix)):
+                cells.append(GridCell(
+                    f"{fam}{i}", (to_spec(fam, build(6, r), comm_eps=eps),),
+                    6, MODEL, trials=150, seed=0))
+        clear_cache()
+        before = cache_stats()
+        res = stream_grid(cells)
+        after = cache_stats()
+        assert res.meta["buckets"] == 2
+        assert after["traces"] - before["traces"] <= res.meta["buckets"]
+        assert after["exec"]["misses"] - before["exec"]["misses"] == 2
+        # the whole grid again: pure cache hits, zero new traces
+        stream_grid(cells)
+        final = cache_stats()
+        assert final["traces"] == after["traces"]
+        assert final["exec"]["misses"] == after["exec"]["misses"]
+        assert final["exec"]["hits"] > after["exec"]["hits"]
+
+    def test_renamed_specs_share_the_bucket(self):
+        clear_cache()
+        C = cyclic_to_matrix(6, 2)
+        before = cache_stats()["traces"]
+        sweep([to_spec("alpha", C)], MODEL, 6, trials=100, seed=0)
+        sweep([to_spec("omega", C)], MODEL, 6, trials=100, seed=0)
+        sweep([to_spec("x", staircase_to_matrix(6, 2), comm_eps=0.3)],
+              MODEL, 6, trials=100, seed=0)
+        assert cache_stats()["traces"] - before == 1
+
+    def test_lru_capacity_bounds_and_evicts(self):
+        clear_cache()
+        set_cache_capacity(2)
+        try:
+            for r in (2, 3, 4):        # 3 distinct buckets, capacity 2
+                sweep([lb_spec(r)], MODEL, 6, trials=60, seed=0)
+            stats = cache_stats()["exec"]
+            assert stats["size"] <= 2
+            assert stats["evictions"] >= 1
+            assert stats["compile_s"] > 0.0
+            with pytest.raises(ValueError, match="capacity"):
+                set_cache_capacity(0)
+        finally:
+            set_cache_capacity(128)
+            clear_cache()
+
+    def test_trial_keys_twin(self):
+        # _padded_keys stays the host-side reference twin of the device-side
+        # fold_in derivation: same keys, pad repeats the last trial's key
+        keys = np.asarray(trial_keys(7, 5))
+        padded = np.asarray(mc._padded_keys(7, 5, 8))
+        assert np.array_equal(padded[:5], keys)
+        assert np.array_equal(padded[5:], np.broadcast_to(keys[-1], (3, 2)))
+
+
+# ---------------------------------------------------------------------------
+# artifact + CLI
+# ---------------------------------------------------------------------------
+
+class TestArtifact:
+    def test_result_round_trip(self, tmp_path):
+        cells = [
+            GridCell("sw", (to_spec("x", cyclic_to_matrix(5, 2)),), 5,
+                     MODEL, trials=120, seed=0),
+            GridCell("ro", (to_spec("x", cyclic_to_matrix(5, 2)),), 5,
+                     MODEL, trials=40, seed=0, rounds=2, k=3, deadline=3.0,
+                     deadline_policy="close_partial"),
+        ]
+        res = stream_grid(cells)
+        path = str(tmp_path / "grid.json")
+        res.save(path)
+        back = GridResult.load(path)
+        assert set(back.cells) == {"sw", "ro"}
+        np.testing.assert_array_equal(back.means("sw", "x"),
+                                      res.means("sw", "x"))
+        np.testing.assert_array_equal(
+            back.cell("ro")["degradation"]["x"]["khist"],
+            res.cell("ro")["degradation"]["x"]["khist"])
+        assert back.meta["cells"] == 2
+        assert back.cells_per_sec > 0
+
+    def test_load_rejects_foreign_and_newer(self, tmp_path):
+        p = str(tmp_path / "x.json")
+        with open(p, "w") as fh:
+            json.dump({"kind": "other"}, fh)
+        with pytest.raises(ValueError, match="not a grid-result"):
+            GridResult.load(p)
+        with open(p, "w") as fh:
+            json.dump({"kind": "grid-result", "version": 999, "cells": {}},
+                      fh)
+        with pytest.raises(ValueError, match="newer"):
+            GridResult.load(p)
+
+    def test_cli_writes_consumable_artifact(self, tmp_path, capsys):
+        out = str(tmp_path / "out" / "grid.json")
+        rc = grid_cli.main(["--n", "5", "--families", "cs", "lb",
+                            "--loads", "2", "--trials", "200",
+                            "--out", out])
+        assert rc == 0
+        res = GridResult.load(out)
+        assert res.meta["cells"] == 2
+        assert res.meta["model"] == "scenario1"
+        assert res.meta["spec"]["n"] == 5
+        # the artifact's stats are the engine's own (CRN contract)
+        ref = sweep([_family_spec("cs", 5, 2, None, 0.0, 0)], MODEL, 5,
+                    trials=200, seed=0)
+        np.testing.assert_array_equal(res.means("cs/r2", "cs"),
+                                      ref.means["cs"])
+        assert "cells/s" in capsys.readouterr().out
+
+    def test_cli_spec_file(self, tmp_path):
+        spec_path = str(tmp_path / "spec.json")
+        gs = GridSpec(n=4, families=("ss",), loads=(2,), trials=100, seed=2)
+        with open(spec_path, "w") as fh:
+            json.dump(gs.to_json(), fh)
+        out = str(tmp_path / "res.json")
+        assert grid_cli.main(["--spec", spec_path, "--out", out]) == 0
+        res = GridResult.load(out)
+        assert res.meta["spec"] == gs.to_json()
+        assert list(res.cells) == ["ss/r2"]

@@ -75,7 +75,8 @@ def test_engine_matches_independent_oracle():
     n, r, k, trials = 7, 3, 5, 300
     m = ShiftedExponentialDelays()
     C = cyclic_to_matrix(n, r)
-    keys = jax.random.split(jax.random.PRNGKey(11), trials)
+    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        jax.random.PRNGKey(11), jnp.arange(trials, dtype=jnp.int32))
     taus = []
     for i in range(trials):                       # deliberately unvectorized
         T1, T2 = m.sample(keys[i], 1, n, r)
@@ -210,20 +211,26 @@ def test_gather_plan_wide_slot_grid():
 # ------------------------------ misc engine ----------------------------------
 
 def test_common_random_numbers_pair_schemes():
-    """CS and SS evaluated in one sweep share draws: their gap estimator
-    has far lower variance than with independent draws (the CRN payoff)."""
-    n, r, k = 10, 5, 8
+    """CS and SS evaluated under one seed share delay draws: the
+    per-trial gap estimator has lower variance than with independent
+    draws (the CRN payoff).  Compared at the trial level — 800 paired
+    samples — so the check measures the true variance reduction rather
+    than a handful of noisy seed-level std estimates."""
+    n, r, k, trials = 10, 5, 8, 800
     m = scenario1()
-    cs, ss = cyclic_to_matrix(n, r), staircase_to_matrix(n, r)
-    gaps_paired, gaps_indep = [], []
-    for seed in range(8):
-        res = sweep([to_spec("cs", cs), to_spec("ss", ss)], m, n,
-                    trials=400, seed=seed)
-        gaps_paired.append(res.at_k("cs", k) - res.at_k("ss", k))
-        a = sweep([to_spec("cs", cs)], m, n, trials=400, seed=2 * seed + 100)
-        b = sweep([to_spec("ss", ss)], m, n, trials=400, seed=2 * seed + 101)
-        gaps_indep.append(a.at_k("cs", k) - b.at_k("ss", k))
-    assert np.std(gaps_paired) < np.std(gaps_indep)
+    cs_s = to_spec("cs", cyclic_to_matrix(n, r))
+    ss_s = to_spec("ss", staircase_to_matrix(n, r))
+    cs0 = np.asarray(completion_samples(cs_s, m, n, trials=trials,
+                                        seed=0, k=k)).ravel()
+    ss0 = np.asarray(completion_samples(ss_s, m, n, trials=trials,
+                                        seed=0, k=k)).ravel()
+    ss1 = np.asarray(completion_samples(ss_s, m, n, trials=trials,
+                                        seed=1, k=k)).ravel()
+    # shared draws -> strongly correlated completions
+    assert np.corrcoef(cs0, ss0)[0, 1] > 0.5
+    # ... so the paired gap has materially lower variance than the
+    # same estimator built from independent draws
+    assert np.std(cs0 - ss0) < 0.8 * np.std(cs0 - ss1)
 
 
 def test_task_arrival_samples_shape_and_consistency():

@@ -16,6 +16,7 @@ Covers the ISSUE-3 acceptance points:
       that beat the round deadline, monotonically in the deadline.
 """
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -83,8 +84,10 @@ def test_default_messages_bitmatch_explicit_full_budget():
 # ----------------- (b) every budget matches a numpy oracle -------------------
 
 def _oracle_draws(model, n, r, trials, seed):
-    """Per-trial draws under the engine's subkey convention."""
-    keys = jax.random.split(jax.random.PRNGKey(seed), trials)
+    """Per-trial draws under the engine's key convention: one key per
+    trial, folded in from the base key by global trial id."""
+    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        jax.random.PRNGKey(seed), jnp.arange(trials, dtype=jnp.int32))
     T1s, T2s = [], []
     for i in range(trials):
         T1, T2 = model.sample(keys[i], 1, n, r)

@@ -42,7 +42,9 @@ N6 = 6
 
 
 def _oracle_draws(model, n, r, trials, seed):
-    keys = jax.random.split(jax.random.PRNGKey(seed), trials)
+    # the engine's per-trial key convention: fold_in(base, trial id)
+    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        jax.random.PRNGKey(seed), jnp.arange(trials, dtype=jnp.int32))
     T1s, T2s = [], []
     for i in range(trials):
         T1, T2 = model.sample(keys[i], 1, n, r)

@@ -208,8 +208,9 @@ class TestShardedCache:
         clear_cache()
         calls = []
         orig = mc.shard_trials
-        monkeypatch.setattr(mc, "shard_trials",
-                            lambda fn, devs: calls.append(1) or orig(fn, devs))
+        monkeypatch.setattr(
+            mc, "shard_trials",
+            lambda fn, devs, **kw: calls.append(1) or orig(fn, devs, **kw))
         kw = dict(trials=100, seed=1, chunk=25, devices=4)
         sweep(_specs()[:2], scenario1(), N, **kw)
         n_first = len(calls)
