@@ -31,6 +31,12 @@ Compares the machine-readable ``BENCH_*.json`` results written by
   relative mean error must stay below ``fig13_live_rel_err_max`` (a
   sampling-noise bound — the live run is one realization — not a timing
   gate, so it is machine-independent).
+* ``planner`` — the racing planner must keep agreeing with the exhaustive
+  grid about the argmin operating point (``planner/agreement`` must report
+  ``agree=1`` — a machine-independent correctness gate) while saving at
+  least ``planner_trials_saved_min`` x in trial-evaluations (the
+  structural win: losing theory pruning or paired elimination collapses
+  the ratio toward 1).
 * ``grid`` — the streaming grid-sweep engine (``repro.core.grid``) must
   keep its structural wins: cells-per-second above ``--grid-tol`` x the
   ``grid_cells_per_sec`` baseline (machine-dependent low-water mark, like
@@ -60,7 +66,7 @@ Exit codes: 0 all checks pass, 1 regression detected, 2 missing inputs.
 
 Usage (CI)::
 
-    python -m benchmarks.run --quick --only mc_engine,grid,fig8,fig10,fig11,fig12,fig13 --out bench_out
+    python -m benchmarks.run --quick --only mc_engine,grid,planner,fig8,fig10,fig11,fig12,fig13 --out bench_out
     python -m benchmarks.regression_gate --results bench_out
 """
 from __future__ import annotations
@@ -140,13 +146,14 @@ def main(argv=None) -> None:
                          "the fig13 check (default: the baseline's "
                          "fig13_live_rel_err_max)")
     ap.add_argument("--only",
-                    default="mc_engine,grid,fig8,fig10,fig11,fig12,fig13",
+                    default="mc_engine,grid,planner,fig8,fig10,fig11,"
+                            "fig12,fig13",
                     help="comma-separated subset of checks to run; add "
                          "'scaling' on the multi-device leg")
     args = ap.parse_args(argv)
 
-    known = {"mc_engine", "grid", "fig8", "fig10", "fig11", "fig12",
-             "fig13", "scaling"}
+    known = {"mc_engine", "grid", "planner", "fig8", "fig10", "fig11",
+             "fig12", "fig13", "scaling"}
     only = {s.strip() for s in args.only.split(",") if s.strip()}
     unknown = sorted(only - known)
     if unknown:
@@ -209,6 +216,27 @@ def main(argv=None) -> None:
               f"buckets={buckets}, bitexact={spd.get('bitexact')}")
         if not ok:
             failures.append("grid streaming engine")
+
+    # --- racing planner vs exhaustive grid -----------------------------------
+    if "planner" in only:
+        pl = _load_bench(args.results, "planner")
+        _check_finite(pl)
+        race = _row(pl, "planner/race")["derived"]
+        agreement = _row(pl, "planner/agreement")["derived"]
+        saved = race.get("saved")
+        if not isinstance(saved, (int, float)):
+            print("regression_gate: planner/race row lacks a numeric "
+                  "'saved' derived field")
+            sys.exit(2)
+        floor = base["planner_trials_saved_min"]
+        agree = agreement.get("agree")
+        ok = agree == 1 and saved >= floor
+        print(f"{'PASS' if ok else 'FAIL'} planner racing: "
+              f"agree={agree} (planner={agreement.get('planner')}, "
+              f"exhaustive={agreement.get('exhaustive')}), trial-"
+              f"evaluations saved {saved}x (floor {floor}x)")
+        if not ok:
+            failures.append("planner racing")
 
     # --- device-sharded scaling (multi-device leg only) ----------------------
     if "scaling" in only:

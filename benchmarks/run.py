@@ -37,6 +37,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
          loop-of-sweeps baseline: cells/sec, one-compile-per-bucket, and
          CRN bit-exactness (non-zero exit on a retrace or stats mismatch);
          also writes the GRID_result.json artifact into --out
+  planner  racing planner vs the exhaustive grid on the same 64 cells:
+         must name the same argmin operating point (non-zero exit on
+         disagreement) while spending a fraction of the trial-evaluations
+         (the ``saved`` ratio, gated via ``planner_trials_saved_min``)
   table1 end-to-end DGD iteration per scheme incl. real PC/PCMM decode
   roofline  per-(mesh, arch, shape) terms from saved dry-run artifacts
 
@@ -86,7 +90,8 @@ def main(argv=None) -> None:
                    fig6_vs_workers, fig7_vs_target, fig8_convergence,
                    fig9_multimessage, fig10_load_rebalance,
                    fig11_trace_replay, fig12_faults, fig13_live,
-                   grid_stream, mc_engine, table1_e2e, roofline_report)
+                   grid_stream, mc_engine, planner, table1_e2e,
+                   roofline_report)
 
     jobs = {
         "fig3": lambda: fig3_delays.run(trials),
@@ -105,6 +110,7 @@ def main(argv=None) -> None:
         "mc_engine": lambda: mc_engine.run(trials),
         "grid": lambda: grid_stream.run(trials,
                                         out=args.out or "bench_out"),
+        "planner": lambda: planner.run(trials),
         "table1": table1_e2e.run,
         "roofline": roofline_report.run,
     }

@@ -33,9 +33,10 @@ from .montecarlo import (SchemeSpec, SweepResult, RoundsResult, to_spec,
                          sweep_rounds, completion_samples,
                          trajectory_samples, task_arrival_samples,
                          clear_cache, cache_stats, set_cache_capacity,
-                         trial_keys)
+                         trial_keys, ResumableSweep, resumable_sweep)
 from .grid import (GridCell, GridSpec, GridResult, stream_grid,
                    GRID_FORMAT_VERSION)
+from .planner import plan, PlanResult, PLAN_FORMAT_VERSION
 from .completion import (slot_arrival_times, message_arrival_times,
                          message_slot_layout, task_arrival_times,
                          completion_time, lower_bound_time,
@@ -46,7 +47,8 @@ from .theory import (theorem1_tail_from_H, theorem1_tail_mc, theorem1_mean_mc,
                      lower_bound_tail_mc, lower_bound_mean_mc,
                      theorem1_tail_r1_independent, sum_survival_grid,
                      multimessage_marginal_cdfs, multimessage_coded_tail,
-                     multimessage_coded_mean)
+                     multimessage_coded_mean, truncated_gaussian_pdf,
+                     delay_model_pdfs, operating_point_mean_lb)
 from .coded import (pc_threshold, pcmm_threshold, pc_encode, pc_decode,
                     pc_worker_compute, pcmm_encode, pcmm_decode,
                     pcmm_worker_compute, simulate_pc_completion,

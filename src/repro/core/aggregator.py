@@ -223,12 +223,23 @@ class StragglerAggregator:
         else:
             self.scheduler = None
         self.censored = bool(censored_feedback)
-        # static per-row message layout (closing-slot remap + overhead
-        # offsets + ragged masks); None when it is the identity
-        layout = message_slot_layout(
-            scheduling.loads_of_matrix(self.base_C), spec.r,
-            spec.n_messages, spec.comm_eps)
-        self._row_layout = None if row_layout_is_identity(layout) else layout
+        if rebalance:
+            # re-balanced loads are decided per round, so the message
+            # grouping cannot be a static row layout (the dense base
+            # would bake a full-load grouping in); the round function
+            # gathers the load-indexed closing-slot table instead.
+            self._row_layout = None
+            self._rb_remap = montecarlo._rebalance_remap_table(
+                spec.r, spec.n_messages)
+        else:
+            # static per-row message layout (closing-slot remap + overhead
+            # offsets + ragged masks); None when it is the identity
+            layout = message_slot_layout(
+                scheduling.loads_of_matrix(self.base_C), spec.r,
+                spec.n_messages, spec.comm_eps)
+            self._row_layout = (None if row_layout_is_identity(layout)
+                                else layout)
+            self._rb_remap = None
         if init_key is None:
             init_key = jax.random.PRNGKey(spec.seed)
         # trial id 0: a live training run is the single realization of a
@@ -266,6 +277,12 @@ class StragglerAggregator:
             l_row = loads_w[worker_of_row]
             s2 = jnp.where(jnp.arange(r)[None, :] < l_row[:, None], s2,
                            jnp.inf)
+            if self._rb_remap is not None:
+                # message budget under dynamic loads: gather each row's
+                # load-indexed closing-slot remap (same table the MC
+                # engine's rounds scan uses)
+                mm = jnp.take(jnp.asarray(self._rb_remap), l_row - 1, axis=0)
+                s2 = jnp.take_along_axis(s2, mm, axis=-1)
         w2, t_done = winner_mask_gather(self.base_C, self._plan, s2, n, k,
                                         deadline=self._dl_close)
         # per-task delivery by the (capped) round close — the reissue
@@ -366,7 +383,7 @@ class StragglerAggregator:
                              - int(self.process.start_round))
         m = self.spec.messages
         if self.rebalance:
-            spec = montecarlo.adaptive_spec("s", self.base_C,
+            spec = montecarlo.adaptive_spec("s", self.base_C, messages=m,
                                             loads=self.spec.loads,
                                             rebalance=True)
         elif self.scheduler is not None:

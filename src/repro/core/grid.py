@@ -38,6 +38,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import json
+import math
 import time
 from typing import Dict, Optional, Sequence, Tuple
 
@@ -286,6 +287,54 @@ class GridResult:
                                  f"pass scheme=")
             scheme = schemes[0]
         return c["means"][scheme]
+
+    def best_cell(self, metric: str = "mean", k: Optional[int] = None,
+                  exclude: Tuple[str, ...] = ("lb",),
+                  z: float = 2.0) -> dict:
+        """Argmin operating point of the grid at computation target ``k``
+        (defaults to each cell's ``ks``, else ``n``): the (cell, scheme)
+        pair with the smallest mean completion time over the sweep cells.
+
+        ``exclude`` drops schemes by name (default: the oracle ``lb``
+        bound, which would always win but is not schedulable).  Returns
+        ``{"cell", "scheme", "mean", "stderr", "ties"}`` where ``ties``
+        lists the runner-up (cell, scheme) pairs whose gap to the winner
+        is within ``z`` combined standard errors — the resolution limit
+        of the grid's trial budget.  Rounds cells are skipped (their
+        metric is a stream, not a scalar)."""
+        if metric != "mean":
+            raise ValueError(f"unknown metric {metric!r}; only 'mean'")
+        entries = []
+        for nm, c in self.cells.items():
+            if c.get("kind") != "sweep":
+                continue
+            fixed = set(c.get("fixed", ()))
+            for scheme, v in c["means"].items():
+                if scheme in exclude:
+                    continue
+                v = np.atleast_1d(np.asarray(v, np.float64))
+                se = np.atleast_1d(np.asarray(c["stderr"][scheme],
+                                              np.float64))
+                if v.shape[-1] == 1 or scheme in fixed:
+                    col = 0
+                else:
+                    kk = k if k is not None else (c.get("ks") or c["n"])
+                    if not 1 <= kk <= v.shape[-1]:
+                        raise ValueError(f"cell {nm!r} scheme {scheme!r}: "
+                                         f"need 1 <= k <= {v.shape[-1]}, "
+                                         f"got {kk}")
+                    col = int(kk) - 1
+                entries.append((nm, scheme, float(v[col]), float(se[col])))
+        if not entries:
+            raise ValueError("grid has no scorable sweep cells after "
+                             f"excluding {exclude}")
+        nm, scheme, mu, se = min(entries, key=lambda e: e[2])
+        ties = [{"cell": e[0], "scheme": e[1], "mean": e[2],
+                 "stderr": e[3]}
+                for e in entries if e[0] != nm or e[1] != scheme
+                if e[2] - mu <= z * math.hypot(se, e[3])]
+        return {"cell": nm, "scheme": scheme, "mean": mu, "stderr": se,
+                "ties": ties}
 
     @property
     def cells_per_sec(self) -> float:

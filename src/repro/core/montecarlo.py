@@ -141,6 +141,7 @@ __all__ = [
     "task_arrival_times_gather", "message_boundaries", "message_slot_map",
     "message_group_sizes", "sweep", "sweep_rounds",
     "completion_samples", "trajectory_samples", "task_arrival_samples",
+    "ResumableSweep", "resumable_sweep",
     "trial_keys", "clear_cache", "cache_stats", "set_cache_capacity",
 ]
 
@@ -385,6 +386,37 @@ def _slot_map_of(spec: SchemeSpec) -> Optional[np.ndarray]:
         nontrivial |= mi != l
         rows.append(row)
     return np.stack(rows) if nontrivial else None
+
+
+def _rebalance_remap(spec: SchemeSpec) -> Optional[np.ndarray]:
+    """Per-(load, slot) closing-slot table for rebalance specs with a
+    message budget.  A rebalanced worker's load is decided per round at
+    runtime, so its message grouping cannot be baked into a static plan
+    the way ``_slot_map_of`` does for fixed loads; instead row ``l - 1``
+    of this ``(cap, cap)`` table maps slot ``j < l`` to the closing slot
+    of ``j``'s message when ``l`` active slots are grouped into
+    ``min(messages, l)`` messages, and slots at or beyond the load keep
+    the identity (they are masked to +inf before the gather, and +inf
+    reads itself).  The rounds scan indexes the table by the realized
+    per-row load.  ``None`` when the budget is the identity for every
+    feasible load (``messages >= cap``, every slot its own message)."""
+    if not spec.rebalance:
+        return None
+    return _rebalance_remap_table(spec.load, spec.n_messages)
+
+
+def _rebalance_remap_table(cap: int, messages: int) -> Optional[np.ndarray]:
+    """The ``(cap, cap)`` load-indexed closing-slot table itself (see
+    ``_rebalance_remap``); shared with the live aggregator, whose round
+    function applies the same gather to its single realization."""
+    if messages >= cap:
+        return None
+    tab = np.empty((cap, cap), np.int64)
+    for l in range(1, cap + 1):
+        row = np.arange(cap)
+        row[:l] = message_slot_map(l, min(messages, l))
+        tab[l - 1] = row
+    return tab
 
 
 def _apply_slot_map(s: Array, mmap: np.ndarray) -> Array:
@@ -1254,9 +1286,6 @@ def _check_specs(specs: Sequence[SchemeSpec], n: int) -> Tuple[SchemeSpec, ...]:
                     f"{sp.name}: rebalance needs a slot-0 diagonal (every "
                     f"row's first task distinct, e.g. CS/SS) so any load "
                     f"vector keeps all tasks covered")
-            if sp.messages is not None:
-                raise ValueError(f"{sp.name}: rebalance supports per-slot "
-                                 f"messages only (messages=None)")
             if sp.comm_eps:
                 raise ValueError(f"{sp.name}: rebalance does not support "
                                  f"comm_eps yet")
@@ -1297,11 +1326,13 @@ def _scan_coords(trials: int, chunk: int, nc_pad: int):
     return starts, offs, jnp.int32(trials)
 
 
-def _dispatch_run(specs: Sequence[SchemeSpec], model, n: int, *, trials: int,
-                  seed: int, chunk: Optional[int], ks: Optional[int],
-                  want_samples: bool, devices=None) -> _Pending:
-    """Validate + launch one sweep without blocking on its results; the
-    returned ``_Pending`` resolves to ``_run``'s output."""
+def _validate_single_round(specs: Sequence[SchemeSpec], n: int,
+                           ks: Optional[int]) -> Tuple[SchemeSpec, ...]:
+    """Shared validation for the single-round entry points (``sweep``,
+    ``completion_samples``, ``ResumableSweep``): spec well-formedness, no
+    adaptive specs (those need a rounds axis), target-k range, and task
+    coverage (a ragged schedule that cannot deliver ``k`` distinct tasks
+    has an infinite completion time)."""
     specs = _check_specs(specs, n)
     for sp in specs:
         if sp.kind == "adaptive":
@@ -1323,6 +1354,15 @@ def _dispatch_run(specs: Sequence[SchemeSpec], model, n: int, *, trials: int,
                 f"{sp.name}: schedule covers only {covered} of {n} tasks, "
                 f"so all-k completion times are infinite beyond "
                 f"k={covered}; sweep with ks <= {covered} instead")
+    return specs
+
+
+def _dispatch_run(specs: Sequence[SchemeSpec], model, n: int, *, trials: int,
+                  seed: int, chunk: Optional[int], ks: Optional[int],
+                  want_samples: bool, devices=None) -> _Pending:
+    """Validate + launch one sweep without blocking on its results; the
+    returned ``_Pending`` resolves to ``_run``'s output."""
+    specs = _validate_single_round(specs, n, ks)
     r_max = max(sp.load for sp in specs)
     chunk = _normalize_chunk(trials, chunk)
     devs, nc_pad, padded = _shard_layout(trials, chunk, devices)
@@ -1466,6 +1506,188 @@ def sweep(specs: Sequence[SchemeSpec], model, n: int, *, trials: int = 20000,
                        fixed=fixed)
 
 
+# ----------------------------- resumable sweeps ------------------------------
+
+class ResumableSweep:
+    """A sweep whose trial axis can be *extended* instead of recomputed.
+
+    The engine's per-trial CRN key is a pure function of ``(seed, global
+    trial id)`` and its statistics are combined from per-chunk float32
+    partials in global chunk order (see ``_get_exec``), so a sweep paused
+    at ``t`` trials can continue by dispatching only the chunks covering
+    trials ``t..total-1`` with the *same* base key and chunk size: the new
+    chunk partials are bit-identical to the corresponding chunks of a
+    fresh run at ``total``, and accumulating them after the stored ones
+    (pad chunks contribute exact float64 zeros) reproduces a fresh
+    ``sweep(..., trials=total)`` bit-for-bit.  That is what lets the
+    racing planner (``repro.core.planner``) deepen only the cells whose
+    comparison is still close, at zero re-evaluation cost.
+
+    Contract and caveats:
+
+    * ``chunk`` is required — resumability is defined by the chunk
+      decomposition.  Every ``extend_trials`` total except the last must
+      land on a chunk boundary: a partial final chunk clamps its trailing
+      trial ids, so there is no representable continuation past it
+      (extending from a non-aligned total raises).
+    * ``narrow(names)`` drops schemes from subsequent extensions (the
+      planner eliminating cells).  The evaluator keeps the *original*
+      slot-grid width ``r_max``: delay draws have shape ``(n, r_max)``
+      and CRN pairing across the surviving schemes only holds if that
+      shape never changes.  ``_tree_sum`` pins the per-chunk reduction
+      order as a function of the chunk length alone, so narrowing the
+      spec stack keeps every survivor's partials bit-identical.
+    * With ``keep_samples=True`` each extension also dispatches the
+      samples scan and stores per-trial float32 statistics host-side
+      (memory ``O(done * L)`` per scheme).  The sums path still comes
+      from the sums scan: XLA's rounding of the squared statistics in
+      the fused sums program is not reproducible from the emitted
+      samples (measured: last-ulp differences in all-k mode), so
+      deriving partials host-side would break the bit-exactness
+      contract.
+    """
+
+    def __init__(self, specs: Sequence[SchemeSpec], model, n: int, *,
+                 seed: int = 0, chunk: int, ks: Optional[int] = None,
+                 devices=None, keep_samples: bool = False):
+        specs = _validate_single_round(specs, n, ks)
+        chunk = int(chunk)
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got chunk={chunk}")
+        self._specs = specs
+        self._model = model
+        self._n = int(n)
+        self._seed = int(seed)
+        self._chunk = chunk
+        self._ks = ks
+        self._devices = devices
+        self._keep = bool(keep_samples)
+        self._r_max = max(sp.load for sp in specs)
+        self._base_key = jax.random.PRNGKey(seed)
+        self._done = 0
+        self._p0: Dict[str, list] = {sp.name: [] for sp in specs}
+        self._p1: Dict[str, list] = {sp.name: [] for sp in specs}
+        self._samp: Dict[str, list] = (
+            {sp.name: [] for sp in specs} if self._keep else {})
+
+    @property
+    def trials(self) -> int:
+        """Trials evaluated so far."""
+        return self._done
+
+    @property
+    def chunk(self) -> int:
+        return self._chunk
+
+    @property
+    def spec_names(self) -> Tuple[str, ...]:
+        return tuple(sp.name for sp in self._specs)
+
+    def extend_trials(self, total: int) -> SweepResult:
+        """Continue the sweep to ``total`` trials and return the combined
+        result — bit-exact with ``sweep(..., trials=total)`` at the same
+        (seed, chunk)."""
+        total = int(total)
+        if total <= self._done:
+            raise ValueError(
+                f"extend_trials: total ({total}) must exceed the "
+                f"{self._done} trials already evaluated")
+        if self._done % self._chunk != 0:
+            raise ValueError(
+                f"extend_trials: current total ({self._done}) is not a "
+                f"multiple of chunk ({self._chunk}); a partial final chunk "
+                f"clamps its trailing trial ids, so the sweep cannot be "
+                f"extended past it (keep every total but the last "
+                f"chunk-aligned)")
+        add = total - self._done
+        nc = -(-add // self._chunk)
+        devs = trial_devices(self._devices)
+        d_eff = min(len(devs), nc)
+        nc_pad = -(-nc // d_eff) * d_eff
+        sig, params, slots = _eval_layout(self._specs, self._n, self._r_max,
+                                          self._ks)
+        jsums, jsamples = _get_exec(sig, self._model, devs[:d_eff])
+        first = self._done // self._chunk
+        starts = ((jnp.arange(nc_pad, dtype=jnp.int32) + jnp.int32(first))
+                  * jnp.int32(self._chunk))
+        offs = jnp.arange(self._chunk, dtype=jnp.int32)
+        limit = jnp.int32(total)
+        pj = {k2: jnp.asarray(v) for k2, v in params.items()}
+        p0, p1 = jsums(self._base_key, starts, offs, limit, pj)
+        ys = (jsamples(self._base_key, starts, offs, limit, pj)
+              if self._keep else None)
+        for name, (g, i) in slots.items():
+            self._p0[name].append(np.asarray(p0[g], np.float32)[:, i, :])
+            self._p1[name].append(np.asarray(p1[g], np.float32)[:, i, :])
+            if ys is not None:
+                v = ys[g]                      # (nc_pad, chunk, S, L)
+                flat = v[:, :, i, :].reshape(nc_pad * self._chunk,
+                                             v.shape[-1])
+                self._samp[name].append(np.asarray(flat[:add], np.float32))
+        self._done = total
+        return self.result()
+
+    def result(self) -> SweepResult:
+        """Combined result over all trials evaluated so far (same float64
+        host combine as ``sweep``, in global chunk order)."""
+        if self._done == 0:
+            raise ValueError("no trials evaluated yet; call extend_trials")
+        t = self._done
+        means: Dict[str, np.ndarray] = {}
+        stderr: Dict[str, np.ndarray] = {}
+        for sp in self._specs:
+            s0 = np.concatenate(self._p0[sp.name], axis=0).astype(np.float64)
+            s1 = np.concatenate(self._p1[sp.name], axis=0).astype(np.float64)
+            mu = s0.sum(axis=0) / t
+            var = np.maximum(s1.sum(axis=0) / t - mu * mu, 0.0)
+            means[sp.name] = mu
+            stderr[sp.name] = np.sqrt(var / t)
+        fixed = frozenset(sp.name for sp in self._specs
+                          if sp.kind in ("pc", "pcmm"))
+        return SweepResult(means=means, stderr=stderr, trials=t, n=self._n,
+                           ks=self._ks, fixed=fixed)
+
+    def samples(self) -> Dict[str, np.ndarray]:
+        """Per-trial statistics ``{name: (trials, L)}`` accumulated so far
+        (CRN-paired across schemes: row ``t`` of every scheme saw the same
+        delay draws).  Requires ``keep_samples=True``."""
+        if not self._keep:
+            raise ValueError("per-trial samples were not kept; construct "
+                             "with keep_samples=True")
+        return {sp.name: np.concatenate(self._samp[sp.name], axis=0)
+                for sp in self._specs}
+
+    def narrow(self, names: Sequence[str]) -> None:
+        """Drop every scheme not in ``names`` from subsequent extensions
+        (their accumulated state is freed).  The evaluator keeps the
+        original ``r_max`` so the survivors' draw coordinates — and hence
+        their partials — are unchanged."""
+        keep = set(names)
+        have = {sp.name for sp in self._specs}
+        unknown = sorted(keep - have)
+        if unknown:
+            raise ValueError(f"narrow: unknown scheme(s) {unknown}; have "
+                             f"{sorted(have)}")
+        if not keep:
+            raise ValueError("narrow: need at least one surviving scheme")
+        self._specs = tuple(sp for sp in self._specs if sp.name in keep)
+        for d in (self._p0, self._p1, self._samp):
+            for nm in list(d):
+                if nm not in keep:
+                    del d[nm]
+
+
+def resumable_sweep(specs: Sequence[SchemeSpec], model, n: int, *,
+                    seed: int = 0, chunk: int, ks: Optional[int] = None,
+                    devices=None, keep_samples: bool = False
+                    ) -> ResumableSweep:
+    """Construct a ``ResumableSweep`` (see its docstring): a sweep whose
+    trial axis extends incrementally via ``extend_trials``, bit-exact with
+    a fresh ``sweep`` at the combined trial count under CRN."""
+    return ResumableSweep(specs, model, n, seed=seed, chunk=chunk, ks=ks,
+                          devices=devices, keep_samples=keep_samples)
+
+
 def completion_samples(spec: SchemeSpec, model, n: int, *, trials: int = 10000,
                        seed: int = 0, chunk: Optional[int] = None,
                        k: Optional[int] = None, record_trace: bool = False,
@@ -1587,9 +1809,18 @@ def _build_rounds_fn(specs: Tuple[SchemeSpec, ...], process, n: int,
                 (by < kf).astype(jnp.float32))
     ad_mats = tuple(sp.matrix() for sp in ad_specs)
     # rebalance specs mask slots dynamically, so their plan must keep every
-    # slot of the dense base; static ragged specs bake their masks in.
-    ad_plans = tuple(_plan_of(sp, n, r_max) for sp in ad_specs)
-    ad_mmaps = tuple(_slot_map_of(sp) for sp in ad_specs)
+    # slot of the dense base (an identity plan — a static slot map would
+    # bake the *initial* budget's message grouping into every round);
+    # static ragged specs bake their masks in.
+    ad_plans = tuple(task_gather_plan(sp.matrix(), n, r_max)
+                     if sp.rebalance else _plan_of(sp, n, r_max)
+                     for sp in ad_specs)
+    ad_mmaps = tuple(None if sp.rebalance else _slot_map_of(sp)
+                     for sp in ad_specs)
+    # rebalance x message-budget composition: the closing-slot remap is a
+    # runtime gather indexed by each row's realized load (see
+    # ``_rebalance_remap``).
+    ad_remap = tuple(_rebalance_remap(sp) for sp in ad_specs)
     # static per-row loads for ragged bases (rows carry their loads through
     # the re-permutation); None for dense bases (no masking needed).
     ad_lrow = tuple(None if sp.loads is None or sp.rebalance
@@ -1623,6 +1854,12 @@ def _build_rounds_fn(specs: Tuple[SchemeSpec, ...], process, n: int,
             l_row = jnp.take_along_axis(loads_w, w_of_row, axis=-1)
             s2 = jnp.where(jnp.arange(s2.shape[-1])[None, None, :]
                            < l_row[..., None], s2, INF)
+            if ad_remap[i] is not None:
+                # multi-message budget: slot j's result rides its message's
+                # closing slot, whose position depends on the row's
+                # realized load — gather the per-load remap row.
+                mm = jnp.take(jnp.asarray(ad_remap[i]), l_row - 1, axis=0)
+                s2 = jnp.take_along_axis(s2, mm, axis=-1)
         tau = task_arrival_times_gather(plan, s2)
         return w_of_row, loads_w, _smallest(tau, ks)[..., -1:], tau
 
@@ -1647,6 +1884,11 @@ def _build_rounds_fn(specs: Tuple[SchemeSpec, ...], process, n: int,
             mm = jnp.take(jnp.asarray(mmap), row_of_worker, axis=0)
             arr_w = jnp.take_along_axis(s_w, mm, axis=-1)
         if loads_w is not None:                       # rebalance: dynamic
+            if ad_remap[i] is not None:
+                # each worker groups its own realized load into messages:
+                # remap to closing-slot arrivals before masking.
+                mm = jnp.take(jnp.asarray(ad_remap[i]), loads_w - 1, axis=0)
+                arr_w = jnp.take_along_axis(arr_w, mm, axis=-1)
             act = jnp.arange(r_sp)[None, None, :] < loads_w[..., None]
             arr_w = jnp.where(act, arr_w, INF)
         elif ad_lrow[i] is not None:                  # static ragged rows

@@ -221,8 +221,6 @@ class RoundConfig:
         if self.rebalance and self.loads is None:
             raise ValueError("rebalance needs loads as the initial budget "
                              "below the cap r")
-        if self.rebalance and self.messages is not None:
-            raise ValueError("rebalance supports per-slot messages only")
         if self.rebalance and self.comm_eps:
             raise ValueError("rebalance does not support comm_eps yet")
         if self.adaptive and self.comm_eps:

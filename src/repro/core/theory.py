@@ -59,6 +59,7 @@ __all__ = [
     "sum_survival_grid", "theorem1_tail_r1_independent",
     "multimessage_marginal_cdfs", "multimessage_coded_tail",
     "multimessage_coded_mean",
+    "truncated_gaussian_pdf", "delay_model_pdfs", "operating_point_mean_lb",
 ]
 
 
@@ -283,11 +284,24 @@ def multimessage_coded_tail(F: np.ndarray, group_sizes: Sequence[int],
     return poly.sum(axis=0)           # Pr{units < threshold}
 
 
+def _shift_message_cdfs(t: np.ndarray, F: np.ndarray,
+                        comm_eps: float) -> np.ndarray:
+    """Fold the per-message protocol overhead into the arrival CDFs:
+    message ``l`` lands ``(l + 1) * comm_eps`` late (the same static
+    offset convention as ``montecarlo._offsets_flat_of``), i.e. its CDF
+    shifts right by that amount on the grid."""
+    if not comm_eps:
+        return F
+    return np.stack([np.interp(t - (l + 1) * comm_eps, t, F[l], left=0.0)
+                     for l in range(F.shape[0])])
+
+
 def multimessage_coded_mean(n: int, r: int, messages: int,
                             pdf1: Callable[[np.ndarray], np.ndarray],
                             pdf2: Callable[[np.ndarray], np.ndarray], *,
                             tmax: float, npts: int = 2048,
-                            threshold: int | None = None) -> float:
+                            threshold: int | None = None,
+                            comm_eps: float = 0.0) -> float:
     """Average completion time of the multi-message coded scheme with
     ``messages`` messages per worker under i.i.d. per-slot compute delays
     (``pdf1``), per-message communication delays (``pdf2``), and FIFO
@@ -299,7 +313,80 @@ def multimessage_coded_mean(n: int, r: int, messages: int,
     workers, since units then arrive in lumps of ``r``.
     """
     t, F = multimessage_marginal_cdfs(pdf1, pdf2, r, messages, tmax, npts)
+    F = _shift_message_cdfs(t, F, comm_eps)
     gs = montecarlo.message_group_sizes(r, messages)
     th = 2 * n - 1 if threshold is None else int(threshold)
     tail = multimessage_coded_tail(F, gs, n, th)
+    return float(np.trapezoid(np.clip(tail, 0.0, 1.0), t))
+
+
+# -------- planner dominance guides (repro.core.planner) ----------------------
+
+def truncated_gaussian_pdf(mu: float, sigma: float, a: float,
+                           b: float | None = None
+                           ) -> Callable[[np.ndarray], np.ndarray]:
+    """Density of ``N(mu, sigma^2)`` truncated to ``[mu - a, mu + b]``
+    (``b`` defaults to ``a``, the paper's symmetric truncation) — the
+    closed-form marginal of ``repro.core.delays.TruncatedGaussianDelays``
+    with scalar mean and ``rho == 0``."""
+    b = a if b is None else b
+    lo, hi = mu - a, mu + b
+    sq2 = math.sqrt(2.0)
+    Z = 0.5 * (math.erf((hi - mu) / (sigma * sq2))
+               - math.erf((lo - mu) / (sigma * sq2)))
+    norm = sigma * math.sqrt(2.0 * math.pi) * Z
+
+    def pdf(t: np.ndarray) -> np.ndarray:
+        t = np.asarray(t, np.float64)
+        z = (t - mu) / sigma
+        d = np.exp(-0.5 * z * z) / norm
+        return np.where((t >= lo) & (t <= hi), d, 0.0)
+
+    return pdf
+
+
+def delay_model_pdfs(model):
+    """``(pdf1, pdf2, sup1, sup2)`` — closed-form per-slot compute and
+    per-message communication densities plus their supports' upper ends —
+    for models whose marginals are analytically known: currently
+    ``TruncatedGaussianDelays`` with scalar means and ``rho == 0`` (the
+    paper's scenario 1 calibration).  ``None`` otherwise (per-worker mean
+    vectors or correlated slots have no shared i.i.d. marginal); the
+    planner then skips its theory-pruning stage and races every cell."""
+    from .delays import TruncatedGaussianDelays
+    if not isinstance(model, TruncatedGaussianDelays) or model.rho:
+        return None
+    if not (np.isscalar(model.mu1) and np.isscalar(model.mu2)):
+        return None
+    b1 = model.a1 if model.b1 is None else model.b1
+    b2 = model.a2 if model.b2 is None else model.b2
+    pdf1 = truncated_gaussian_pdf(float(model.mu1), model.sigma1,
+                                  model.a1, b1)
+    pdf2 = truncated_gaussian_pdf(float(model.mu2), model.sigma2,
+                                  model.a2, b2)
+    return pdf1, pdf2, float(model.mu1) + b1, float(model.mu2) + b2
+
+
+def operating_point_mean_lb(n: int, r: int, k: int,
+                            pdf1: Callable[[np.ndarray], np.ndarray],
+                            pdf2: Callable[[np.ndarray], np.ndarray], *,
+                            messages: int | None = None,
+                            comm_eps: float = 0.0, tmax: float,
+                            npts: int = 1024) -> float:
+    """Closed-form guide for the oracle lower bound (eq. 46) at one
+    operating point: the mean time until ``k`` slot results arrived,
+    counting every one of the ``n * r`` slots' arrivals grouped into
+    ``min(messages, r)`` messages per worker (message ``l`` shifted by the
+    ``(l + 1) * comm_eps`` protocol overhead).  Distinctness of the
+    delivered tasks is ignored — exactly the engine's ``lb_spec``
+    semantics — so no schedule at ``(r, messages, comm_eps)`` can beat it.
+    Like ``multimessage_coded_tail`` this assumes in-order message
+    delivery within a worker, so it is a *guide* (tight at the paper's
+    calibrations, approximate when communication dispersion dominates):
+    the planner prunes on it only with a slack factor."""
+    m_eff = r if messages is None else int(min(messages, r))
+    t, F = multimessage_marginal_cdfs(pdf1, pdf2, r, m_eff, tmax, npts)
+    F = _shift_message_cdfs(t, F, comm_eps)
+    gs = montecarlo.message_group_sizes(r, m_eff)
+    tail = multimessage_coded_tail(F, gs, n, int(k))
     return float(np.trapezoid(np.clip(tail, 0.0, 1.0), t))

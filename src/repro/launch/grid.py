@@ -13,9 +13,11 @@ the ``GridSpec.to_json`` format) or inline axes:
 
 ``--devices N`` shards the trial axis over the first N local devices (the
 usual forced-host-mesh ``XLA_FLAGS=--xla_force_host_platform_device_count``
-applies); ``--pipeline`` sets how many fused dispatches stay in flight
-(2 = double buffering).  The artifact is consumable by ``GridResult.load``
-and is the interchange format for the planned cluster planner (ROADMAP).
+applies); ``--window`` sets how many fused dispatches stay in flight
+(2 = double buffering; ``--pipeline`` is a compatibility alias).  The
+artifact is consumable by ``GridResult.load`` and feeds the racing
+planner (``python -m repro.launch.plan`` finds the same winner without
+streaming the whole grid).
 """
 from __future__ import annotations
 
@@ -70,9 +72,14 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--model", default="scenario1", choices=list(MODELS))
     ap.add_argument("--devices", type=int, default=None,
                     help="shard trials over the first N local devices")
-    ap.add_argument("--pipeline", type=int, default=2,
-                    help="fused dispatches kept in flight (2 = double "
-                         "buffering)")
+    ap.add_argument("--window", "--pipeline", dest="window", type=int,
+                    default=2,
+                    help="streaming window: fused dispatches kept in "
+                         "flight (2 = double buffering; --pipeline is an "
+                         "alias)")
+    ap.add_argument("--k", type=int, default=None,
+                    help="computation target for the winner report "
+                         "(defaults to each cell's ks, else n)")
     ap.add_argument("--out", default="out/grid_result.json",
                     help="artifact path (directories are created)")
     return ap
@@ -94,9 +101,10 @@ def main(argv=None) -> int:
     print(f"grid: {len(cells)} cells (n={gs.n}, trials={gs.trials:,}/cell, "
           f"model={args.model})", flush=True)
 
-    res = stream_grid(cells, devices=args.devices, pipeline=args.pipeline)
+    res = stream_grid(cells, devices=args.devices, pipeline=args.window)
     res.meta["model"] = args.model
     res.meta["spec"] = gs.to_json()
+    res.meta["window"] = args.window
     res.meta["cache"] = cache_stats()
 
     out_dir = os.path.dirname(args.out)
@@ -108,7 +116,15 @@ def main(argv=None) -> int:
     print(f"done: {m['cells']} cells in {m['seconds']:.2f}s "
           f"({m['cells_per_sec']:.2f} cells/s), "
           f"{m['fused_dispatches']} fused dispatches, "
-          f"{m['buckets']} shape bucket(s)")
+          f"{m['buckets']} shape bucket(s), window {args.window}")
+    try:
+        best = res.best_cell(k=args.k)
+        tie = f", {len(best['ties'])} tie(s) within 2 sigma" \
+            if best["ties"] else ""
+        print(f"best: {best['cell']} mean {best['mean']:.6g} "
+              f"+- {best['stderr']:.2g}{tie}")
+    except ValueError:
+        pass        # rounds-only or lb-only grids have no scalar winner
     print(f"artifact: {args.out}")
     return 0
 
